@@ -1,0 +1,178 @@
+"""Paper reproduction benchmarks: Tables 3/4/5 + Figs 7/8/9.
+
+Each function reproduces one table/figure of the paper on stat-matched
+dataset clones (see repro.data.datasets), at matched interaction counts per
+algorithm, and returns a JSON-serializable record.  ``benchmarks.run``
+invokes all of them and emits the CSV + results/paper_benchmarks.json that
+EXPERIMENTS.md §Reproduction is generated from.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import club, dccb, distclub
+from repro.core.types import BanditHyper
+from repro.data import datasets
+
+from .common import emit, save_json, timed
+
+# CI-scale interaction budgets per dataset clone (paper counts in Table 1;
+# single-core container -> scaled, ratios are the deliverable)
+BUDGETS = {
+    "movielens": 16_000,
+    "lastfm": 12_000,
+    "delicious": 12_000,
+    "yahoo": 16_000,
+    "synthetic-small": 48_000,
+}
+DCCB_L = 16
+
+
+def _hyper(spec):
+    return BanditHyper(alpha=0.03, beta=2.0, gamma=1.6, sigma=8,
+                       max_rounds=16, n_candidates=spec.n_candidates)
+
+
+def _epochs(spec, T):
+    per_epoch = spec.n_users * 2 * 8        # sigma=8, both stages
+    return max(1, T // per_epoch)
+
+
+def run_all_datasets():
+    """Tables 3/4/5 + cluster-rate + regret curves in one sweep."""
+    rows = {}
+    for name, budget in BUDGETS.items():
+        spec = datasets.PAPER_DATASETS[name]
+        ops, _ = datasets.make_env(spec, seed=1)
+        hyper = _hyper(spec)
+        key = jax.random.PRNGKey(7)
+        n_ep = _epochs(spec, budget)
+        dccb_ep = max(1, budget // (spec.n_users * DCCB_L))
+
+        # --- DistCLUB (jit warm-up excluded via repeats on epochs) -------
+        t_dc, (st_dc, m_dc, clu_dc) = timed(
+            distclub.run, ops, key, hyper, n_ep, spec.d)
+        # --- DCCB --------------------------------------------------------
+        t_db, (st_db, m_db, clu_db) = timed(
+            dccb.run, ops, key, hyper, dccb_ep, spec.d, DCCB_L)
+        # --- CLUB (sequential; matched budget would take hours on one
+        #     core — run a fixed slice and report per-interaction time) ---
+        t_cl_T = min(2048, budget)
+        t_cl, (st_cl, m_cl) = timed(
+            club.run, ops, key, hyper, t_cl_T, spec.d)
+
+        T_dc = int(m_dc.interactions.sum())
+        T_db = int(m_db.interactions.sum())
+
+        def ratio(m):
+            return float(m.reward.sum()) / max(float(m.rand_reward.sum()), 1e-9)
+
+        rows[name] = {
+            "interactions": {"distclub": T_dc, "dccb": T_db, "club": t_cl_T},
+            # per-interaction wall time (ratios = Table 3 analogue)
+            "us_per_interaction": {
+                "distclub": 1e6 * t_dc / T_dc,
+                "dccb": 1e6 * t_db / T_db,
+                "club": 1e6 * t_cl / t_cl_T,
+            },
+            # Table 4 analogue: bytes shipped per interaction
+            "comm_bytes_per_interaction": {
+                "distclub": float(st_dc.comm_bytes) / T_dc,
+                "dccb": float(st_db.comm_bytes) / T_db,
+            },
+            # Table 5 / Fig 8 analogue: reward normalized by random policy
+            "reward_over_random": {
+                "distclub": ratio(m_dc),
+                "dccb": ratio(m_db),
+                "club": ratio(m_cl),
+            },
+            # Fig 9: cumulative regret per interaction (lower better)
+            "regret_per_interaction": {
+                "distclub": float(m_dc.regret.sum()) / T_dc,
+                "dccb": float(m_db.regret.sum()) / T_db,
+                "club": float(m_cl.regret.sum()) / t_cl_T,
+            },
+            # Fig 7: cluster count after each stage-2 / gossip round
+            "cluster_curve": {
+                "distclub": np.asarray(clu_dc).tolist(),
+                "dccb": np.asarray(clu_db).tolist(),
+            },
+        }
+        r = rows[name]
+        emit(f"table3_speed_{name}_distclub",
+             r["us_per_interaction"]["distclub"],
+             f"dccb={r['us_per_interaction']['dccb']:.1f};"
+             f"club={r['us_per_interaction']['club']:.1f}")
+        emit(f"table4_comm_{name}",
+             r["comm_bytes_per_interaction"]["distclub"],
+             f"dccb={r['comm_bytes_per_interaction']['dccb']:.1f}")
+        emit(f"table5_reward_{name}",
+             1e6 * r["reward_over_random"]["distclub"],
+             f"dccb={r['reward_over_random']['dccb']:.3f};"
+             f"club={r['reward_over_random']['club']:.3f}")
+
+    # paper-parameter analytic Table 4 (full interaction counts, L=5000):
+    analytic = {}
+    for name, spec in datasets.PAPER_DATASETS.items():
+        if name.startswith("synthetic-"):
+            continue
+        T, n, d = spec.n_interactions, spec.n_users, spec.d
+        L = 5000
+        rounds_dccb = max(1, T // (n * L)) if T > n else 1
+        # every user pulls buffer+active per gossip round
+        dccb_bytes = max(rounds_dccb, 1) * n * (L + 1) * (d * d + d) * 4
+        # DistCLUB: stage-2 every ~2*sigma rounds/user with sigma=2500
+        stages = max(1, T // (n * 2 * 2500))
+        dclub_bytes = stages * 2 * n * (d * d + d) * 4
+        analytic[name] = {"dccb_GB": dccb_bytes / 1e9,
+                          "distclub_MB": dclub_bytes / 1e6}
+    return {"measured": rows, "table4_paper_scale_analytic": analytic}
+
+
+def main():
+    out = run_all_datasets()
+    save_json("paper_benchmarks", out)
+
+    # headline geo-means (paper: 8.87x speedup, 14.5% reward gain).
+    # Wall-clock on this single core only sees the compute-side difference;
+    # the paper's speedup is dominated by NETWORK time, so we also report a
+    # modeled cluster step time = measured compute + comm_bytes / 10 Gbps
+    # (the paper's EC2 fabric, 1.25 GB/s) — the apples-to-apples analogue.
+    import math
+    NET = 1.25e9
+    speed, modeled, reward = [], [], []
+    for name, r in out["measured"].items():
+        speed.append(r["us_per_interaction"]["dccb"]
+                     / r["us_per_interaction"]["distclub"])
+        t_dc = (r["us_per_interaction"]["distclub"] / 1e6
+                + r["comm_bytes_per_interaction"]["distclub"] / NET)
+        t_db = (r["us_per_interaction"]["dccb"] / 1e6
+                + r["comm_bytes_per_interaction"]["dccb"] / NET)
+        # paper buffer length is 5000, not the CI-scale 16: scale the DCCB
+        # comm term accordingly for the paper-parameter model
+        t_db_paper = (r["us_per_interaction"]["dccb"] / 1e6
+                      + r["comm_bytes_per_interaction"]["dccb"]
+                      * (5001 / (DCCB_L + 1)) / NET)
+        modeled.append(t_db_paper / t_dc)
+        reward.append(r["reward_over_random"]["distclub"]
+                      / max(r["reward_over_random"]["dccb"], 1e-9))
+    gm = lambda xs: math.exp(sum(math.log(max(x, 1e-9)) for x in xs) / len(xs))
+    emit("headline_speedup_vs_dccb_compute_only", gm(speed) * 1e6,
+         f"single-core wall clock, ours={gm(speed):.2f}x")
+    emit("headline_speedup_vs_dccb_modeled_10gbps", gm(modeled) * 1e6,
+         f"paper=8.87x geo-mean, ours={gm(modeled):.2f}x (L=5000)")
+    emit("headline_reward_vs_dccb", gm(reward) * 1e6,
+         f"paper=+14.5%, ours={100 * (gm(reward) - 1):.1f}%")
+    out["headline"] = {
+        "speedup_compute_only": gm(speed),
+        "speedup_modeled_10gbps_L5000": gm(modeled),
+        "reward_gain": gm(reward) - 1,
+    }
+    save_json("paper_benchmarks", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Shared benchmark plumbing.
+
+Scaling note (recorded in EXPERIMENTS.md): the paper's Table 3 runs 80k-4M
+interactions on 64 EC2 cores; this container is ONE CPU core, so each
+dataset clone runs a proportionally reduced interaction budget at the
+paper's user counts and feature dims.  All comparisons are at MATCHED
+interaction counts across algorithms, so ratios (speedup, reward ratio,
+comm volume) are the meaningful outputs, not absolute seconds.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
+RESULTS.mkdir(parents=True, exist_ok=True)
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    """(wall seconds of best repeat, result). Blocks on jax async."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_json(name: str, payload):
+    (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=1))

@@ -1,0 +1,20 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV; writes results/*.json consumed by
+EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import bench_kernels
+    bench_kernels.main()
+    from . import bench_paper
+    bench_paper.main()
+    from . import bench_scaling
+    bench_scaling.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Train a ~small qwen3-family LM for a few hundred steps with
+checkpoint/resume — the end-to-end training driver exercised on CPU.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import subprocess
+import sys
+
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.train", "--arch", "qwen3-4b",
+     "--reduce", "--steps", "30", "--batch", "4", "--seq", "64",
+     "--ckpt-every", "10", "--log-every", "5"],
+    check=True,
+)
+print("\n-- simulating failure + resume (same command continues) --")
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.train", "--arch", "qwen3-4b",
+     "--reduce", "--steps", "40", "--batch", "4", "--seq", "64",
+     "--ckpt-every", "10", "--log-every", "5"],
+    check=True,
+)

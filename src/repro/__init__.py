@@ -1,0 +1,3 @@
+"""repro: DistCLUB (Fast Distributed Bandits for Online Recommendation
+Systems) as a production-grade JAX/TPU framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,44 @@
+"""dcn-v2 [arXiv:2008.13535; paper].
+
+13 dense + 26 sparse fields (Criteo layout), embed_dim=16, 3 cross layers,
+deep tower 1024-1024-512, parallel combination.  Per-field vocab 2^20
+(hashed), tables row-sharded.  ``retrieval_cand`` for a ranker = bulk
+scoring of 10^6 candidate rows for one query context.
+"""
+import jax.numpy as jnp
+
+from ..models.recsys.dcn_v2 import DCNConfig
+from .base import SDS, ArchSpec, ShapeCell, register
+from .recsys_shapes import BULK_B, P99_B, TRAIN_B, N_CAND_RETR
+
+CONFIG = DCNConfig(
+    name="dcn-v2", n_dense=13, n_sparse=26, vocab_per_field=1 << 20,
+    embed_dim=16, n_cross_layers=3, mlp_dims=(1024, 1024, 512),
+)
+
+
+def _fwd(batch, with_labels):
+    def make(cfg):
+        d = {
+            "dense_feats": SDS((batch, cfg.n_dense), jnp.float32),
+            "sparse_ids": SDS((batch, cfg.n_sparse), jnp.int32),
+        }
+        if with_labels:
+            d["labels"] = SDS((batch,), jnp.float32)
+        return d
+    return make
+
+
+SPEC = register(ArchSpec(
+    arch_id="dcn-v2", family="recsys", cfg=CONFIG,
+    shapes={
+        "train_batch": ShapeCell("train", _fwd(TRAIN_B, True),
+                                 f"batch {TRAIN_B}"),
+        "serve_p99": ShapeCell("serve", _fwd(P99_B, False), "online ranking"),
+        "serve_bulk": ShapeCell("serve", _fwd(BULK_B, False),
+                                "offline scoring"),
+        "retrieval_cand": ShapeCell("serve", _fwd(N_CAND_RETR, False),
+                                    "1M candidate rows for one query"),
+    },
+    source="arXiv:2008.13535",
+))

@@ -1,0 +1,50 @@
+"""The paper's own configuration: DistCLUB on the synthetic stress set
+(20k users, d=25 features, 20 candidates/interaction; paper Table 1/2).
+
+One dry-run cell: a full 4-stage epoch on the production mesh with users
+sharded over every axis.  Hyper-parameters follow paper Table 2 with the
+round budgets scaled to the batched-round formulation (sigma rounds per
+user per stage; DESIGN.md §2).
+"""
+import jax.numpy as jnp
+
+from ..core.types import BanditHyper
+from .base import SDS, ArchSpec, ShapeCell, register
+
+N_USERS = 20_480          # paper: 20,000; rounded to divide 512-way meshes
+D_FEAT = 25
+
+CONFIG = BanditHyper(
+    alpha=0.03, beta=2.0, gamma=1.6, sigma=16, n_candidates=20,
+    max_rounds=32,
+)
+
+
+def _epoch(cfg):
+    n, d = N_USERS, D_FEAT
+    eye = SDS((n, d, d), jnp.float32)
+    return {
+        "Minv": eye,
+        "b": SDS((n, d), jnp.float32),
+        "occ": SDS((n,), jnp.int32),
+        "adj": SDS((n, n), jnp.bool_),
+        "labels": SDS((n,), jnp.int32),
+        "uMcinv": eye,
+        "ubc": SDS((n, d), jnp.float32),
+        "umean_occ": SDS((n,), jnp.float32),
+        "u_rounds": SDS((n,), jnp.int32),
+        "c_rounds": SDS((n,), jnp.int32),
+        "theta": SDS((n, d), jnp.float32),
+        "key": SDS((2,), jnp.uint32),
+    }
+
+
+SPEC = register(ArchSpec(
+    arch_id="distclub-paper", family="bandit", cfg=CONFIG,
+    shapes={
+        "online_20k": ShapeCell(
+            "bandit_epoch", _epoch,
+            "paper synthetic: 20480 users x d=25, full 4-stage epoch"),
+    },
+    source="this paper (Mahadik et al. 2020), Tables 1-2",
+))

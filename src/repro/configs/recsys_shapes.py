@@ -1,0 +1,57 @@
+"""Shared recsys shape-set builders (train_batch / serve_p99 / serve_bulk /
+retrieval_cand) for the sequence-style recommenders (sasrec, bert4rec, mind).
+
+Candidate-set size for the serve cells is 1000 (industry-standard final
+ranking slate); retrieval scores one query against 10^6 candidates as a
+single batched dot per the assignment ("batched-dot, not a loop").
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .base import SDS, ShapeCell
+
+TRAIN_B = 65_536
+P99_B = 512
+BULK_B = 262_144
+N_CAND_SERVE = 1000
+N_CAND_RETR = 1_048_576   # 2^20: 10^6 rounded up to divide 512-way meshes
+
+
+def seq_shapes(seq_len: int, target_per_pos: bool) -> dict[str, ShapeCell]:
+    """target_per_pos: SASRec/BERT4Rec predict per position; MIND one target."""
+
+    def train(cfg):
+        d = {
+            "hist": SDS((TRAIN_B, seq_len), jnp.int32),
+            "key": SDS((2,), jnp.uint32),
+        }
+        if target_per_pos:
+            d["targets"] = SDS((TRAIN_B, seq_len), jnp.int32)
+        else:
+            d["targets"] = SDS((TRAIN_B,), jnp.int32)
+        return d
+
+    def serve(batch):
+        def make(cfg):
+            return {
+                "hist": SDS((batch, seq_len), jnp.int32),
+                "cand": SDS((batch, N_CAND_SERVE), jnp.int32),
+            }
+        return make
+
+    def retrieval(cfg):
+        return {
+            "hist": SDS((1, seq_len), jnp.int32),
+            "cand": SDS((N_CAND_RETR,), jnp.int32),
+        }
+
+    return {
+        "train_batch": ShapeCell("train", train, f"batch {TRAIN_B}"),
+        "serve_p99": ShapeCell("serve", serve(P99_B),
+                               f"online, {P99_B} x {N_CAND_SERVE} candidates"),
+        "serve_bulk": ShapeCell("serve", serve(BULK_B),
+                                f"offline, {BULK_B} x {N_CAND_SERVE} candidates"),
+        "retrieval_cand": ShapeCell("serve", retrieval,
+                                    f"1 query x {N_CAND_RETR} candidates"),
+    }

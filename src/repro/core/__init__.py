@@ -1,0 +1,8 @@
+"""Paper core: CLUB-family contextual bandits (CLUB / DCCB / DistCLUB)."""
+from . import club, clustering, dccb, distclub, env, env_ops, linucb, types
+from .types import BanditHyper, DistCLUBState, LinUCBState, Metrics
+
+__all__ = [
+    "club", "clustering", "dccb", "distclub", "env", "env_ops", "linucb",
+    "types", "BanditHyper", "DistCLUBState", "LinUCBState", "Metrics",
+]

@@ -1,0 +1,210 @@
+"""DistCLUB (paper Listing 3): the four repeating stages, batched-SPMD style.
+
+Stage 1  user-based LinUCB rounds        — all users advance in parallel, one
+                                           interaction per scan step, masked by
+                                           the per-user budget ``u_rounds``.
+Stage 2  network update + clustering     — edge pruning, connected components,
+                                           tree-reduced cluster statistics.
+Stage 3  cluster-based UCB rounds        — as stage 1 but scoring uses the
+                                           (frozen) cluster statistics, except
+                                           for the paper's beta-heuristic users
+                                           who keep personalized scoring.
+Stage 4  budget rebalancing              — delta = (occ - cluster mean occ)/2
+                                           shifts rounds between stages 1/3.
+
+Parallelism note: the paper serializes interactions *within* a cluster in
+stage 3 only because its Spark tasks mutate shared cluster objects.  Here the
+cluster statistics are frozen between stage-2 refreshes (exactly the paper's
+"lazy" semantics) and only per-user statistics mutate, so every user advances
+in parallel without conflicts; cross-step ordering per user is preserved by
+the scan.  The regret analysis in paper §4 covers this schedule — it is the
+same lazy-update argument used to justify DCCB's buffering.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import clustering, linucb
+from .env_ops import EnvOps
+from .types import BanditHyper, ClusterStats, DistCLUBState, Metrics
+
+
+def init_state(n_users: int, d: int, hyper: BanditHyper) -> DistCLUBState:
+    lin = linucb.init_linucb(n_users, d)
+    graph = clustering.init_graph(n_users)
+    labels = jnp.zeros((n_users,), jnp.int32)  # one big cluster initially
+    stats = clustering.cluster_stats(labels, lin.M, lin.b, d)
+    rounds = jnp.full((n_users,), hyper.sigma, jnp.int32)
+    return DistCLUBState(
+        lin=lin,
+        graph=graph._replace(labels=labels),
+        clusters=stats,
+        u_rounds=rounds,
+        c_rounds=rounds,
+        comm_bytes=jnp.zeros((), jnp.float32),
+    )
+
+
+def _interaction_step(lin, theta, minv_eff, contexts, key, mask, alpha):
+    """Shared inner step for stages 1 and 3.
+
+    theta/minv_eff: per-user scoring parameters ([n,d], [n,d,d]).
+    Returns (new_lin, choice [n] i32).
+    """
+    choice = linucb.choose_batch(theta, minv_eff, contexts, lin.occ, alpha)
+    x = jnp.take_along_axis(
+        contexts, choice[:, None, None], axis=1
+    )[:, 0]                                                     # [n, d]
+    return x, choice
+
+
+def _metrics_of(realized, expected, best, rand, mask):
+    m = mask.astype(realized.dtype)
+    return Metrics(
+        reward=jnp.sum(realized * m),
+        regret=jnp.sum((best - expected) * m),
+        rand_reward=jnp.sum(rand * m),
+        interactions=jnp.sum(mask.astype(jnp.int32)),
+    )
+
+
+def stage1(state: DistCLUBState, ops: EnvOps, key: jax.Array, hyper: BanditHyper):
+    """User-based rounds: embarrassingly parallel across users."""
+
+    def step(carry, inp):
+        lin = carry
+        step_idx, k = inp
+        mask = step_idx < state.u_rounds
+        k_ctx, k_rew = jax.random.split(k)
+        contexts = ops.contexts_fn(k_ctx, lin.occ)
+        v = linucb.user_vector(lin.Minv, lin.b)
+        x, choice = _interaction_step(
+            lin, v, lin.Minv, contexts, k, mask, hyper.alpha
+        )
+        realized, expected, best, rand = ops.rewards_fn(
+            k_rew, lin.occ, contexts, choice
+        )
+        lin = linucb.masked_batch_update(lin, x, realized, mask)
+        return lin, _metrics_of(realized, expected, best, rand, mask)
+
+    steps = jnp.arange(hyper.max_rounds)
+    keys = jax.random.split(key, hyper.max_rounds)
+    lin, metrics = jax.lax.scan(step, state.lin, (steps, keys))
+    return state._replace(lin=lin), metrics
+
+
+def stage2(state: DistCLUBState, hyper: BanditHyper, d: int) -> DistCLUBState:
+    """Network update, clustering, cluster statistics (the comm stage)."""
+    lin = state.lin
+    v = linucb.user_vector(lin.Minv, lin.b)
+    adj = clustering.prune_edges(state.graph.adj, v, lin.occ, hyper.gamma)
+    labels = clustering.connected_components(adj)
+    stats = clustering.cluster_stats(labels, lin.M, lin.b, d)
+    # seed 'seen' so that seen/size == mean lifetime occ of the cluster
+    # (paper: "average interactions for users in the cluster").
+    n = labels.shape[0]
+    seen = jax.ops.segment_sum(lin.occ, labels, num_segments=n)
+    stats = stats._replace(seen=seen)
+    # Communication model (paper Fig. 3): each user ships (M, b) once into
+    # the tree reduction = (d^2 + d) fp32 words; cluster stats return along
+    # the same tree.  DCCB's per-round buffer floods are the contrast.
+    nbytes = jnp.float32(2 * n * (d * d + d) * 4)
+    return state._replace(
+        graph=state.graph._replace(adj=adj, labels=labels),
+        clusters=stats,
+        comm_bytes=state.comm_bytes + nbytes,
+    )
+
+
+def stage3(state: DistCLUBState, ops: EnvOps, key: jax.Array, hyper: BanditHyper):
+    """Cluster-based rounds with the beta personalization heuristic."""
+    labels = state.graph.labels
+
+    def step(carry, inp):
+        lin, stats = carry
+        step_idx, k = inp
+        mask = step_idx < state.c_rounds
+        k_ctx, k_rew = jax.random.split(k)
+        contexts = ops.contexts_fn(k_ctx, lin.occ)
+
+        size = jnp.maximum(stats.size[labels], 1)
+        mean_occ = stats.seen[labels].astype(jnp.float32) / size
+        use_own = lin.occ.astype(jnp.float32) >= hyper.beta * mean_occ
+
+        v_own = linucb.user_vector(lin.Minv, lin.b)
+        v_clu = linucb.user_vector(stats.Mcinv[labels], stats.bc[labels])
+        theta = jnp.where(use_own[:, None], v_own, v_clu)
+        minv_eff = jnp.where(
+            use_own[:, None, None], lin.Minv, stats.Mcinv[labels]
+        )
+
+        x, choice = _interaction_step(
+            lin, theta, minv_eff, contexts, k, mask, hyper.alpha
+        )
+        realized, expected, best, rand = ops.rewards_fn(
+            k_rew, lin.occ, contexts, choice
+        )
+        lin = linucb.masked_batch_update(lin, x, realized, mask)
+        seen = stats.seen + jax.ops.segment_sum(
+            mask.astype(jnp.int32), labels, num_segments=labels.shape[0]
+        )
+        return (lin, stats._replace(seen=seen)), _metrics_of(
+            realized, expected, best, rand, mask
+        )
+
+    steps = jnp.arange(hyper.max_rounds)
+    keys = jax.random.split(key, hyper.max_rounds)
+    (lin, stats), metrics = jax.lax.scan(
+        step, (state.lin, state.clusters), (steps, keys)
+    )
+    return state._replace(lin=lin, clusters=stats), metrics
+
+
+def stage4(state: DistCLUBState, hyper: BanditHyper) -> DistCLUBState:
+    """Rebalance per-user budgets between personalized / cluster rounds."""
+    labels = state.graph.labels
+    stats = state.clusters
+    size = jnp.maximum(stats.size[labels], 1)
+    mean_occ = stats.seen[labels].astype(jnp.float32) / size
+    delta = ((state.lin.occ.astype(jnp.float32) - mean_occ) / 2.0).astype(
+        jnp.int32
+    )
+    u_rounds = jnp.clip(state.u_rounds + delta, 0, hyper.max_rounds)
+    c_rounds = jnp.clip(state.c_rounds - delta, 0, hyper.max_rounds)
+    return state._replace(u_rounds=u_rounds, c_rounds=c_rounds)
+
+
+@partial(jax.jit, static_argnames=("ops", "hyper", "n_epochs", "d"))
+def run(
+    ops: EnvOps,
+    key: jax.Array,
+    hyper: BanditHyper,
+    n_epochs: int,
+    d: int,
+) -> tuple[DistCLUBState, Metrics, jnp.ndarray]:
+    """Run ``n_epochs`` of the four-stage loop.
+
+    Returns (final state, per-scan-step metrics stacked over the whole run,
+    cluster-count after each stage-2).
+    """
+    state = init_state(ops.n_users, d, hyper)
+
+    def epoch(state, k):
+        k1, k3 = jax.random.split(k)
+        state, m1 = stage1(state, ops, k1, hyper)
+        state = stage2(state, hyper, d)
+        n_clu = clustering.num_clusters(state.graph.labels)
+        state, m3 = stage3(state, ops, k3, hyper)
+        state = stage4(state, hyper)
+        metrics = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b]), m1, m3
+        )
+        return state, (metrics, n_clu)
+
+    keys = jax.random.split(key, n_epochs)
+    state, (metrics, n_clusters) = jax.lax.scan(epoch, state, keys)
+    metrics = jax.tree.map(lambda x: x.reshape(-1), metrics)
+    return state, metrics, n_clusters

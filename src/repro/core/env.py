@@ -1,0 +1,94 @@
+"""Bandit environments.
+
+Two kinds, both pure-functional and PRNG-driven so they compose with scan:
+
+* ``SyntheticEnv`` — planted-cluster linear environment (the paper's
+  "Synthetic" dataset and the standard CLUB evaluation protocol): each user
+  has a hidden unit vector theta drawn from one of ``n_clusters`` centroids;
+  a context set of ``K`` unit vectors is sampled per interaction; the click
+  probability of item x for user u is  p = (1 + x . theta_u) / 2  and the
+  realized reward is Bernoulli(p) (all paper datasets have 0/1 rewards).
+
+* ``ReplayEnv`` — a logged-interaction environment used by the paper-dataset
+  clones in ``repro.data``: item features come from a fixed table and each
+  user has a queue of logged candidate sets.  Per-user queues preserve the
+  paper's per-user interaction ordering under batched rounds.
+
+Both expose the same two operations:
+
+  contexts_for(key_or_step, users)  -> [B, K, d]
+  reward(key, user, x)              -> realized, expected, best_expected
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SyntheticEnv(NamedTuple):
+    theta: jnp.ndarray        # [n_users, d] hidden preference vectors
+    n_candidates: int
+
+    @property
+    def n_users(self) -> int:
+        return self.theta.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.theta.shape[1]
+
+
+def make_synthetic_env(
+    key: jax.Array,
+    n_users: int,
+    d: int,
+    n_clusters: int,
+    n_candidates: int = 20,
+    within_cluster_noise: float = 0.0,
+) -> tuple[SyntheticEnv, jnp.ndarray]:
+    """Planted clustered environment; returns (env, true_labels)."""
+    k_cent, k_assign, k_noise = jax.random.split(key, 3)
+    centroids = jax.random.normal(k_cent, (n_clusters, d))
+    centroids /= jnp.linalg.norm(centroids, axis=-1, keepdims=True)
+    labels = jax.random.randint(k_assign, (n_users,), 0, n_clusters)
+    theta = centroids[labels]
+    if within_cluster_noise > 0:
+        theta = theta + within_cluster_noise * jax.random.normal(
+            k_noise, theta.shape
+        )
+    theta /= jnp.linalg.norm(theta, axis=-1, keepdims=True)
+    return SyntheticEnv(theta=theta, n_candidates=n_candidates), labels
+
+
+def sample_contexts(key: jax.Array, shape_prefix, K: int, d: int) -> jnp.ndarray:
+    """Unit-norm candidate features: [*shape_prefix, K, d]."""
+    x = jax.random.normal(key, (*shape_prefix, K, d))
+    return x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+
+
+def expected_reward(theta_u: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """p(click) in [0,1]; broadcasts over leading axes of x."""
+    return 0.5 * (1.0 + jnp.einsum("...d,...d->...", x, theta_u))
+
+
+def step_rewards(
+    key: jax.Array,
+    theta_u: jnp.ndarray,     # [..., d]
+    contexts: jnp.ndarray,    # [..., K, d]
+    choice: jnp.ndarray,      # [...] i32
+):
+    """Realized Bernoulli reward for the chosen item + regret terms.
+
+    Returns (reward [...], expected [...], best_expected [...], rand_reward [...]).
+    ``rand_reward`` is the expected reward of the paper's RAN baseline
+    (uniform-random choice) = mean over the candidate set.
+    """
+    p_all = expected_reward(theta_u[..., None, :], contexts)      # [..., K]
+    p_choice = jnp.take_along_axis(p_all, choice[..., None], axis=-1)[..., 0]
+    best = jnp.max(p_all, axis=-1)
+    rand = jnp.mean(p_all, axis=-1)
+    u = jax.random.uniform(key, p_choice.shape)
+    realized = (u < p_choice).astype(contexts.dtype)
+    return realized, p_choice, best, rand

@@ -1,0 +1,70 @@
+"""Environment protocol shared by CLUB / DCCB / DistCLUB drivers.
+
+An environment is two pure functions (closures over whatever tables the
+environment needs), so the algorithm drivers stay agnostic between the
+synthetic generator and logged-replay datasets:
+
+  contexts_fn(key, occ)                     -> [n, K, d] candidate features
+  rewards_fn(key, occ, contexts, choice)    -> (realized, expected, best, rand)
+
+``occ`` is the per-user interaction count — replay environments use it as
+the per-user queue cursor, preserving the paper's per-user ordering.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import env as synth_env
+
+
+class EnvOps(NamedTuple):
+    contexts_fn: Callable
+    rewards_fn: Callable
+    n_users: int
+    d: int
+    n_candidates: int
+
+
+def synthetic_ops(env: synth_env.SyntheticEnv) -> EnvOps:
+    n, d, K = env.n_users, env.d, env.n_candidates
+
+    def contexts_fn(key, occ):
+        del occ
+        return synth_env.sample_contexts(key, (n,), K, d)
+
+    def rewards_fn(key, occ, contexts, choice):
+        del occ
+        return synth_env.step_rewards(key, env.theta, contexts, choice)
+
+    return EnvOps(contexts_fn, rewards_fn, n, d, K)
+
+
+def replay_ops(
+    item_feats: jnp.ndarray,     # [n_items, d]
+    cand_ids: jnp.ndarray,       # [n_users, max_t, K] candidate item ids (pad=0)
+    click_probs: jnp.ndarray,    # [n_users, max_t, K] logged CTR estimates
+) -> EnvOps:
+    """Logged-replay environment for the paper-dataset clones."""
+    n, max_t, K = cand_ids.shape
+    d = item_feats.shape[1]
+
+    def contexts_fn(key, occ):
+        del key
+        t = jnp.minimum(occ, max_t - 1)                        # [n]
+        ids = jnp.take_along_axis(cand_ids, t[:, None, None], axis=1)[:, 0]
+        return item_feats[ids]                                  # [n, K, d]
+
+    def rewards_fn(key, occ, contexts, choice):
+        t = jnp.minimum(occ, max_t - 1)
+        p_all = jnp.take_along_axis(click_probs, t[:, None, None], axis=1)[:, 0]
+        p_choice = jnp.take_along_axis(p_all, choice[:, None], axis=1)[:, 0]
+        best = jnp.max(p_all, axis=-1)
+        rand = jnp.mean(p_all, axis=-1)
+        u = jax.random.uniform(key, p_choice.shape)
+        realized = (u < p_choice).astype(contexts.dtype)
+        return realized, p_choice, best, rand
+
+    return EnvOps(contexts_fn, rewards_fn, n, d, K)

@@ -1,0 +1,80 @@
+"""int8 gradient compression with error feedback (1-bit-Adam-family trick).
+
+For cross-pod data parallelism the gradient all-reduce is the only traffic
+on the (slower) pod-to-pod links; int8 quantization with per-tensor block
+scales cuts it 4x vs f32 / 2x vs bf16.  Error feedback (Seide et al. 2014;
+Karimireddy et al. 2019) keeps the *accumulated* quantization error in a
+local buffer and folds it into the next step, preserving convergence
+(the compressed SGD iterates track the exact ones to O(eta^2)).
+
+Usage (wired as an option in the train step):
+
+    comp, err = compress(g + err)          # quantize what we can't send
+    g_hat     = decompress(comp)           # what the all-reduce actually moved
+    err       = (g + err) - g_hat          # feedback for next step
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class Compressed(NamedTuple):
+    q: jnp.ndarray        # int8 payload, padded flat [ceil(n/B)*B]
+    scale: jnp.ndarray    # f32 per-block scales [ceil(n/B)]
+    n: int                # true element count (static)
+
+
+def compress(x: jnp.ndarray) -> Compressed:
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(flat), axis=1) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(flat / scale[:, None]), -127, 127).astype(jnp.int8)
+    return Compressed(q=q.reshape(-1), scale=scale, n=n)
+
+
+def decompress(c: Compressed, shape, dtype=jnp.float32) -> jnp.ndarray:
+    deq = (c.q.reshape(-1, BLOCK).astype(jnp.float32)
+           * c.scale[:, None]).reshape(-1)[: c.n]
+    return deq.reshape(shape).astype(dtype)
+
+
+def compressed_ratio(shape, dtype=jnp.float32) -> float:
+    """bytes(compressed) / bytes(raw) for reporting."""
+    import numpy as np
+
+    n = int(np.prod(shape))
+    nb = -(-n // BLOCK)
+    raw = n * jnp.dtype(dtype).itemsize
+    return (n + 4 * nb) / raw
+
+
+def ef_step(grads, err):
+    """One error-feedback round over a pytree.
+
+    Returns (g_hat pytree — what a compressed all-reduce transports,
+    new_err pytree).  The caller all-reduces g_hat (or, on hardware,
+    all-reduces the int8 payloads and rescales).
+    """
+    def one(g, e):
+        tot = g.astype(jnp.float32) + e
+        c = compress(tot)
+        g_hat = decompress(c, g.shape)
+        return g_hat.astype(g.dtype), tot - g_hat
+
+    out = jax.tree.map(one, grads, err)
+    g_hat = jax.tree.map(lambda o: o[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda o: o[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return g_hat, new_err
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,175 @@
+"""Distributed DCCB baseline under shard_map — gossip via collective_permute.
+
+The paper's scaling argument (Fig 6) needs DCCB runnable on the same mesh
+as DistCLUB.  Users are sharded as in ``distclub_shard``; the per-epoch
+structure is L lockstep interaction steps followed by one gossip round.
+
+Gossip mapping: the paper pairs each user with a random connected peer.
+On a mesh, cross-shard random pairing is an all-to-all; the standard
+hardware-shaped equivalent is a *permuted-neighbor* exchange — each shard
+sends its users' (buffer, current) payloads to the next shard over the
+ring (``collective_permute``, exactly one ICI hop) and pairs its users
+with the arrivals.  Information still spreads one hop per round (the same
+rate as the paper's random gossip in expectation); the per-round traffic
+IS the paper's Table-4 objection: (L+1)(d^2+d) floats per user, which this
+implementation ships for real.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core import clustering
+from ..core.env import expected_reward, sample_contexts
+from ..core.types import BanditHyper, Metrics
+
+
+class ShardedDCCB(NamedTuple):
+    Mw: jnp.ndarray       # [n, d, d] current (lagged) Gram
+    bw: jnp.ndarray       # [n, d]
+    xbuf: jnp.ndarray     # [n, L, d]   FIFO of pending update contexts
+    rbuf: jnp.ndarray     # [n, L]      ... and rewards
+    occ: jnp.ndarray      # [n] i32
+    theta: jnp.ndarray    # [n, d]
+    comm_bytes: jnp.ndarray  # [] f32
+
+
+def state_specs(axes) -> ShardedDCCB:
+    s = P(axes)
+    return ShardedDCCB(Mw=s, bw=s, xbuf=s, rbuf=s, occ=s, theta=s,
+                       comm_bytes=P())
+
+
+def init_state(n, d, L, theta) -> ShardedDCCB:
+    eye = jnp.eye(d, dtype=jnp.float32) + jnp.zeros((n, d, d), jnp.float32)
+    return ShardedDCCB(
+        Mw=eye, bw=jnp.zeros((n, d), jnp.float32),
+        xbuf=jnp.zeros((n, L, d), jnp.float32),
+        rbuf=jnp.zeros((n, L), jnp.float32),
+        occ=jnp.zeros((n,), jnp.int32), theta=theta,
+        comm_bytes=jnp.zeros((), jnp.float32),
+    )
+
+
+def build_epoch_fn(mesh: Mesh, axes, n: int, d: int, L: int,
+                   hyper: BanditHyper):
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    assert n % n_shards == 0
+
+    def epoch(state: ShardedDCCB, key: jax.Array):
+        idx = jax.lax.axis_index(axes)
+        key = jax.random.fold_in(key, idx)
+        K = hyper.n_candidates
+
+        # ---- L lockstep interactions (buffer turns over once) ----------
+        def step(carry, inp):
+            Mw, bw, xbuf, rbuf, occ = carry
+            slot, k = inp
+            k_ctx, k_rew = jax.random.split(k)
+            contexts = sample_contexts(k_ctx, (Mw.shape[0],), K, d)
+            w = jnp.linalg.solve(Mw, bw[..., None])[..., 0]
+            Z = jnp.linalg.solve(Mw, jnp.swapaxes(contexts, -1, -2))
+            quad = jnp.einsum("nkd,ndk->nk", contexts, Z)
+            est = jnp.einsum("nkd,nd->nk", contexts, w)
+            bonus = hyper.alpha * jnp.sqrt(jnp.maximum(quad, 0.0)) * jnp.sqrt(
+                jnp.log1p(occ.astype(jnp.float32)))[:, None]
+            choice = jnp.argmax(est + bonus, axis=-1)
+            x = jnp.take_along_axis(contexts, choice[:, None, None], 1)[:, 0]
+            p_all = expected_reward(state.theta[:, None, :], contexts)
+            p_c = jnp.take_along_axis(p_all, choice[:, None], 1)[:, 0]
+            r = (jax.random.uniform(k_rew, p_c.shape) < p_c).astype(
+                jnp.float32)
+
+            # pop oldest into current; push the new update
+            x_old = xbuf[:, slot]
+            r_old = rbuf[:, slot]
+            Mw = Mw + jnp.einsum("ni,nj->nij", x_old, x_old)
+            bw = bw + r_old[:, None] * x_old
+            xbuf = xbuf.at[:, slot].set(x)
+            rbuf = rbuf.at[:, slot].set(r)
+            m = Metrics(
+                reward=jnp.sum(r),
+                regret=jnp.sum(jnp.max(p_all, -1) - p_c),
+                rand_reward=jnp.sum(jnp.mean(p_all, -1)),
+                interactions=jnp.int32(r.shape[0]),
+            )
+            return (Mw, bw, xbuf, rbuf, occ + 1), m
+
+        keys = jax.random.split(key, L)
+        (Mw, bw, xbuf, rbuf, occ), metrics = jax.lax.scan(
+            step, (state.Mw, state.bw, state.xbuf, state.rbuf, state.occ),
+            (jnp.arange(L), keys))
+        metrics = jax.tree.map(lambda v: jnp.sum(v, 0), metrics)
+        metrics = jax.tree.map(lambda v: jax.lax.psum(v, axes), metrics)
+
+        # ---- gossip: one-hop ring exchange of (buffer + current) --------
+        perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+
+        def ring(a):
+            return jax.lax.ppermute(a, axes, perm)
+
+        pM, pb = ring(Mw), ring(bw)
+        pxb, prb = ring(xbuf), ring(rbuf)
+        pocc = ring(occ)
+
+        # paper's update: compare local vs peer estimates; average when
+        # neighborhoods agree (here: always merge-average — the ring pairs
+        # each user with one peer, the complete-graph early phase)
+        M_loc = Mw + jnp.einsum("nld,nle->nde", xbuf, xbuf)
+        b_loc = bw + jnp.einsum("nl,nld->nd", rbuf, xbuf)
+        Mp_loc = pM + jnp.einsum("nld,nle->nde", pxb, pxb)
+        bp_loc = pb + jnp.einsum("nl,nld->nd", prb, pxb)
+        w = jnp.linalg.solve(M_loc, b_loc[..., None])[..., 0]
+        v = jnp.linalg.solve(Mp_loc, bp_loc[..., None])[..., 0]
+        dist = jnp.linalg.norm(w - v, axis=-1)
+        width = clustering.cb_width(occ) + clustering.cb_width(pocc)
+        similar = dist < hyper.gamma * width
+
+        def mix(a, pa):
+            sim = similar.reshape((-1,) + (1,) * (a.ndim - 1))
+            return jnp.where(sim, 0.5 * (a + pa), a)
+
+        Mw = mix(Mw, pM)
+        bw = mix(bw, pb)
+        xbuf = mix(xbuf, pxb)
+        rbuf = mix(rbuf, prb)
+
+        per_user = (L + 1) * (d * d + d) * 4.0
+        comm = state.comm_bytes + jnp.float32(n) * per_user
+        return ShardedDCCB(Mw, bw, xbuf, rbuf, occ, state.theta, comm), metrics
+
+    specs = state_specs(axes)
+    return shard_map(
+        epoch, mesh=mesh,
+        in_specs=(specs, P()),
+        out_specs=(specs, Metrics(P(), P(), P(), P())),
+        check_rep=False,
+    )
+
+
+def make_runtime(mesh: Mesh, axes, n: int, d: int, L: int,
+                 hyper: BanditHyper):
+    epoch = build_epoch_fn(mesh, axes, n, d, L, hyper)
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), state_specs(axes),
+        is_leaf=lambda x: isinstance(x, P))
+
+    def init_fn(key):
+        theta = jax.random.normal(key, (n, d))
+        theta = theta / jnp.linalg.norm(theta, axis=-1, keepdims=True)
+        return jax.device_put(init_state(n, d, L, theta), shardings)
+
+    epoch_jit = jax.jit(
+        epoch,
+        in_shardings=(shardings, NamedSharding(mesh, P())),
+        out_shardings=(shardings, jax.tree.map(
+            lambda _: NamedSharding(mesh, P()), Metrics(0, 0, 0, 0))),
+        donate_argnums=(0,),
+    )
+    return init_fn, epoch_jit

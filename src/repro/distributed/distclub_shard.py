@@ -1,0 +1,298 @@
+"""Distributed DistCLUB: the paper's four stages under ``shard_map``.
+
+Layout (users = the distribution axis, sharded over every mesh axis
+flattened — the bandit equivalent of pure data parallelism):
+
+  Mu, Minv, bu, occ, budgets : sharded on dim 0   -> [n_local, ...]
+  adj                        : sharded rows       -> [n_local, n]
+  labels                     : replicated [n]     (refreshed by all_gather)
+  cluster stats              : replicated [n,...] (produced by psum — the
+                               paper's treeReduce on the ICI all-reduce tree)
+
+Stage 1/3 are purely local (zero communication — the paper's
+"embarrassingly parallel" claim is literal here).  Stage 2 is the only
+communicating stage and its traffic is exactly the paper's model: one
+all-gather of the n x d user vectors + occ for edge pruning, label hops
+during connected components, and one psum of the (n,d,d)+(n,d) aggregates.
+
+The environment inside the sharded runtime is the synthetic generator
+(per-device PRNG folded with the shard index); replay datasets use the
+single-host driver in ``repro.core``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core import clustering, linucb
+from ..core.env import expected_reward, sample_contexts
+from ..core.types import BanditHyper, Metrics
+
+
+class ShardedDistCLUB(NamedTuple):
+    """State as seen *outside* shard_map (global shapes).
+
+    §Perf iteration (bandit cell): the Gram matrix M is NOT carried — only
+    its inverse is needed per interaction (UCB + Sherman-Morrison), and
+    stage-2's cluster aggregation recovers M = inv(Minv) locally once per
+    epoch.  Dropping M cuts the per-round state traffic by ~1/3 on the
+    memory-bound bandit cell (EXPERIMENTS.md §Perf)."""
+
+    Minv: jnp.ndarray     # [n, d, d]   sharded dim0
+    b: jnp.ndarray        # [n, d]      sharded dim0
+    occ: jnp.ndarray      # [n]         sharded dim0
+    adj: jnp.ndarray      # [n, n]      sharded rows
+    labels: jnp.ndarray   # [n]         replicated (n i32 — cheap)
+    uMcinv: jnp.ndarray   # [n, d, d]   sharded: per-user copy of its
+                          #             cluster's inverse Gram (stage-2 snap)
+    ubc: jnp.ndarray      # [n, d]      sharded: per-user cluster bias
+    umean_occ: jnp.ndarray  # [n] f32   sharded: cluster mean occ snapshot
+    u_rounds: jnp.ndarray  # [n] i32    sharded dim0
+    c_rounds: jnp.ndarray  # [n] i32    sharded dim0
+    theta: jnp.ndarray    # [n, d]      sharded dim0 (synthetic env truth)
+
+    # §Perf iteration 2 (bandit cell): the label-indexed cluster tables
+    # (Mc/Mcinv/bc, 3 x [n,d,d] REPLICATED) dominated per-device HBM
+    # traffic (cost_analysis: ~790 MB/device/epoch, mostly these).  They
+    # are now transients inside stage-2; the carried state holds only
+    # per-user sharded snapshots (n_loc x d x d).  The within-stage-3
+    # update of the seen-counter is deferred to the next stage-2 (the
+    # paper's own lazy-update argument).
+
+
+def state_specs(axes: tuple[str, ...]) -> ShardedDistCLUB:
+    s = P(axes)          # dim-0 sharded
+    r = P()              # replicated
+    return ShardedDistCLUB(
+        Minv=s, b=s, occ=s, adj=s, labels=r,
+        uMcinv=s, ubc=s, umean_occ=s,
+        u_rounds=s, c_rounds=s, theta=s,
+    )
+
+
+def init_state(n: int, d: int, hyper: BanditHyper, theta: jnp.ndarray) -> ShardedDistCLUB:
+    def eye():
+        # distinct buffers: the jit'd epoch donates its inputs and XLA
+        # rejects the same buffer appearing in two donated slots.
+        return jnp.eye(d, dtype=jnp.float32) + jnp.zeros((n, d, d), jnp.float32)
+
+    return ShardedDistCLUB(
+        Minv=eye(),
+        b=jnp.zeros((n, d), jnp.float32),
+        occ=jnp.zeros((n,), jnp.int32),
+        adj=jnp.ones((n, n), bool) & ~jnp.eye(n, dtype=bool),
+        labels=jnp.zeros((n,), jnp.int32),
+        uMcinv=eye(),
+        ubc=jnp.zeros((n, d), jnp.float32),
+        umean_occ=jnp.zeros((n,), jnp.float32),
+        u_rounds=jnp.full((n,), hyper.sigma, jnp.int32),
+        c_rounds=jnp.full((n,), hyper.sigma, jnp.int32),
+        theta=theta,
+    )
+
+
+def _local_round(lin_Minv, lin_b, occ, theta_true, budget, key, hyper,
+                 score_fn):
+    """Shared stage-1/3 inner loop over a local user shard. Zero comms."""
+    K = hyper.n_candidates
+    d = lin_b.shape[-1]
+
+    def step(carry, inp):
+        Minv, b, occ = carry
+        step_idx, k = inp
+        k_ctx, k_rew = jax.random.split(k)
+        mask = step_idx < budget
+        contexts = sample_contexts(k_ctx, (Minv.shape[0],), K, d)
+        w, minv_eff = score_fn(Minv, b, occ)
+        est = jnp.einsum("nkd,nd->nk", contexts, w)
+        quad = jnp.einsum("nkd,nde,nke->nk", contexts, minv_eff, contexts)
+        bonus = hyper.alpha * jnp.sqrt(jnp.maximum(quad, 0.0)) * jnp.sqrt(
+            jnp.log1p(occ.astype(jnp.float32))
+        )[:, None]
+        choice = jnp.argmax(est + bonus, axis=-1)
+        x = jnp.take_along_axis(contexts, choice[:, None, None], axis=1)[:, 0]
+
+        p_all = expected_reward(theta_true[:, None, :], contexts)
+        p_choice = jnp.take_along_axis(p_all, choice[:, None], axis=1)[:, 0]
+        realized = (jax.random.uniform(k_rew, p_choice.shape) < p_choice
+                    ).astype(jnp.float32)
+
+        m = mask.astype(jnp.float32)
+        xm = x * m[:, None]
+        Minv = linucb.sherman_morrison(Minv, xm)
+        b = b + (realized * m)[:, None] * x
+        occ = occ + mask.astype(jnp.int32)
+        metrics = Metrics(
+            reward=jnp.sum(realized * m),
+            regret=jnp.sum((jnp.max(p_all, axis=-1) - p_choice) * m),
+            rand_reward=jnp.sum(jnp.mean(p_all, axis=-1) * m),
+            interactions=jnp.sum(mask.astype(jnp.int32)),
+        )
+        return (Minv, b, occ), metrics
+
+    steps = jnp.arange(hyper.max_rounds)
+    keys = jax.random.split(key, hyper.max_rounds)
+    (Minv, b, occ), metrics = jax.lax.scan(
+        step, (lin_Minv, lin_b, occ), (steps, keys)
+    )
+    # fold per-step metric sums into one per-round Metrics row
+    metrics = jax.tree.map(lambda v: jnp.sum(v, axis=0), metrics)
+    return Minv, b, occ, metrics
+
+
+def build_epoch_fn(mesh: Mesh, axes: tuple[str, ...], n: int, d: int,
+                   hyper: BanditHyper):
+    """Returns jit-able epoch(state, key) -> (state, metrics, n_clusters)."""
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    if n % n_shards:
+        raise ValueError(f"n_users={n} must divide the {n_shards}-way mesh")
+    n_local = n // n_shards
+
+    def epoch(state: ShardedDistCLUB, key: jax.Array):
+        idx = jax.lax.axis_index(axes)
+        key = jax.random.fold_in(key, idx)
+        k1, k3 = jax.random.split(key)
+        row0 = idx * n_local
+        local_ids = row0 + jnp.arange(n_local, dtype=jnp.int32)
+
+        # ---- stage 1: personalized rounds (local only) --------------------
+        def score_own(Minv, b, occ):
+            return linucb.user_vector(Minv, b), Minv
+
+        Minv, b, occ, m1 = _local_round(
+            state.Minv, state.b, state.occ, state.theta,
+            state.u_rounds, k1, hyper, score_own,
+        )
+
+        # ---- stage 2: the communication stage ------------------------------
+        v_local = linucb.user_vector(Minv, b)                     # [n_loc, d]
+        v_all = jax.lax.all_gather(v_local, axes, tiled=True)     # [n, d]
+        occ_all = jax.lax.all_gather(occ, axes, tiled=True)       # [n]
+
+        # prune rows of the sharded adjacency
+        d2 = (jnp.sum(v_local**2, -1)[:, None] + jnp.sum(v_all**2, -1)[None, :]
+              - 2.0 * v_local @ v_all.T)
+        dist = jnp.sqrt(jnp.maximum(d2, 0.0))
+        thr = hyper.gamma * (
+            clustering.cb_width(occ)[:, None] + clustering.cb_width(occ_all)[None, :]
+        )
+        adj = state.adj & (dist < thr)
+
+        # connected components: min-label propagation with gathered labels
+        init = jnp.arange(n, dtype=jnp.int32)
+
+        def cc_cond(carry):
+            _, changed, it = carry
+            return changed & (it < n)
+
+        def cc_body(carry):
+            labels, _, it = carry
+            neigh = jnp.where(adj, labels[None, :], jnp.int32(n))
+            new_local = jnp.minimum(labels[row0 + jnp.arange(n_local)],
+                                    jnp.min(neigh, axis=1))
+            new = jax.lax.all_gather(new_local, axes, tiled=True)
+            changed = jnp.any(new != labels)
+            return new, changed, it + 1
+
+        labels, _, _ = jax.lax.while_loop(
+            cc_cond, cc_body, (init, jnp.array(True), 0)
+        )
+
+        # cluster stats: local segment_sum -> psum (the treeReduce).
+        # M is recovered from Minv once per epoch (batched d x d inverse)
+        # instead of being carried through every round, and the replicated
+        # [n,d,d] tables are TRANSIENT — only per-user sharded snapshots
+        # survive the stage.
+        eye = jnp.eye(d, dtype=jnp.float32)
+        M = jnp.linalg.inv(Minv)
+        local_labels = labels[row0 + jnp.arange(n_local)]
+        Mc = jax.ops.segment_sum(M - eye, local_labels, num_segments=n)
+        bc = jax.ops.segment_sum(b, local_labels, num_segments=n)
+        csize = jax.ops.segment_sum(jnp.ones_like(local_labels), local_labels,
+                                    num_segments=n)
+        cseen = jax.ops.segment_sum(occ, local_labels, num_segments=n)
+        Mc = jax.lax.psum(Mc, axes) + eye
+        bc = jax.lax.psum(bc, axes)
+        csize = jax.lax.psum(csize, axes)
+        cseen = jax.lax.psum(cseen, axes)
+        lab_local = labels[local_ids]
+        uMcinv = jnp.linalg.inv(Mc[lab_local])           # [n_loc, d, d]
+        ubc = bc[lab_local]
+        umean_occ = (cseen[lab_local].astype(jnp.float32)
+                     / jnp.maximum(csize[lab_local], 1))
+        n_clusters = jnp.sum(labels == init)
+
+        # ---- stage 3: cluster-based rounds (local only; stats frozen) ------
+        def score_cluster(Minv_, b_, occ_):
+            use_own = occ_.astype(jnp.float32) >= hyper.beta * umean_occ
+            v_own = linucb.user_vector(Minv_, b_)
+            v_clu = linucb.user_vector(uMcinv, ubc)
+            w = jnp.where(use_own[:, None], v_own, v_clu)
+            minv_eff = jnp.where(use_own[:, None, None], Minv_, uMcinv)
+            return w, minv_eff
+
+        Minv, b, occ, m3 = _local_round(
+            Minv, b, occ, state.theta, state.c_rounds, k3, hyper,
+            score_cluster,
+        )
+
+        # ---- stage 4: budget rebalancing (local) ----------------------------
+        lab = labels[local_ids]
+        mean_occ = cseen[lab].astype(jnp.float32) / jnp.maximum(csize[lab], 1)
+        delta = ((occ.astype(jnp.float32) - mean_occ) / 2.0).astype(jnp.int32)
+        u_rounds = jnp.clip(state.u_rounds + delta, 0, hyper.max_rounds)
+        c_rounds = jnp.clip(state.c_rounds - delta, 0, hyper.max_rounds)
+
+        metrics = jax.tree.map(lambda a_, b_: a_ + b_, m1, m3)
+        metrics = jax.tree.map(lambda v: jax.lax.psum(v, axes), metrics)
+
+        new_state = ShardedDistCLUB(
+            Minv=Minv, b=b, occ=occ, adj=adj, labels=labels,
+            uMcinv=uMcinv, ubc=ubc, umean_occ=umean_occ,
+            u_rounds=u_rounds, c_rounds=c_rounds, theta=state.theta,
+        )
+        return new_state, metrics, n_clusters
+
+    specs = state_specs(axes)
+    sharded = shard_map(
+        epoch, mesh=mesh,
+        in_specs=(specs, P()),
+        out_specs=(specs, Metrics(P(), P(), P(), P()), P()),
+        check_rep=False,
+    )
+    return sharded
+
+
+def make_runtime(mesh: Mesh, axes: tuple[str, ...], n: int, d: int,
+                 hyper: BanditHyper):
+    """(init_fn, jit'd epoch_fn) pair with global-array in/out shardings."""
+    epoch = build_epoch_fn(mesh, axes, n, d, hyper)
+    specs = state_specs(axes)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+
+    def init_fn(key):
+        theta = jax.random.normal(key, (n, d))
+        theta = theta / jnp.linalg.norm(theta, axis=-1, keepdims=True)
+        state = init_state(n, d, hyper, theta)
+        return jax.device_put(state, shardings)
+
+    epoch_jit = jax.jit(
+        epoch,
+        in_shardings=(shardings, NamedSharding(mesh, P())),
+        out_shardings=(
+            shardings,
+            jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                         Metrics(0, 0, 0, 0)),
+            NamedSharding(mesh, P()),
+        ),
+        donate_argnums=(0,),
+    )
+    return init_fn, epoch_jit

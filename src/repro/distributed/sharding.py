@@ -1,0 +1,85 @@
+"""Sharding helpers shared by the bandit runtime and the model zoo."""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def hint_mesh(mesh: Mesh):
+    """Ambient mesh for ``hint()`` constraints inside model code.
+
+    Model forward functions are mesh-agnostic; the launcher installs the
+    mesh around tracing so deep intermediates (MoE dispatch buffers, etc.)
+    can pin their layouts without threading a mesh argument everywhere.
+    """
+    prev = getattr(_TLS, "mesh", None)
+    _TLS.mesh = mesh
+    try:
+        yield
+    finally:
+        _TLS.mesh = prev
+
+
+def hint(x, *spec_entries):
+    """with_sharding_constraint(x, P(*entries)) if a hint mesh is active."""
+    mesh = getattr(_TLS, "mesh", None)
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec_entries)))
+
+
+def flat_axis_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def user_sharding(mesh: Mesh, axes: tuple[str, ...]) -> NamedSharding:
+    """Shard dim 0 (users / batch) over the given mesh axes jointly."""
+    return NamedSharding(mesh, P(axes))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def local_slice(n: int, axis_index: jnp.ndarray, n_shards: int):
+    """(start, size) of this shard's slice of an n-length axis (n % shards == 0)."""
+    per = n // n_shards
+    return axis_index * per, per
+
+
+def zero_specs(spec_tree, abstract_tree, data_size: int):
+    """ZeRO-shard a spec tree: add "data" on the largest still-replicated,
+    divisible dim of every leaf that doesn't already use it.
+
+    Used for optimizer moments and gradient accumulators — they carry no
+    compute, so fully sharding them costs one reduce-scatter/all-gather pair
+    per step and divides their HBM footprint by the data-axis size.
+    """
+    def one(spec: P, ab):
+        entries = list(spec) + [None] * (ab.ndim - len(spec))
+        flat = []
+        for e in entries:
+            flat.extend(e if isinstance(e, tuple) else (e,))
+        if "data" in flat:
+            return P(*entries)
+        best, best_dim = 0, -1
+        for i, e in enumerate(entries):
+            if e is None and ab.shape[i] % data_size == 0 and ab.shape[i] > best:
+                best, best_dim = ab.shape[i], i
+        if best_dim >= 0:
+            entries[best_dim] = "data"
+        return P(*entries)
+
+    return jax.tree.map(one, spec_tree, abstract_tree,
+                        is_leaf=lambda x: isinstance(x, P))

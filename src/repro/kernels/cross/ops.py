@@ -1,0 +1,33 @@
+"""Public entry point for the DCN-v2 cross layer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .cross import cross_layer_pallas
+from .ref import cross_layer_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def cross_layer(
+    x0, xl, W, bias,
+    *, use_pallas: bool | None = None, block_b: int = 256,
+    interpret: bool | None = None,
+):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return cross_layer_ref(x0, xl, W, bias)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, d = x0.shape
+    bb = min(block_b, _round_up(B, 8))
+    Bp = _round_up(B, bb)
+    if Bp != B:
+        x0 = jnp.zeros((Bp, d), x0.dtype).at[:B].set(x0)
+        xl = jnp.zeros((Bp, d), xl.dtype).at[:B].set(xl)
+    out = cross_layer_pallas(x0, xl, W, bias, block_b=bb, interpret=interpret)
+    return out[:B]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the DCN-v2 cross layer."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cross_layer_ref(
+    x0: jnp.ndarray,   # [B, d] base features
+    xl: jnp.ndarray,   # [B, d] current layer input
+    W: jnp.ndarray,    # [d, d]
+    bias: jnp.ndarray,  # [d]
+) -> jnp.ndarray:
+    """x_{l+1} = x0 * (W xl + bias) + xl   (DCN-v2, arXiv:2008.13535)."""
+    return x0 * (xl @ W.T + bias) + xl

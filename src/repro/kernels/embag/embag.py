@@ -1,0 +1,62 @@
+"""EmbeddingBag Pallas kernel (scalar-prefetched gather + accumulate).
+
+The recsys hot path: sparse-feature bags gather rows from a huge HBM table
+and reduce them.  The TPU-native structure is *scalar prefetch*: bag
+indices land in SMEM ahead of the grid so each grid step's BlockSpec
+``index_map`` can select which table row the next DMA fetches — the gather
+is expressed as data-dependent block indexing, and Mosaic double-buffers
+the row DMAs against the accumulate.  (This is the standard TPU embedding
+pattern; contrast a GPU implementation which would use per-thread gathers.)
+
+Grid = (B, L): bag-major, so the output block (one bag row) stays resident
+in VMEM across the L accumulation steps and is flushed once.
+
+VMEM per step: one table row (D f32) + one out row — trivially small; the
+win is entirely in DMA scheduling, as the op is pure memory traffic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _embag_kernel(idx_ref, wt_ref, row_ref, out_ref):
+    b = pl.program_id(0)
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += wt_ref[b, l] * row_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag_pallas(
+    table: jnp.ndarray,   # [V, D]
+    idx: jnp.ndarray,     # [B, L] i32
+    wt: jnp.ndarray,      # [B, L] f32
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, L = idx.shape
+    V, D = table.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,           # idx, wt live in SMEM
+        grid=(B, L),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda b, l, idx_ref, wt_ref: (idx_ref[b, l], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda b, l, idx_ref, wt_ref: (b, 0)),
+    )
+    return pl.pallas_call(
+        _embag_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
+        interpret=interpret,
+    )(idx, wt, table)

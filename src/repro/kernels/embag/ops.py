@@ -1,0 +1,31 @@
+"""Public entry point for EmbeddingBag."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .embag import embedding_bag_pallas
+from .ref import embedding_bag_ref
+
+
+def embedding_bag(
+    table: jnp.ndarray,
+    idx: jnp.ndarray,
+    wt: jnp.ndarray | None = None,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Weighted bag-sum over embedding rows: out[b] = sum_l wt[b,l] table[idx[b,l]].
+
+    ``wt=None`` means plain sum (all-ones weights); use 0-weights for pads.
+    """
+    if wt is None:
+        wt = jnp.ones(idx.shape, jnp.float32)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return embedding_bag_ref(table, idx, wt)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return embedding_bag_pallas(table, idx, wt, interpret=interpret)

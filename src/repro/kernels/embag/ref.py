@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for EmbeddingBag (gather + weighted segment reduce).
+
+JAX has no native ``nn.EmbeddingBag``; per the taxonomy (§B.6 / §B.11) we
+build it from take + reduction.  This reference is also the production CPU
+path used by the recsys models.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(
+    table: jnp.ndarray,   # [V, D]
+    idx: jnp.ndarray,     # [B, L] i32 (pad slots may point anywhere)
+    wt: jnp.ndarray,      # [B, L] f32 (0 for pad slots)
+) -> jnp.ndarray:
+    """out[B, D] = sum_l wt[b,l] * table[idx[b,l]]."""
+    rows = table[idx]                       # [B, L, D]
+    return jnp.einsum("bld,bl->bd", rows, wt)

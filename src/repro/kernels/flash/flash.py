@@ -1,0 +1,140 @@
+"""Blocked causal flash-attention Pallas kernel (GQA-aware).
+
+FlashAttention's insight (arXiv:2205.14135) re-thought for TPU VMEM: tile
+Q into (block_q, Dh) tiles resident in VMEM, stream K/V in (block_k, Dh)
+tiles, and maintain the online-softmax running max/denominator in VMEM
+scratch so the [Sq, Skv] score matrix never exists in HBM.  On the MXU the
+two GEMMs per (q, k) tile are (block_q x Dh) @ (Dh x block_k) and
+(block_q x block_k) @ (block_k x Dh) — block sizes default to 128 so every
+matmul dim is systolic-array aligned.
+
+Grid: (batch*heads, Sq/block_q, Skv/block_k), kv innermost so the scratch
+carries across kv steps of one q tile.  GQA: the kv BlockSpec index_map
+folds the q-head -> kv-head mapping (h // group), so no repeated KV is ever
+materialized (that repeat is exactly what makes the XLA fallback
+memory-bound at GQA shapes).
+
+Causal handling: tiles entirely above the diagonal contribute nothing; the
+kernel masks per-element with absolute positions (q_offset supports decode
+where Sq << Skv) and `pl.when` skips the GEMMs for fully-masked tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, out_ref, acc_ref, m_ref, l_ref,
+                  *, scale, causal, q_offset, block_q, block_k, n_kv_blocks):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q + q_offset
+    k_start = ki * block_k
+
+    # tile fully above the diagonal? (first q row < first k row)
+    run = (not causal) or (q_start + block_q - 1 >= k_start)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0]                                   # [bq, Dh]
+        k = k_ref[0]                                   # [bk, Dh]
+        v = v_ref[0]                                   # [bk, Dh]
+        s = jax.lax.dot_general(
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                      # [bq, bk]
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, _NEG_INF)
+
+        m_prev = m_ref[...]                            # [bq, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)                         # [bq, bk]
+        corr = jnp.exp(m_prev - m_new)                 # [bq, 1]
+        l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = corr * acc_ref[...] + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _flush():
+        out_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            out_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_offset", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,   # [B, Hq, Sq, Dh]
+    k: jnp.ndarray,   # [B, Hkv, Skv, Dh]
+    v: jnp.ndarray,   # [B, Hkv, Skv, Dh]
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Hq, Sq, Dh = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, Skv)
+    group = Hq // Hkv
+    grid = (B * Hq, Sq // block_q, Skv // block_k)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        h = bh % Hq
+        b = bh // Hq
+        return (b * Hkv + h // group, ki, 0)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=Dh ** -0.5, causal=causal, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, n_kv_blocks=Skv // block_k,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, Dh), q_map),
+            pl.BlockSpec((1, block_k, Dh), kv_map),
+            pl.BlockSpec((1, block_k, Dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, Dh), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, Dh), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        q.reshape(B * Hq, Sq, Dh),
+        k.reshape(B * Hkv, Skv, Dh),
+        v.reshape(B * Hkv, Skv, Dh),
+    )
+    return out.reshape(B, Hq, Sq, Dh)

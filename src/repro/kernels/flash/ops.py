@@ -1,0 +1,34 @@
+"""Public entry point for attention: flash kernel on TPU, oracle elsewhere."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash import flash_attention_pallas
+from .ref import mha_ref
+
+
+def attention(
+    q, k, v,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    use_pallas: bool | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+):
+    """[B,Hq,Sq,Dh] x [B,Hkv,Skv,Dh]^2 -> [B,Hq,Sq,Dh] (GQA softmax attn)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return mha_ref(q, k, v, causal=causal, q_offset=q_offset)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Sq, Skv = q.shape[2], k.shape[2]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, q_offset=q_offset,
+        block_q=bq, block_k=bk, interpret=interpret,
+    )

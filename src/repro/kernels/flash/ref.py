@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for blocked causal (GQA) attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_ref(
+    q: jnp.ndarray,   # [B, Hq, Sq, Dh]
+    k: jnp.ndarray,   # [B, Hkv, Skv, Dh]
+    v: jnp.ndarray,   # [B, Hkv, Skv, Dh]
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Softmax attention with GQA head sharing.
+
+    ``q_offset`` positions the query block inside the kv sequence (decode:
+    Sq=1, q_offset=cache_len-1).  Causal masking uses absolute positions.
+    """
+    B, Hq, Sq, Dh = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    scale = Dh ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kq) * scale
+    if causal:
+        Skv = k.shape[2]
+        qpos = jnp.arange(Sq)[:, None] + q_offset
+        kpos = jnp.arange(Skv)[None, :]
+        mask = qpos >= kpos
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vq)

@@ -1,0 +1,55 @@
+"""Public entry point for the fused rank-1 bandit-state update."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .rank1 import rank1_update_pallas
+from .ref import rank1_update_ref
+
+_SUB = 8
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def rank1_update(
+    M, Minv, b, x, r, mask,
+    *,
+    use_pallas: bool | None = None,
+    block_users: int = 256,
+    interpret: bool | None = None,
+):
+    """(M', Minv', b') — fused masked Sherman-Morrison update.
+
+    Zero-padding users is exact (mask=0 rows are identity updates).
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return rank1_update_ref(M, Minv, b, x, r, mask)
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, d = b.shape
+    dp = _round_up(d, _SUB)
+    bu = min(block_users, _round_up(n, _SUB))
+    np_ = _round_up(n, bu)
+
+    def pad2(a):
+        out = jnp.zeros((np_, dp, dp), jnp.float32).at[:n, :d, :d].set(a)
+        # keep padded diagonal at 1 so Minv stays well-conditioned
+        i = jnp.arange(d, dp)
+        return out.at[:, i, i].set(1.0)
+
+    Mp, Minvp = pad2(M), pad2(Minv)
+    bp = jnp.zeros((np_, dp), jnp.float32).at[:n, :d].set(b)
+    xp = jnp.zeros((np_, dp), jnp.float32).at[:n, :d].set(x)
+    rp = jnp.zeros((np_,), jnp.float32).at[:n].set(r)
+    mp = jnp.zeros((np_,), jnp.float32).at[:n].set(mask.astype(jnp.float32))
+
+    Mo, Minvo, bo = rank1_update_pallas(
+        Mp, Minvp, bp, xp, rp, mp, block_users=bu, interpret=interpret
+    )
+    return Mo[:n, :d, :d], Minvo[:n, :d, :d], bo[:n, :d]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused masked rank-1 bandit-state update."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rank1_update_ref(
+    M: jnp.ndarray,       # [n, d, d]
+    Minv: jnp.ndarray,    # [n, d, d]
+    b: jnp.ndarray,       # [n, d]
+    x: jnp.ndarray,       # [n, d] chosen contexts
+    r: jnp.ndarray,       # [n]    realized rewards
+    mask: jnp.ndarray,    # [n] bool
+):
+    """Returns (M', Minv', b') after one masked interaction per user.
+
+    Minv' is the exact Sherman-Morrison inverse of M' = M + mask x x^T.
+    A masked-out user is an identity update (x -> 0 path is exact).
+    """
+    m = mask.astype(x.dtype)
+    xm = x * m[:, None]
+    Mx = jnp.einsum("nij,nj->ni", Minv, xm)
+    denom = 1.0 + jnp.einsum("ni,ni->n", xm, Mx)
+    Minv_new = Minv - jnp.einsum("ni,nj->nij", Mx, Mx) / denom[:, None, None]
+    M_new = M + jnp.einsum("ni,nj->nij", xm, xm)
+    b_new = b + (r * m)[:, None] * x
+    return M_new, Minv_new, b_new

@@ -1,0 +1,55 @@
+"""Public entry point for fused UCB scoring: pads, dispatches, unpads."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ref import ucb_scores_ref
+from .ucb import ucb_scores_pallas
+
+_LANE = 128     # TPU lane width
+_SUB = 8        # f32 sublane multiple
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def ucb_scores(
+    w: jnp.ndarray,
+    Minv: jnp.ndarray,
+    contexts: jnp.ndarray,
+    occ: jnp.ndarray,
+    alpha: float,
+    *,
+    use_pallas: bool | None = None,
+    block_users: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """[n,K] UCB scores.  Pallas on TPU, jnp oracle elsewhere (or forced).
+
+    Padding is exact: zero-padded feature columns contribute 0 to both the
+    estimate and the quadratic form; padded users/candidates are sliced off.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return ucb_scores_ref(w, Minv, contexts, occ, alpha)
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, K, d = contexts.shape
+    dp = _round_up(d, _SUB)
+    Kp = _round_up(K, _LANE)
+    bu = min(block_users, _round_up(n, _SUB))
+    np_ = _round_up(n, bu)
+
+    wp = jnp.zeros((np_, dp), jnp.float32).at[:n, :d].set(w)
+    Mp = jnp.zeros((np_, dp, dp), jnp.float32).at[:n, :d, :d].set(Minv)
+    cp = jnp.zeros((np_, Kp, dp), jnp.float32).at[:n, :K, :d].set(contexts)
+    op = jnp.zeros((np_,), occ.dtype).at[:n].set(occ)
+
+    out = ucb_scores_pallas(
+        wp, Mp, cp, op, alpha, block_users=bu, interpret=interpret
+    )
+    return out[:n, :K]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused UCB scoring kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ucb_scores_ref(
+    w: jnp.ndarray,         # [n, d]
+    Minv: jnp.ndarray,      # [n, d, d]
+    contexts: jnp.ndarray,  # [n, K, d]
+    occ: jnp.ndarray,       # [n] i32
+    alpha: float,
+) -> jnp.ndarray:
+    """scores[n, K] = contexts.w + alpha sqrt(ctx Minv ctx) sqrt(log1p(occ))."""
+    est = jnp.einsum("nkd,nd->nk", contexts, w)
+    quad = jnp.einsum("nkd,nde,nke->nk", contexts, Minv, contexts)
+    bonus = alpha * jnp.sqrt(jnp.maximum(quad, 0.0)) * jnp.sqrt(
+        jnp.log1p(occ.astype(contexts.dtype))
+    )[:, None]
+    return est + bonus

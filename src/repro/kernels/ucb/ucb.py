@@ -1,0 +1,87 @@
+"""Fused UCB scoring Pallas kernel — DistCLUB's serving hot path.
+
+One grid step scores a *block of users* against their candidate sets:
+
+    est[u,k]   = ctx[u,k,:] . w[u,:]
+    quad[u,k]  = ctx[u,k,:] . Minv[u] . ctx[u,k,:]
+    score[u,k] = est + alpha * sqrt(quad) * sqrt(log1p(occ[u]))
+
+TPU mapping (this is the hardware-adaptation story from DESIGN.md §2): the
+paper's d is tiny (19-25), far below the 128x128 MXU, so a per-user matvec
+would waste >80% of the systolic array.  We instead make *users* the
+parallel axis: a block of ``block_users`` users lives in VMEM at once and
+the contraction over d runs as batched dot_generals whose batch dim fills
+the MXU pipeline.  d and K are zero-padded to lane multiples by ``ops.py``;
+zero columns contribute nothing to either the estimate or the quadratic
+form, so padding is exact (not approximate).
+
+VMEM budget per grid step (f32 words):
+    ctx     block_users * K * d
+    Minv    block_users * d * d
+    w,occ   block_users * (d + 1)
+    out     block_users * K
+With the default block_users=256, K=128, d=32: ~1.3 MiB << 16 MiB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ucb_kernel(w_ref, minv_ref, ctx_ref, occ_ref, alpha_ref, out_ref):
+    ctx = ctx_ref[...]          # [Bu, K, d]
+    minv = minv_ref[...]        # [Bu, d, d]
+    w = w_ref[...]              # [Bu, d]
+    occ = occ_ref[...]          # [Bu]
+    alpha = alpha_ref[0]
+
+    est = jax.lax.dot_general(
+        ctx, w,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                           # [Bu, K]
+    t = jax.lax.dot_general(
+        ctx, minv,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                           # [Bu, K, d]
+    quad = jnp.sum(t * ctx, axis=-1)                   # [Bu, K]
+    bonus = alpha * jnp.sqrt(jnp.maximum(quad, 0.0)) * jnp.sqrt(
+        jnp.log1p(occ.astype(jnp.float32))
+    )[:, None]
+    out_ref[...] = est + bonus
+
+
+@functools.partial(jax.jit, static_argnames=("block_users", "interpret"))
+def ucb_scores_pallas(
+    w: jnp.ndarray,          # [n, d]   (n % block_users == 0; pad in ops.py)
+    Minv: jnp.ndarray,       # [n, d, d]
+    contexts: jnp.ndarray,   # [n, K, d]
+    occ: jnp.ndarray,        # [n] i32
+    alpha: float,
+    *,
+    block_users: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    n, K, d = contexts.shape
+    assert n % block_users == 0, (n, block_users)
+    grid = (n // block_users,)
+    alpha_arr = jnp.full((1,), alpha, jnp.float32)
+
+    return pl.pallas_call(
+        _ucb_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_users, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_users, d, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_users, K, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_users,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_users, K), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, K), jnp.float32),
+        interpret=interpret,
+    )(w, Minv, contexts, occ, alpha_arr)

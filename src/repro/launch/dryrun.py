@@ -1,0 +1,195 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the
+production meshes and record memory/cost/collective analysis.
+
+MUST set the host-device override before any jax import (jax locks the
+device count at first init) — hence the first two lines.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--filter lm]
+Results: results/dryrun/<arch>__<shape>__<pod|single>.json
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import pathlib       # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(\S+?)\[([\d,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_TUPLE_COLL_RE = re.compile(
+    r"=\s+\(([^)]*)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Per-op-kind byte totals from the partitioned HLO (per device).
+
+    Model: bytes moved per device ~ output size for gather/scatter/permute
+    style ops, 2x for all-reduce (reduce + broadcast phases of a ring).
+    """
+    out = {}
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line) or _TUPLE_COLL_RE.search(line)
+        if not m:
+            continue
+        if m.re is _COLL_RE:
+            dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+            nbytes = _shape_bytes(dtype, dims)
+        else:
+            inner, kind = m.group(1), m.group(2)
+            nbytes = sum(
+                _shape_bytes(t, d) for t, d in _SHAPE_RE.findall(inner)
+            )
+        if kind == "all-reduce":
+            nbytes *= 2
+        out[kind] = out.get(kind, 0) + nbytes
+        out["total"] = out.get("total", 0) + nbytes
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             kv_quant: bool = False) -> dict:
+    from .. import configs  # noqa: F401  (registers archs)
+    from . import mesh as mesh_lib, steps
+
+    from ..distributed import sharding as _sh
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with _sh.hint_mesh(mesh):
+        bundle = steps.build_cell(arch, shape, mesh, kv_quant=kv_quant)
+    if bundle.prejit:
+        jitted = bundle.step_fn
+    else:
+        kwargs = {}
+        if bundle.out_shardings is not None:
+            kwargs["out_shardings"] = bundle.out_shardings
+        jitted = jax.jit(
+            bundle.step_fn, in_shardings=bundle.in_shardings,
+            donate_argnums=bundle.donate_argnums, **kwargs,
+        )
+    with _sh.hint_mesh(mesh):
+        lowered = jitted.lower(*bundle.abstract_args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    colls = parse_collectives(compiled.as_text())
+
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": list(mesh.shape.values()),
+        "axes": list(mesh.axis_names),
+        "multi_pod": multi_pod,
+        "kind": bundle.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_device": cost.get("flops", 0.0) if cost else None,
+        "bytes_per_device": cost.get("bytes accessed", 0.0) if cost else None,
+        "collective_bytes_per_device": colls,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        },
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--filter", default="",
+                    help="substring filter on arch id")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV-cache variant for LM decode cells")
+    args = ap.parse_args()
+
+    from .. import configs
+
+    if args.all:
+        cells = [(a, s) for a, s in configs.all_cells()
+                 if args.filter in a]
+    else:
+        cells = [(args.arch, args.shape)]
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    tag = "pod2" if args.multi_pod else "pod1"
+    if args.kv_quant:
+        tag += "_kvq"
+    failures = []
+    for arch, shape in cells:
+        out = RESULTS / f"{arch}__{shape}__{tag}.json"
+        if out.exists() and not args.force:
+            print(f"[skip] {arch} x {shape} ({tag}) — cached")
+            continue
+        print(f"[dryrun] {arch} x {shape} ({tag}) ...", flush=True)
+        try:
+            rec = run_cell(arch, shape, args.multi_pod,
+                           kv_quant=args.kv_quant)
+            out.write_text(json.dumps(rec, indent=1))
+            mem = rec["memory"]
+            print(
+                f"  ok: compile {rec['compile_s']}s, "
+                f"flops/dev {rec['flops_per_device']:.3g}, "
+                f"args/dev {(mem['argument_bytes'] or 0)/2**30:.2f} GiB, "
+                f"temp/dev {(mem['temp_bytes'] or 0)/2**30:.2f} GiB, "
+                f"coll/dev {rec['collective_bytes_per_device'].get('total', 0)/2**20:.1f} MiB",
+                flush=True,
+            )
+        except Exception as e:  # noqa: BLE001 — record and continue
+            failures.append((arch, shape, repr(e)))
+            print(f"  FAIL: {e}\n{traceback.format_exc()}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for a, s, e in failures:
+            print(f"  {a} x {s}: {e[:200]}")
+        raise SystemExit(1)
+    print("\nall cells compiled.")
+
+
+if __name__ == "__main__":
+    main()

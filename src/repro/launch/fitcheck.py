@@ -1,0 +1,51 @@
+"""HBM fit report over the dry-run artifacts.
+
+    PYTHONPATH=src python -m repro.launch.fitcheck [--budget-gib 16]
+
+For each compiled cell: resident bytes (arguments) vs the per-chip HBM
+budget, plus the XLA:CPU temp as an upper bound and the verdict.  Exits
+non-zero if any cell's RESIDENT state exceeds the budget (temp is advisory
+— see EXPERIMENTS.md on XLA:CPU inflation).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget-gib", type=float, default=16.0)
+    ap.add_argument("--tag", default="pod1")
+    args = ap.parse_args()
+
+    budget = args.budget_gib * 2 ** 30
+    rows = []
+    for p in sorted(RESULTS.glob(f"*__{args.tag}.json")):
+        r = json.loads(p.read_text())
+        args_b = r["memory"]["argument_bytes"] or 0
+        out_b = r["memory"]["output_bytes"] or 0
+        alias_b = r["memory"]["alias_bytes"] or 0
+        temp_b = r["memory"]["temp_bytes"] or 0
+        resident = args_b + max(0, out_b - alias_b)   # donated buffers alias
+        rows.append((r["arch"], r["shape"], resident, temp_b,
+                     resident <= budget))
+
+    print(f"{'arch':34s}{'shape':16s}{'resident GiB':>13s}"
+          f"{'temp GiB (CPU)':>16s}  fit")
+    bad = 0
+    for arch, shape, res, temp, ok in rows:
+        flag = "OK" if ok else "OVER"
+        bad += 0 if ok else 1
+        print(f"{arch:34s}{shape:16s}{res/2**30:13.2f}{temp/2**30:16.2f}  "
+              f"{flag}")
+    print(f"\n{len(rows) - bad}/{len(rows)} cells fit "
+          f"{args.budget_gib:.0f} GiB resident budget")
+    raise SystemExit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""GQA attention with RoPE, optional qk-norm, KV cache, chunked softmax.
+
+Two execution paths with identical semantics:
+
+* ``repro.kernels.flash`` Pallas kernel — the TPU target.
+* ``chunked_attention`` below — an XLA-level flash equivalent (lax.scan
+  over KV chunks with online softmax).  The [Sq, Skv] score matrix never
+  materializes, so compiled memory/cost reflect the real algorithm.  This
+  is what the CPU dry-run lowers (Mosaic kernels don't compile on the CPU
+  backend) and is also the long-context fallback on TPU.
+
+The KV cache is laid out [B, Hkv, S_max, Dh] per layer (stacked to
+[L, ...] by the scan-over-layers transformer); decode writes one position
+and attends to the first ``pos+1`` entries via masking.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..kernels.flash import ops as flash_ops
+from . import layers
+
+
+def chunked_attention(
+    q: jnp.ndarray,        # [B, Hq, Sq, Dh]
+    k: jnp.ndarray,        # [B, Hkv, Skv, Dh]
+    v: jnp.ndarray,        # [B, Hkv, Skv, Dh]
+    *,
+    causal: bool,
+    q_offset: jnp.ndarray | int = 0,
+    kv_len: jnp.ndarray | None = None,   # valid cache length (decode)
+    chunk: int = 1024,
+) -> jnp.ndarray:
+    """Online-softmax attention, scanning KV in chunks."""
+    B, Hq, Sq, Dh = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    scale = Dh ** -0.5
+    chunk = min(chunk, Skv)
+    assert Skv % chunk == 0, (Skv, chunk)
+    n_chunks = Skv // chunk
+
+    # fold q heads onto kv heads: [B, Hkv, group, Sq, Dh]
+    qg = q.reshape(B, Hkv, group, Sq, Dh)
+    kc = k.reshape(B, Hkv, n_chunks, chunk, Dh)
+    vc = v.reshape(B, Hkv, n_chunks, chunk, Dh)
+    kc = jnp.moveaxis(kc, 2, 0)       # [n_chunks, B, Hkv, chunk, Dh]
+    vc = jnp.moveaxis(vc, 2, 0)
+
+    qpos = jnp.arange(Sq) + q_offset                    # [Sq]
+
+    def step(carry, inp):
+        acc, m, l = carry
+        kj, vj, j = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kj) * scale
+        kpos = j * chunk + jnp.arange(chunk)            # [chunk]
+        mask = jnp.ones((Sq, chunk), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if kv_len is not None:
+            mask &= kpos[None, :] < kv_len
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (m_new = -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l = corr * l + jnp.sum(p, axis=-1)
+        acc = corr[..., None] * acc + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(vj.dtype), vj
+        ).astype(jnp.float32)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, Hkv, group, Sq, Dh), jnp.float32)
+    m0 = jnp.full((B, Hkv, group, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, group, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0), (kc, vc, jnp.arange(n_chunks))
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Hq, Sq, Dh).astype(q.dtype)
+
+
+# --- full attention block -------------------------------------------------------
+
+
+def init_attention(key, cfg, dtype=jnp.bfloat16):
+    """cfg needs: d_model, n_heads, n_kv_heads, d_head, qk_norm."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p = {
+        "wq": layers.dense_init(k1, d, H * Dh, dtype),
+        "wk": layers.dense_init(k2, d, Hkv * Dh, dtype),
+        "wv": layers.dense_init(k3, d, Hkv * Dh, dtype),
+        "wo": layers.dense_init(k4, H * Dh, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.init_rms_norm(Dh, jnp.float32)
+        p["k_norm"] = layers.init_rms_norm(Dh, jnp.float32)
+    return p
+
+
+def attention_specs(cfg):
+    p = {
+        "wq": P(None, "model"),
+        "wk": P(None, "model"),
+        "wv": P(None, "model"),
+        "wo": P("model", None),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.rms_norm_specs()
+        p["k_norm"] = layers.rms_norm_specs()
+    return p
+
+
+def attention_fwd(
+    params, cfg, x: jnp.ndarray,
+    *,
+    positions: jnp.ndarray,          # [S] absolute positions of x tokens
+    cache: tuple | None = None,      # (k_cache, v_cache) [B,Hkv,Smax,Dh]
+    cache_pos: jnp.ndarray | int = 0,  # write offset into the cache
+    causal: bool = True,
+    attn_chunk: int = 1024,
+):
+    """Returns (out [B,S,d], new_cache)."""
+    B, S, d = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+
+    q = (x @ params["wq"]).reshape(B, S, H, Dh)
+    k = (x @ params["wk"]).reshape(B, S, Hkv, Dh)
+    v = (x @ params["wv"]).reshape(B, S, Hkv, Dh)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, params["q_norm"]["scale"]).astype(q.dtype)
+        k = layers.rms_norm(k, params["k_norm"]["scale"]).astype(k.dtype)
+    q = layers.apply_rope(q.swapaxes(1, 2), positions, cfg.rope_base)
+    k = layers.apply_rope(k.swapaxes(1, 2), positions, cfg.rope_base)
+    v = v.swapaxes(1, 2)
+
+    if cache is None:
+        out = chunked_attention(
+            q, k, v, causal=causal, q_offset=0, chunk=attn_chunk
+        )
+        new_cache = None
+    else:
+        kc, vc = cache
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, cache_pos, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, cache_pos, axis=2)
+        kv_len = cache_pos + S
+        out = chunked_attention(
+            q, kc, vc, causal=causal, q_offset=cache_pos, kv_len=kv_len,
+            chunk=attn_chunk,
+        )
+        new_cache = (kc, vc)
+
+    out = out.swapaxes(1, 2).reshape(B, S, H * Dh)
+    return out @ params["wo"], new_cache

@@ -1,0 +1,261 @@
+"""GAT (arXiv:1710.10903) via segment ops — the JAX-native message-passing path.
+
+JAX sparse is BCOO-only, so (per the assignment) message passing is built
+from first principles: SDDMM-style edge scores -> per-destination segment
+softmax (segment_max / segment_sum) -> SpMM-style weighted scatter.  All
+four assigned shapes flow through the same forward:
+
+  full_graph_sm / ogb_products : full-batch edge list
+  minibatch_lg                 : fixed-fanout sampled blocks (see
+                                 ``NeighborSampler``; host-side, per the
+                                 production pattern of feeding fixed-shape
+                                 device batches)
+  molecule                     : batched small graphs = one disjoint union
+                                 (edge ids offset per graph)
+
+Sharding: nodes (and per-node features/labels) are row-sharded over the
+flattened mesh; the edge list is sharded by destination block so the
+segment reductions stay shard-local; source-feature fetches are global
+takes that GSPMD lowers to gather collectives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from . import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str = "gat"
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    d_feat: int = 1433
+    n_classes: int = 7
+    dtype: Any = jnp.float32
+    # §Perf iteration (ogb_products cell): the per-layer node-feature
+    # all_gather dominates (collective-bound); int8 gathers with per-row
+    # scales halve the bf16 gather bytes (straight-through gradients; the
+    # backward reduce-scatter stays f32).  Off by default — enabled by the
+    # large full-graph cell config.
+    quantized_gather: bool = False
+
+
+def init_gat(key, cfg: GNNConfig):
+    params = []
+    d_in = cfg.d_feat
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        dh = cfg.n_classes if last else cfg.d_hidden
+        k1, k2, k3, key = jax.random.split(key, 4)
+        params.append({
+            "W": layers.dense_init(k1, d_in, cfg.n_heads * dh, cfg.dtype),
+            "a_src": jax.random.normal(k2, (cfg.n_heads, dh), cfg.dtype) * 0.1,
+            "a_dst": jax.random.normal(k3, (cfg.n_heads, dh), cfg.dtype) * 0.1,
+        })
+        d_in = cfg.n_heads * dh if not last else cfg.n_classes
+    return params
+
+
+def gat_specs(cfg: GNNConfig):
+    # GAT params are tiny (~100k); replicate them and let nodes/edges carry
+    # all the parallelism (head counts like 8 don't divide a 16-way axis).
+    return [
+        {"W": P(), "a_src": P(), "a_dst": P()}
+        for _ in range(cfg.n_layers)
+    ]
+
+
+def _gat_layer(p, x, src, dst, n_nodes, n_heads, dh, *, last: bool):
+    h = (x @ p["W"]).reshape(-1, n_heads, dh)             # [N, H, dh]
+    alpha_src = jnp.sum(h * p["a_src"], axis=-1)           # [N, H]
+    alpha_dst = jnp.sum(h * p["a_dst"], axis=-1)
+    e = jax.nn.leaky_relu(alpha_src[src] + alpha_dst[dst], 0.2)  # [E, H]
+    # per-destination segment softmax
+    m = jax.ops.segment_max(e, dst, num_segments=n_nodes)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    pexp = jnp.exp(e - m[dst])
+    z = jax.ops.segment_sum(pexp, dst, num_segments=n_nodes)
+    att = pexp / jnp.maximum(z[dst], 1e-9)                 # [E, H]
+    msg = att[..., None] * h[src]                          # [E, H, dh]
+    out = jax.ops.segment_sum(msg, dst, num_segments=n_nodes)
+    if last:
+        return jnp.mean(out, axis=1)                       # [N, n_classes]
+    return jax.nn.elu(out.reshape(n_nodes, n_heads * dh))
+
+
+def gat_fwd(params, cfg: GNNConfig, feats, src, dst):
+    """feats [N, F], src/dst [E] i32 -> logits [N, n_classes]."""
+    n = feats.shape[0]
+    x = feats
+    for i, p in enumerate(params):
+        last = i == cfg.n_layers - 1
+        dh = cfg.n_classes if last else cfg.d_hidden
+        x = _gat_layer(p, x, src, dst, n, cfg.n_heads, dh, last=last)
+    return x
+
+
+def gat_loss(params, cfg: GNNConfig, feats, src, dst, labels, mask):
+    logits = gat_fwd(params, cfg, feats, src, dst).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    m = mask.astype(jnp.float32)
+    return jnp.sum((lse - ll) * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+# --- sharded message passing ---------------------------------------------------
+#
+# GSPMD's scatter handling replicates edge tensors (28 GiB/device for
+# ogbn-products in the dry-run) — so the distributed path is an explicit
+# shard_map with the production-GNN layout contract: edges are partitioned
+# by DESTINATION block (each device's edge shard has dst inside its node
+# shard), making every segment reduction shard-local.  The only collective
+# is one all_gather of the (small) node embeddings per layer so edge
+# sources can read remote rows.
+
+
+def _gat_layer_local(p, h_all, src, dst_global, dst_local, n_local, n_heads,
+                     dh, *, last):
+    """h_all: gathered [N, H*dh_in] node features; src/dst_global: global
+    ids; dst_local in [0, n_local).  Returns [n_local, ...]."""
+    h = h_all.reshape(h_all.shape[0], n_heads, dh)
+    alpha_src = jnp.sum(h * p["a_src"], axis=-1)            # [N, H]
+    alpha_dst = jnp.sum(h * p["a_dst"], axis=-1)
+    e = jax.nn.leaky_relu(alpha_src[src] + alpha_dst[dst_global], 0.2)
+    m = jax.ops.segment_max(e, dst_local, num_segments=n_local)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    pexp = jnp.exp(e - m[dst_local])
+    z = jax.ops.segment_sum(pexp, dst_local, num_segments=n_local)
+    att = pexp / jnp.maximum(z[dst_local], 1e-9)
+    msg = att[..., None] * h[src]
+    out = jax.ops.segment_sum(msg, dst_local, num_segments=n_local)
+    if last:
+        return jnp.mean(out, axis=1)
+    return jax.nn.elu(out.reshape(n_local, n_heads * dh))
+
+
+def gat_loss_local(params, cfg: GNNConfig, feats, src, dst, labels, mask,
+                   axes):
+    """Per-shard GAT loss body (runs inside shard_map).
+
+    feats/labels/mask: this shard's node rows; src/dst: this shard's edges
+    (dst guaranteed local by the dst-block partitioning contract); ids are
+    global — dst is localized with the shard's row offset.
+    """
+    n_local = feats.shape[0]
+    idx = jax.lax.axis_index(axes)
+    row0 = (idx * n_local).astype(dst.dtype)
+    dst_local = jnp.clip(dst - row0, 0, n_local - 1)
+
+    def make_gather():
+        """all_gather of node features; int8 per-row-scale quantized when
+        cfg.quantized_gather (custom_vjp: the backward is the exact
+        reduce-scatter of the cotangents — quantization only touches the
+        forward traffic)."""
+        if not cfg.quantized_gather:
+            return lambda h: jax.lax.all_gather(
+                h.astype(jnp.bfloat16), axes, tiled=True
+            ).astype(jnp.float32)
+
+        @jax.custom_vjp
+        def qg(h):
+            scale = jnp.maximum(
+                jnp.max(jnp.abs(h), axis=-1, keepdims=True) / 127.0, 1e-9)
+            q = jnp.clip(jnp.round(h / scale), -127, 127).astype(jnp.int8)
+            q_all = jax.lax.all_gather(q, axes, tiled=True)
+            s_all = jax.lax.all_gather(scale.astype(jnp.bfloat16), axes,
+                                       tiled=True)
+            return q_all.astype(jnp.float32) * s_all.astype(jnp.float32)
+
+        def fwd(h):
+            return qg(h), None
+
+        def bwd(_, ct):
+            return (jax.lax.psum_scatter(ct, axes, scatter_dimension=0,
+                                         tiled=True),)
+
+        qg.defvjp(fwd, bwd)
+        return qg
+
+    gather_features = make_gather()
+
+    x_local = feats
+    for i, p in enumerate(params):
+        last = i == cfg.n_layers - 1
+        dh = cfg.n_classes if last else cfg.d_hidden
+        h_local = x_local @ p["W"]
+        h_all = gather_features(h_local)                     # [N, H*dh]
+        x_local = _gat_layer_local(
+            p, h_all, src, dst, dst_local, n_local, cfg.n_heads, dh,
+            last=last)
+
+    logits = x_local.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    mf = mask.astype(jnp.float32)
+    num = jax.lax.psum(jnp.sum((lse - ll) * mf), axes)
+    den = jax.lax.psum(jnp.sum(mf), axes)
+    return num / jnp.maximum(den, 1.0)
+
+
+# --- neighbor sampler (host side) ------------------------------------------------
+
+
+class NeighborSampler:
+    """Fixed-fanout k-hop sampler over a CSR adjacency (numpy, host side).
+
+    Produces fixed-shape padded blocks — the device graph never changes
+    shape, which is what keeps the sampled-training path jit/pjit friendly
+    (and straggler-free: every round is the same amount of work).
+    """
+
+    def __init__(self, n_nodes: int, src: np.ndarray, dst: np.ndarray):
+        order = np.argsort(dst, kind="stable")
+        self.nbr = src[order]
+        counts = np.bincount(dst, minlength=n_nodes)
+        self.offsets = np.concatenate([[0], np.cumsum(counts)])
+        self.n_nodes = n_nodes
+
+    def sample(self, rng: np.random.Generator, seeds: np.ndarray,
+               fanouts: tuple[int, ...]):
+        """Sample a fixed-fanout union subgraph around ``seeds``.
+
+        Returns (nodes [N_tot] global ids, src [E], dst [E] local indices
+        into ``nodes``).  Shapes depend only on (len(seeds), fanouts):
+        N_tot = seeds * (1 + f1 + f1*f2 + ...), E = seeds * (f1 + f1*f2 + ...).
+        Missing neighbors pad with self-loops (the standard self-edge
+        convention), keeping every round identically shaped.
+        """
+        frontier = seeds
+        nodes = [seeds]
+        srcs, dsts = [], []
+        base = 0
+        for f in fanouts:
+            lo = self.offsets[frontier]
+            hi = self.offsets[frontier + 1]
+            deg = hi - lo
+            r = rng.integers(0, np.maximum(deg, 1)[:, None],
+                             (len(frontier), f))
+            idx = lo[:, None] + r
+            picked = np.where(
+                deg[:, None] > 0, self.nbr[np.minimum(idx, len(self.nbr) - 1)],
+                frontier[:, None],   # isolated node -> self loop
+            )
+            new = picked.reshape(-1)
+            srcs.append(base + len(frontier) + np.arange(len(new), dtype=np.int64))
+            dsts.append(base + np.repeat(np.arange(len(frontier), dtype=np.int64), f))
+            base += len(frontier)
+            nodes.append(new)
+            frontier = new
+        return (
+            np.concatenate(nodes),
+            np.concatenate(srcs).astype(np.int32),
+            np.concatenate(dsts).astype(np.int32),
+        )

@@ -1,0 +1,114 @@
+"""Shared model layers (pure-functional, params as nested dicts).
+
+Every ``init_*`` has a matching ``*_specs`` producing a PartitionSpec
+pytree of the same structure; the dryrun/launcher zips them to build
+NamedShardings.  Convention for spec names: "model" = tensor-parallel
+axis, "data" = fsdp/zero axis; the mesh mapper in launch/mesh.py resolves
+them to physical axes (and prepends "pod" where needed).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def init_rms_norm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm_specs():
+    return {"scale": P()}
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale + bias
+
+
+def init_layer_norm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layer_norm_specs():
+    return {"scale": P(), "bias": P()}
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return jax.random.normal(key, (d_in, d_out), dtype) * scale
+
+
+# --- rotary position embedding -------------------------------------------------
+
+def rope_freqs(d_head: int, base: float = 10000.0):
+    return 1.0 / (base ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, base: float = 10000.0):
+    """x: [..., S, Dh]; positions: [S] (or broadcastable)."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, base)                        # [Dh/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [S, Dh/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    rot = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return rot.astype(x.dtype)
+
+
+# --- MLPs ---------------------------------------------------------------------
+
+def init_swiglu(key, d: int, f: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d, f, dtype),
+        "up": dense_init(k2, d, f, dtype),
+        "down": dense_init(k3, f, d, dtype),
+    }
+
+
+def swiglu_specs():
+    return {
+        "gate": P(None, "model"),
+        "up": P(None, "model"),
+        "down": P("model", None),
+    }
+
+
+def swiglu(params, x):
+    h = jax.nn.silu(x @ params["gate"]) * (x @ params["up"])
+    return h @ params["down"]
+
+
+def init_mlp(key, d_in: int, hidden: tuple[int, ...], d_out: int | None = None,
+             dtype=jnp.float32):
+    """Plain relu MLP (recsys towers).  Layout: list of {w, b}."""
+    dims = [d_in, *hidden] + ([d_out] if d_out is not None else [])
+    keys = jax.random.split(key, len(dims) - 1)
+    return [
+        {"w": dense_init(k, a, b, dtype), "b": jnp.zeros((b,), dtype)}
+        for k, a, b in zip(keys, dims[:-1], dims[1:])
+    ]
+
+
+def mlp_specs(n_layers: int):
+    return [{"w": P(None, "model"), "b": P("model")} if i % 2 == 0
+            else {"w": P("model", None), "b": P()}
+            for i in range(n_layers)]
+
+
+def mlp(params, x, final_act: bool = False):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(params) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x

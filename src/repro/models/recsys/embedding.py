@@ -1,0 +1,34 @@
+"""Sharded embedding tables + EmbeddingBag for the recsys archs.
+
+JAX has no native EmbeddingBag / CSR sparse — built here (per assignment)
+from take + segment_sum, with the Pallas scalar-prefetch kernel
+(``repro.kernels.embag``) as the TPU hot path.  Tables are row-sharded over
+the "model" axis (table-wise + row-wise parallel — the standard production
+layout for 10^6..10^9-row tables); lookups over sharded rows lower to
+gather collectives under GSPMD.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ...kernels.embag import ops as embag_ops
+
+
+def init_table(key, vocab: int, dim: int, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, dim), dtype) * (dim ** -0.5)
+
+
+def table_specs():
+    return P("model", None)
+
+
+def lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Plain row gather: ids [...], table [V, D] -> [..., D]."""
+    return table[ids]
+
+
+def bag_lookup(table, ids, weights=None, *, use_pallas=None):
+    """Multi-hot bag sum: ids [B, L] -> [B, D] (0-weight = pad)."""
+    return embag_ops.embedding_bag(table, ids, weights, use_pallas=use_pallas)

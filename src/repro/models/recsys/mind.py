@@ -1,0 +1,125 @@
+"""MIND (arXiv:1904.08030): multi-interest extraction via capsule routing.
+
+User history -> behavior capsules -> ``n_interests`` interest capsules via
+B2I dynamic routing (squash nonlinearity, ``capsule_iters`` routing
+iterations with *fixed* (untrained) coupling updates, per the paper) ->
+label-aware attention picks the interest for scoring.
+
+Routing is a fixed-iteration ``lax.fori_loop``-free scan (3 iters) so the
+HLO stays static; the routing logits are stop-gradiented like the paper's
+dynamic routing (gradients flow through the final weighted sum only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .. import layers
+from . import embedding
+
+
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    name: str = "mind"
+    n_items: int = 1 << 20
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    seq_len: int = 50
+    n_negatives: int = 127
+    pow_p: float = 2.0          # label-aware attention sharpness
+    dtype: Any = jnp.float32
+
+
+def init_mind(key, cfg: MINDConfig):
+    k_e, k_s = jax.random.split(key)
+    return {
+        "item_embed": embedding.init_table(
+            k_e, cfg.n_items, cfg.embed_dim, cfg.dtype),
+        # shared bilinear routing map S (B2I routing, paper eq. 5)
+        "S": layers.dense_init(k_s, cfg.embed_dim, cfg.embed_dim, cfg.dtype),
+    }
+
+
+def mind_specs(cfg: MINDConfig):
+    return {"item_embed": embedding.table_specs(), "S": P()}
+
+
+def _squash(v, axis=-1):
+    n2 = jnp.sum(jnp.square(v), axis=axis, keepdims=True)
+    return (n2 / (1.0 + n2)) * v / jnp.sqrt(n2 + 1e-9)
+
+
+def interest_capsules(params, cfg: MINDConfig, hist_ids, key=None):
+    """hist_ids [B, L] -> interests [B, K, d] via dynamic routing."""
+    e = embedding.lookup(params["item_embed"], hist_ids)      # [B, L, d]
+    u = e @ params["S"]                                        # [B, L, d]
+    B, L, d = u.shape
+    K = cfg.n_interests
+    mask = (hist_ids > 0).astype(jnp.float32)                  # [B, L]
+
+    # fixed random-ish init of routing logits (paper: random init; we use a
+    # deterministic hash of positions so serving is reproducible)
+    b0 = jnp.sin(
+        jnp.arange(L)[:, None] * (1.0 + jnp.arange(K)[None, :])
+    ) * 0.1
+    blog = jnp.broadcast_to(b0, (B, L, K))
+
+    def routing_iter(blog, _):
+        w = jax.nn.softmax(blog, axis=-1) * mask[..., None]    # [B, L, K]
+        z = jnp.einsum("blk,bld->bkd", w, jax.lax.stop_gradient(u))
+        cap = _squash(z)                                       # [B, K, d]
+        blog = blog + jnp.einsum("bld,bkd->blk",
+                                 jax.lax.stop_gradient(u), cap)
+        return blog, cap
+
+    blog, caps = jax.lax.scan(
+        routing_iter, blog, None, length=cfg.capsule_iters
+    )
+    cap = caps[-1]
+    # final pass with gradient flowing through u
+    w = jax.nn.softmax(blog, axis=-1) * mask[..., None]
+    return _squash(jnp.einsum("blk,bld->bkd", w, u))           # [B, K, d]
+
+
+def label_aware_scores(interests, item_e, pow_p):
+    """interests [B, K, d], item_e [B, T, d] -> scores [B, T]."""
+    sims = jnp.einsum("bkd,btd->btk", interests, item_e)       # [B, T, K]
+    att = jax.nn.softmax(jnp.power(jnp.abs(sims), pow_p)
+                         * jnp.sign(sims), axis=-1)
+    chosen = jnp.einsum("btk,bkd->btd", att, interests)
+    return jnp.sum(chosen * item_e, axis=-1)
+
+
+def mind_loss(params, cfg: MINDConfig, hist_ids, target_ids, key):
+    """Sampled-softmax loss: hist [B, L], target [B]."""
+    interests = interest_capsules(params, cfg, hist_ids)       # [B, K, d]
+    neg = jax.random.randint(key, (cfg.n_negatives,), 0, cfg.n_items)
+    pos_e = embedding.lookup(params["item_embed"], target_ids)  # [B, d]
+    neg_e = embedding.lookup(params["item_embed"], neg)         # [N, d]
+    cand = jnp.concatenate(
+        [pos_e[:, None, :],
+         jnp.broadcast_to(neg_e, (hist_ids.shape[0],) + neg_e.shape)], axis=1
+    )                                                           # [B, 1+N, d]
+    logits = label_aware_scores(interests, cand, cfg.pow_p).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    return jnp.mean(lse - logits[:, 0])
+
+
+def mind_serve(params, cfg: MINDConfig, hist_ids, cand_ids):
+    """hist [B, L], cand [B, C] -> scores [B, C] (max over interests)."""
+    interests = interest_capsules(params, cfg, hist_ids)
+    ce = embedding.lookup(params["item_embed"], cand_ids)       # [B, C, d]
+    sims = jnp.einsum("bkd,bcd->bck", interests, ce)
+    return jnp.max(sims, axis=-1)
+
+
+def mind_retrieval(params, cfg: MINDConfig, hist_ids, cand_ids):
+    """One user against a candidate slab: hist [1, L], cand [N] -> [N]."""
+    interests = interest_capsules(params, cfg, hist_ids)[0]     # [K, d]
+    ce = embedding.lookup(params["item_embed"], cand_ids)       # [N, d]
+    return jnp.max(ce @ interests.T, axis=-1).astype(jnp.float32)

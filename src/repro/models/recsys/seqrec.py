@@ -1,0 +1,154 @@
+"""Sequential recommenders: SASRec (arXiv:1808.09781) and BERT4Rec
+(arXiv:1904.06690) share one transformer-over-item-history backbone.
+
+Differences (both faithful to their papers):
+  * SASRec: causal self-attention, next-item objective, learned absolute
+    positions, scores via tied item embeddings.
+  * BERT4Rec: bidirectional self-attention, masked-item (cloze) objective.
+
+Training uses sampled softmax (1 positive + ``n_negatives`` shared uniform
+negatives) — at the production catalog size (2^20 items) full-softmax
+logits at batch 65536 x seq are not a sane baseline on any hardware, and
+sampled softmax is what both papers' follow-ups deploy.
+
+Serving entry points per the assigned shapes:
+  * ``score_candidates``  (serve_p99 / serve_bulk): user state . candidate embeds
+  * ``retrieval_scores``  (retrieval_cand): one user against the whole
+    catalog slab — a [1, d] x [d, N_cand] matmul, candidates sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .. import layers
+from ..attention import chunked_attention
+from . import embedding
+
+
+@dataclasses.dataclass(frozen=True)
+class SeqRecConfig:
+    name: str = "sasrec"
+    n_items: int = 1 << 20
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    causal: bool = True          # False -> BERT4Rec
+    n_negatives: int = 127
+    dtype: Any = jnp.float32
+
+    @property
+    def d_head(self) -> int:
+        return self.embed_dim // self.n_heads
+
+
+def init_seqrec(key, cfg: SeqRecConfig):
+    k_i, k_p, k_b = jax.random.split(key, 3)
+    d = cfg.embed_dim
+
+    def init_block(k):
+        k1, k2, k3, k4 = jax.random.split(k, 4)
+        return {
+            "ln1": layers.init_layer_norm(d),
+            "wqkv": layers.dense_init(k1, d, 3 * d, cfg.dtype),
+            "wo": layers.dense_init(k2, d, d, cfg.dtype),
+            "ln2": layers.init_layer_norm(d),
+            "ffn": [
+                {"w": layers.dense_init(k3, d, 4 * d, cfg.dtype),
+                 "b": jnp.zeros((4 * d,), cfg.dtype)},
+                {"w": layers.dense_init(k4, 4 * d, d, cfg.dtype),
+                 "b": jnp.zeros((d,), cfg.dtype)},
+            ],
+        }
+
+    return {
+        "item_embed": embedding.init_table(k_i, cfg.n_items, d, cfg.dtype),
+        "pos_embed": jax.random.normal(k_p, (cfg.seq_len, d), cfg.dtype) * 0.02,
+        "blocks": jax.vmap(init_block)(jax.random.split(k_b, cfg.n_blocks)),
+        "final_ln": layers.init_layer_norm(d),
+    }
+
+
+def seqrec_specs(cfg: SeqRecConfig):
+    # The transformer tower is tiny (embed_dim 50-64; dims not divisible by
+    # a 16-way model axis) — replicate it.  The 2^20-row item table is the
+    # memory and is row-sharded; all tower compute is data-parallel.
+    block = {
+        "ln1": layers.layer_norm_specs(),
+        "wqkv": P(),
+        "wo": P(),
+        "ln2": layers.layer_norm_specs(),
+        "ffn": [{"w": P(), "b": P()}, {"w": P(), "b": P()}],
+    }
+    return {
+        "item_embed": embedding.table_specs(),
+        "pos_embed": P(),
+        "blocks": block,
+        "final_ln": layers.layer_norm_specs(),
+    }
+
+
+def _block_fwd(p, cfg: SeqRecConfig, x):
+    B, S, d = x.shape
+    H, Dh = cfg.n_heads, cfg.d_head
+    z = layers.layer_norm(x, p["ln1"]["scale"], p["ln1"]["bias"]).astype(x.dtype)
+    qkv = (z @ p["wqkv"]).reshape(B, S, 3, H, Dh)
+    q, k, v = (qkv[:, :, i].swapaxes(1, 2) for i in range(3))
+    o = chunked_attention(q, k, v, causal=cfg.causal,
+                          chunk=min(1024, S)).swapaxes(1, 2)
+    x = x + o.reshape(B, S, d) @ p["wo"]
+    z = layers.layer_norm(x, p["ln2"]["scale"], p["ln2"]["bias"]).astype(x.dtype)
+    return x + layers.mlp(p["ffn"], z)
+
+
+def user_states(params, cfg: SeqRecConfig, item_ids: jnp.ndarray):
+    """item_ids [B, S] -> per-position user states [B, S, d]."""
+    x = embedding.lookup(params["item_embed"], item_ids) + params["pos_embed"]
+
+    def step(x, bp):
+        return _block_fwd(bp, cfg, x), None
+
+    x, _ = jax.lax.scan(step, x, params["blocks"])
+    return layers.layer_norm(
+        x, params["final_ln"]["scale"], params["final_ln"]["bias"]
+    ).astype(x.dtype)
+
+
+def sampled_softmax_loss(params, cfg: SeqRecConfig, item_ids, targets, key):
+    """Next-item (causal) or cloze (bidir) loss with shared uniform negatives.
+
+    item_ids, targets: [B, S] (targets = inputs shifted for SASRec; masked
+    positions for BERT4Rec with pad target 0 skipped via weighting).
+    """
+    h = user_states(params, cfg, item_ids)                     # [B, S, d]
+    neg = jax.random.randint(
+        key, (cfg.n_negatives,), 0, cfg.n_items
+    )
+    pos_e = embedding.lookup(params["item_embed"], targets)    # [B, S, d]
+    neg_e = embedding.lookup(params["item_embed"], neg)        # [N, d]
+    pos_logit = jnp.sum(h * pos_e, axis=-1, keepdims=True)     # [B, S, 1]
+    neg_logit = jnp.einsum("bsd,nd->bsn", h, neg_e)            # [B, S, N]
+    logits = jnp.concatenate([pos_logit, neg_logit], axis=-1).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    weight = (targets > 0).astype(jnp.float32)
+    loss = (lse - logits[..., 0]) * weight
+    return jnp.sum(loss) / jnp.maximum(jnp.sum(weight), 1.0)
+
+
+def score_candidates(params, cfg: SeqRecConfig, item_ids, cand_ids):
+    """item_ids [B, S], cand_ids [B, C] -> scores [B, C] (online serving)."""
+    h = user_states(params, cfg, item_ids)[:, -1]              # [B, d]
+    ce = embedding.lookup(params["item_embed"], cand_ids)      # [B, C, d]
+    return jnp.einsum("bd,bcd->bc", h, ce)
+
+
+def retrieval_scores(params, cfg: SeqRecConfig, item_ids, cand_ids):
+    """One user against a candidate slab: [1, S] x [N] -> [N] scores."""
+    h = user_states(params, cfg, item_ids)[:, -1]              # [1, d]
+    ce = embedding.lookup(params["item_embed"], cand_ids)      # [N, d]
+    return (ce @ h[0]).astype(jnp.float32)

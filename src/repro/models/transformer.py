@@ -1,0 +1,300 @@
+"""Decoder-only transformer LM (dense + MoE), scan-over-layers, KV-cache decode.
+
+Design points for the multi-pod target:
+  * ``lax.scan`` over the layer stack — one layer's HLO regardless of depth
+    (compile time, uniform remat) with params stacked on a leading L dim.
+  * remat on the layer body ("nothing saved but layer inputs") so train
+    activations are O(L * B * S * d) instead of O(L * B * S * (d + f + scores)).
+  * alternating dense/MoE supported via ``moe_every`` (llama4 = 2): the scan
+    body is a *block* of ``moe_every`` layers (dense layers then one MoE).
+  * logits stay vocab-sharded ("model" axis); the loss uses a logsumexp
+    that pjit reduces across the vocab shards — the full [B,S,V] logits
+    never assemble on one device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import attention, layers, moe
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_head: int = 64
+    d_ff: int = 1024
+    vocab: int = 1024
+    qk_norm: bool = False
+    rope_base: float = 10000.0
+    # MoE (n_experts=0 -> dense)
+    n_experts: int = 0
+    top_k: int = 1
+    n_shared: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    moe_every: int = 1          # MoE on every k-th layer (llama4: 2)
+    dtype: Any = jnp.bfloat16
+    attn_chunk: int = 1024
+    remat: bool = True
+    microbatches: int = 1       # grad-accumulation splits of the global batch
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def block_layers(self) -> int:
+        """Layers per scan step (dense layers + optional trailing MoE)."""
+        return self.moe_every if self.is_moe else 1
+
+    @property
+    def n_blocks(self) -> int:
+        assert self.n_layers % self.block_layers == 0
+        return self.n_layers // self.block_layers
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for roofline MODEL_FLOPS)."""
+        d, Dh = self.d_model, self.d_head
+        attn = d * (self.n_heads + 2 * self.n_kv_heads) * Dh \
+            + self.n_heads * Dh * d
+        dense_ffn = 3 * d * self.d_ff
+        n_moe = self.n_layers // self.moe_every if self.is_moe else 0
+        n_dense = self.n_layers - n_moe
+        moe_ffn = n_moe * (
+            self.n_experts * 3 * d * self.d_ff_expert
+            + self.n_shared * 3 * d * self.d_ff_expert
+            + d * self.n_experts
+        )
+        return (
+            self.vocab * d * 2
+            + self.n_layers * attn
+            + n_dense * dense_ffn
+            + moe_ffn
+        )
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k + shared experts only)."""
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        n_moe = self.n_layers // self.moe_every
+        full = self.param_count()
+        all_experts = n_moe * self.n_experts * 3 * d * self.d_ff_expert
+        active = n_moe * (self.top_k + self.n_shared) * 3 * d * self.d_ff_expert
+        return full - all_experts + active
+
+
+# --- single layer ----------------------------------------------------------------
+
+
+def _init_layer(key, cfg: LMConfig, is_moe_layer: bool):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": layers.init_rms_norm(cfg.d_model),
+        "attn": attention.init_attention(k1, cfg, cfg.dtype),
+        "ln2": layers.init_rms_norm(cfg.d_model),
+    }
+    if is_moe_layer:
+        p["moe"] = moe.init_moe(k2, cfg, cfg.dtype)
+    else:
+        p["ffn"] = layers.init_swiglu(k2, cfg.d_model, cfg.d_ff, cfg.dtype)
+    return p
+
+
+def _layer_specs(cfg: LMConfig, is_moe_layer: bool):
+    p = {
+        "ln1": layers.rms_norm_specs(),
+        "attn": attention.attention_specs(cfg),
+        "ln2": layers.rms_norm_specs(),
+    }
+    if is_moe_layer:
+        p["moe"] = moe.moe_specs(cfg)
+    else:
+        p["ffn"] = layers.swiglu_specs()
+    return p
+
+
+def _layer_fwd(p, cfg: LMConfig, x, *, positions, cache=None, cache_pos=0,
+               is_moe_layer=False):
+    h, new_cache = attention.attention_fwd(
+        p["attn"], cfg, layers.rms_norm(x, p["ln1"]["scale"]).astype(x.dtype),
+        positions=positions, cache=cache, cache_pos=cache_pos,
+        attn_chunk=cfg.attn_chunk,
+    )
+    x = x + h
+    z = layers.rms_norm(x, p["ln2"]["scale"]).astype(x.dtype)
+    if is_moe_layer:
+        h, aux = moe.moe_fwd(p["moe"], cfg, z)
+    else:
+        h, aux = layers.swiglu(p["ffn"], z), jnp.float32(0)
+    return x + h, new_cache, aux
+
+
+# --- full model ------------------------------------------------------------------
+
+
+def init_lm(key, cfg: LMConfig):
+    """Params with per-block stacking: block = [dense]*(k-1) + [moe or dense]."""
+    k_e, k_l, k_h = jax.random.split(key, 3)
+    bl = cfg.block_layers
+
+    def init_block(k):
+        ks = jax.random.split(k, bl)
+        return {
+            f"l{i}": _init_layer(ks[i], cfg, is_moe_layer=(cfg.is_moe and i == bl - 1))
+            for i in range(bl)
+        }
+
+    blocks = jax.vmap(init_block)(jax.random.split(k_l, cfg.n_blocks))
+    return {
+        "embed": jax.random.normal(
+            k_e, (cfg.vocab, cfg.d_model), cfg.dtype) * 0.02,
+        "blocks": blocks,
+        "final_norm": layers.init_rms_norm(cfg.d_model),
+        "lm_head": layers.dense_init(k_h, cfg.d_model, cfg.vocab, cfg.dtype),
+    }
+
+
+def lm_specs(cfg: LMConfig):
+    bl = cfg.block_layers
+
+    def add_layer_dim(spec_tree):
+        return jax.tree.map(
+            lambda s: P(None, *s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    blocks = {
+        f"l{i}": add_layer_dim(
+            _layer_specs(cfg, is_moe_layer=(cfg.is_moe and i == bl - 1))
+        )
+        for i in range(bl)
+    }
+    return {
+        "embed": P("model", None),
+        "blocks": blocks,
+        "final_norm": layers.rms_norm_specs(),
+        "lm_head": P(None, "model"),
+    }
+
+
+def lm_fwd(params, cfg: LMConfig, tokens: jnp.ndarray):
+    """tokens [B, S] -> vocab-sharded logits [B, S, V] (bf16), aux loss."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]                  # gather over sharded vocab
+    positions = jnp.arange(S)
+    bl = cfg.block_layers
+
+    def block(x, bp):
+        aux_tot = jnp.float32(0)
+        for i in range(bl):
+            x, _, aux = _layer_fwd(
+                bp[f"l{i}"], cfg, x, positions=positions,
+                is_moe_layer=(cfg.is_moe and i == bl - 1),
+            )
+            aux_tot += aux
+        return x, aux_tot
+
+    if cfg.remat:
+        block = jax.checkpoint(block)
+    x, aux = jax.lax.scan(lambda c, bp: block(c, bp), x, params["blocks"])
+    x = layers.rms_norm(x, params["final_norm"]["scale"]).astype(x.dtype)
+    logits = x @ params["lm_head"]               # [B, S, V] vocab-sharded
+    return logits, jnp.sum(aux)
+
+
+def lm_loss(params, cfg: LMConfig, tokens, labels):
+    logits, aux = lm_fwd(params, cfg, tokens)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll) + 0.01 * aux
+
+
+def lm_prefill(params, cfg: LMConfig, tokens: jnp.ndarray):
+    """Prompt pass that also builds the KV cache.
+
+    tokens [B, S] -> (last-position vocab-sharded logits [B, V],
+    cache ([nb, bl, B, Hkv, S, Dh] k, same v)).
+    """
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(S)
+    bl = cfg.block_layers
+    zero_cache = (
+        jnp.zeros((B, cfg.n_kv_heads, S, cfg.d_head), cfg.dtype),
+        jnp.zeros((B, cfg.n_kv_heads, S, cfg.d_head), cfg.dtype),
+    )
+
+    def block(x, bp):
+        ks, vs = [], []
+        for i in range(bl):
+            x, (k, v), _ = _layer_fwd(
+                bp[f"l{i}"], cfg, x, positions=positions,
+                cache=zero_cache, cache_pos=0,
+                is_moe_layer=(cfg.is_moe and i == bl - 1),
+            )
+            ks.append(k)
+            vs.append(v)
+        return x, (jnp.stack(ks), jnp.stack(vs))
+
+    if cfg.remat:
+        block = jax.checkpoint(block)
+    x, (kc, vc) = jax.lax.scan(block, x, params["blocks"])
+    x = layers.rms_norm(x[:, -1:], params["final_norm"]["scale"]).astype(x.dtype)
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, (kc, vc)
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int):
+    shape = (cfg.n_blocks, cfg.block_layers, batch, cfg.n_kv_heads,
+             max_len, cfg.d_head)
+    return (jnp.zeros(shape, cfg.dtype), jnp.zeros(shape, cfg.dtype))
+
+
+def cache_specs(cfg: LMConfig):
+    # [blocks, bl, B, Hkv, S, Dh]: batch over data, kv heads over model
+    s = P(None, None, ("pod", "data"), "model", None, None)
+    return (s, s)
+
+
+def lm_decode_step(params, cfg: LMConfig, token: jnp.ndarray,
+                   cache, pos: jnp.ndarray):
+    """One decode step.  token [B], cache as init_cache, pos [] i32.
+
+    Returns (vocab-sharded logits [B, V], new cache).
+    """
+    B = token.shape[0]
+    x = params["embed"][token][:, None, :]       # [B, 1, d]
+    positions = jnp.arange(1) + pos
+
+    kc, vc = cache
+    bl = cfg.block_layers
+
+    def block(x, inp):
+        bp, kcb, vcb = inp                        # kcb: [bl, B, Hkv, S, Dh]
+        new_k, new_v = [], []
+        for i in range(bl):
+            x, (nk, nv), _ = _layer_fwd(
+                bp[f"l{i}"], cfg, x, positions=positions,
+                cache=(kcb[i], vcb[i]), cache_pos=pos,
+                is_moe_layer=(cfg.is_moe and i == bl - 1),
+            )
+            new_k.append(nk)
+            new_v.append(nv)
+        return x, (jnp.stack(new_k), jnp.stack(new_v))
+
+    x, (kc, vc) = jax.lax.scan(block, x, (params["blocks"], kc, vc))
+    x = layers.rms_norm(x, params["final_norm"]["scale"]).astype(x.dtype)
+    logits = (x @ params["lm_head"])[:, 0]        # [B, V]
+    return logits, (kc, vc)

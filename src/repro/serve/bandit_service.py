@@ -1,0 +1,110 @@
+"""DistCLUB as a first-class serving feature on top of the recsys models.
+
+The recommendation loop the paper describes, with a real embedding model
+supplying the context vectors:
+
+  1. a recsys model (SASRec / BERT4Rec / MIND) embeds each user's candidate
+     items -> the bandit's context set ``C_t`` (unit-normalized);
+  2. the DistCLUB layer owns per-user LinUCB state and scores candidates
+     with the fused UCB kernel (estimate + exploration bonus), choosing the
+     item to show;
+  3. observed rewards fold back with the rank-1 Sherman-Morrison kernel;
+  4. periodically (stage-2) the user graph is re-clustered and cluster
+     statistics are tree-reduced, after which cold users score with cluster
+     statistics instead (the beta-heuristic decides per user).
+
+State lives in the same ``DistCLUBState`` the offline driver uses, so the
+checkpoint manager snapshots the full service (model params + bandit state)
+and a restarted/rescaled replica resumes exactly.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import clustering, linucb
+from ..core.types import BanditHyper, DistCLUBState
+from ..core.distclub import init_state
+from ..kernels.rank1 import ops as rank1_ops
+from ..kernels.ucb import ops as ucb_ops
+
+
+class BanditService(NamedTuple):
+    state: DistCLUBState
+    hyper: BanditHyper
+    d: int
+    interactions_since_refresh: jnp.ndarray
+
+
+def create(n_users: int, d: int, hyper: BanditHyper) -> BanditService:
+    return BanditService(
+        state=init_state(n_users, d, hyper),
+        hyper=hyper, d=d,
+        interactions_since_refresh=jnp.zeros((), jnp.int32),
+    )
+
+
+def embed_candidates(item_embed: jnp.ndarray, cand_ids: jnp.ndarray):
+    """Model item embeddings -> unit-norm bandit contexts [B, K, d]."""
+    e = item_embed[cand_ids]
+    return e / jnp.maximum(jnp.linalg.norm(e, axis=-1, keepdims=True), 1e-9)
+
+
+def recommend(svc: BanditService, user_ids: jnp.ndarray,
+              contexts: jnp.ndarray, *, use_pallas: bool | None = None):
+    """Pick one item per request.  user_ids [B], contexts [B, K, d] -> [B]."""
+    st = svc.state
+    lin = st.lin
+    labels = st.graph.labels[user_ids]
+    stats = st.clusters
+
+    size = jnp.maximum(stats.size[labels], 1)
+    mean_occ = stats.seen[labels].astype(jnp.float32) / size
+    use_own = lin.occ[user_ids].astype(jnp.float32) >= svc.hyper.beta * mean_occ
+
+    v_own = linucb.user_vector(lin.Minv[user_ids], lin.b[user_ids])
+    v_clu = linucb.user_vector(stats.Mcinv[labels], stats.bc[labels])
+    w = jnp.where(use_own[:, None], v_own, v_clu)
+    minv = jnp.where(use_own[:, None, None], lin.Minv[user_ids],
+                     stats.Mcinv[labels])
+    scores = ucb_ops.ucb_scores(w, minv, contexts, lin.occ[user_ids],
+                                svc.hyper.alpha, use_pallas=use_pallas)
+    return jnp.argmax(scores, axis=-1)
+
+
+def observe(svc: BanditService, user_ids: jnp.ndarray, contexts: jnp.ndarray,
+            choices: jnp.ndarray, rewards: jnp.ndarray,
+            *, use_pallas: bool | None = None) -> BanditService:
+    """Fold a batch of (distinct-user) feedback into the bandit state."""
+    st = svc.state
+    x = jnp.take_along_axis(contexts, choices[:, None, None], axis=1)[:, 0]
+    M_u, Minv_u, b_u = (st.lin.M[user_ids], st.lin.Minv[user_ids],
+                        st.lin.b[user_ids])
+    mask = jnp.ones(user_ids.shape, bool)
+    M2, Minv2, b2 = rank1_ops.rank1_update(
+        M_u, Minv_u, b_u, x, rewards, mask, use_pallas=use_pallas)
+    lin = st.lin._replace(
+        M=st.lin.M.at[user_ids].set(M2),
+        Minv=st.lin.Minv.at[user_ids].set(Minv2),
+        b=st.lin.b.at[user_ids].set(b2),
+        occ=st.lin.occ.at[user_ids].add(1),
+    )
+    seen = st.clusters.seen.at[st.graph.labels[user_ids]].add(1)
+    return svc._replace(
+        state=st._replace(lin=lin, clusters=st.clusters._replace(seen=seen)),
+        interactions_since_refresh=svc.interactions_since_refresh
+        + user_ids.shape[0],
+    )
+
+
+def maybe_refresh(svc: BanditService, every: int) -> BanditService:
+    """Stage-2: re-cluster + tree-reduce stats when the budget elapses."""
+    if int(svc.interactions_since_refresh) < every:
+        return svc
+    from ..core import distclub
+
+    state = distclub.stage2(svc.state, svc.hyper, svc.d)
+    return svc._replace(state=state,
+                        interactions_since_refresh=jnp.zeros((), jnp.int32))

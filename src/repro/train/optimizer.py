@@ -1,0 +1,187 @@
+"""Optimizers in pure JAX (no optax in this container).
+
+AdamW with configurable moment dtype: ``f32`` for quality-critical runs,
+``bf16`` for the multi-hundred-B MoE archs where 8 bytes/param of f32
+moments cannot fit a v5e's HBM next to the weights (DESIGN.md §6 — this is
+the "low-precision optimizer state" distributed-optimization knob; the
+checkpoint round-trips the true dtype).  Adagrad is provided for the
+embedding-table params of the recsys archs (the standard choice for sparse
+features).
+
+Optimizer states inherit the parameter PartitionSpecs (fully sharded —
+ZeRO-style by construction, since our param specs already shard over both
+"model" and "data" where the arch needs it).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+# Leaves bigger than this get their elementwise update lax.map'd over dim 0
+# (the stacked-layers dim): the update math needs f32 temporaries, and doing
+# a 400B-model's worth of [L, ...] leaves in one shot materializes multi-GB
+# f32 copies of every gradient at peak (seen directly in the dry-run buffer
+# assignment).  Mapping over dim 0 caps the temp at one layer's slice.
+_CHUNK_BYTES = 128 * 1024 * 1024
+
+
+def _chunked(upd, n_out: int, *leaves):
+    """Apply ``upd`` leafwise; lax.map over dim0 for huge stacked leaves."""
+    p = leaves[-1]
+    if p.ndim >= 3 and p.size * 4 > _CHUNK_BYTES and all(
+        l.ndim >= 1 and l.shape[:1] == p.shape[:1] for l in leaves
+    ):
+        def body(xs):
+            # barrier stops XLA hoisting the bf16->f32 converts out of the
+            # loop (which would re-materialize the full-leaf f32 copies this
+            # chunking exists to avoid)
+            return upd(*jax.lax.optimization_barrier(xs))
+
+        return jax.lax.map(body, leaves)
+    return upd(*leaves)
+
+
+def adamw_init(params, moment_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(
+    grads, state: AdamWState, params,
+    *, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01,
+):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        delta = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+        p_new = p.astype(jnp.float32) - lr * (
+            delta + weight_decay * p.astype(jnp.float32)
+        )
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree.map(lambda g, m, v, p: _chunked(upd, 3, g, m, v, p),
+                       grads, state.m, state.v, params)
+    params_new = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    m_new = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    v_new = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return params_new, AdamWState(step=step, m=m_new, v=v_new)
+
+
+class AdafactorState(NamedTuple):
+    """Factored second moment (Shazeer & Stern, arXiv:1804.04235) + optional
+    low-precision momentum — the standard optimizer-memory answer for the
+    >100B archs, where even bf16 Adam moments overflow v5e HBM."""
+
+    step: jnp.ndarray
+    vr: Any      # row factors  (mean over last dim)
+    vc: Any      # col factors  (mean over second-to-last dim)
+    v: Any       # full second moment for rank<2 leaves
+    m: Any       # momentum (bf16) or None-like zeros when disabled
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params, momentum_dtype=jnp.bfloat16) -> AdafactorState:
+    def vr(p):
+        return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p) else jnp.zeros((1,), jnp.float32)
+
+    def vc(p):
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if _factored(p) else jnp.zeros((1,), jnp.float32))
+
+    def v(p):
+        return (jnp.zeros((1,), jnp.float32) if _factored(p)
+                else jnp.zeros(p.shape, jnp.float32))
+
+    return AdafactorState(
+        step=jnp.zeros((), jnp.int32),
+        vr=jax.tree.map(vr, params),
+        vc=jax.tree.map(vc, params),
+        v=jax.tree.map(v, params),
+        m=jax.tree.map(lambda p: jnp.zeros(p.shape, momentum_dtype), params),
+    )
+
+
+def adafactor_update(
+    grads, state: AdafactorState, params,
+    *, lr=1e-3, decay=0.999, beta1=0.9, eps=1e-30, clip_rms=1.0,
+):
+    step = state.step + 1
+
+    def upd_factored(g, vr, vc, m, p):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + eps
+        vr_n = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+        vc_n = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+        denom = jnp.maximum(jnp.mean(vr_n, axis=-1, keepdims=True), eps)
+        vhat = (vr_n[..., None] * vc_n[..., None, :]) / denom[..., None]
+        u = gf / jnp.sqrt(vhat + eps)
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip_rms)
+        m_n = beta1 * m.astype(jnp.float32) + (1 - beta1) * u
+        p_n = p.astype(jnp.float32) - lr * m_n
+        return p_n.astype(p.dtype), vr_n, vc_n, m_n.astype(m.dtype)
+
+    def upd(g, vr, vc, v, m, p):
+        if _factored(p):
+            p_n, vr_n, vc_n, m_n = _chunked(upd_factored, 4, g, vr, vc, m, p)
+            return p_n, vr_n, vc_n, v, m_n
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + eps
+        v_n = decay * v + (1 - decay) * g2
+        u = gf / jnp.sqrt(v_n + eps)
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip_rms)
+        m_n = beta1 * m.astype(jnp.float32) + (1 - beta1) * u
+        p_n = p.astype(jnp.float32) - lr * m_n
+        return p_n.astype(p.dtype), vr, vc, v_n, m_n.astype(m.dtype)
+
+    out = jax.tree.map(upd, grads, state.vr, state.vc, state.v, state.m, params)
+    pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), AdafactorState(step=step, vr=pick(1), vc=pick(2),
+                                   v=pick(3), m=pick(4))
+
+
+class AdagradState(NamedTuple):
+    accum: Any
+
+
+def adagrad_init(params) -> AdagradState:
+    return AdagradState(
+        accum=jax.tree.map(lambda p: jnp.full(p.shape, 0.1, jnp.float32), params)
+    )
+
+
+def adagrad_update(grads, state: AdagradState, params, *, lr=1e-2, eps=1e-10):
+    def upd(g, a, p):
+        gf = g.astype(jnp.float32)
+        a_new = a + gf * gf
+        p_new = p.astype(jnp.float32) - lr * gf / (jnp.sqrt(a_new) + eps)
+        return p_new.astype(p.dtype), a_new
+
+    out = jax.tree.map(upd, grads, state.accum, params)
+    params_new = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    accum_new = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return params_new, AdagradState(accum=accum_new)

@@ -1,0 +1,137 @@
+"""End-to-end behaviour of CLUB / DCCB / DistCLUB on planted environments."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import club, dccb, distclub, env, env_ops
+from repro.core.types import BanditHyper
+
+N, D, K, CLUSTERS = 64, 8, 10, 4
+
+
+@pytest.fixture(scope="module")
+def planted():
+    e, labels = env.make_synthetic_env(
+        jax.random.PRNGKey(0), n_users=N, d=D, n_clusters=CLUSTERS,
+        n_candidates=K)
+    return env_ops.synthetic_ops(e), labels
+
+
+HYPER = BanditHyper(sigma=8, max_rounds=16, gamma=1.5, n_candidates=K)
+
+
+def test_distclub_beats_random_and_learns(planted):
+    ops, _ = planted
+    state, m, nclu = distclub.run(ops, jax.random.PRNGKey(1), HYPER,
+                                  n_epochs=6, d=D)
+    T = int(m.interactions.sum())
+    assert T == N * 2 * HYPER.sigma * 6
+    reward = float(m.reward.sum())
+    rand = float(m.rand_reward.sum())
+    assert reward > rand * 1.2, (reward, rand)
+    # later epochs beat earlier ones (learning)
+    half = m.reward.shape[0] // 2
+    r1 = float(m.reward[:half].sum()) / max(float(m.interactions[:half].sum()), 1)
+    r2 = float(m.reward[half:].sum()) / max(float(m.interactions[half:].sum()), 1)
+    assert r2 > r1
+
+
+def test_distclub_discovers_clusters(planted):
+    ops, _ = planted
+    _, _, nclu = distclub.run(ops, jax.random.PRNGKey(1), HYPER,
+                              n_epochs=6, d=D)
+    assert int(nclu[0]) == 1          # starts connected
+    assert int(nclu[-1]) > 1          # finds structure
+
+
+def test_distclub_comm_model(planted):
+    ops, _ = planted
+    state, _, _ = distclub.run(ops, jax.random.PRNGKey(1), HYPER,
+                               n_epochs=3, d=D)
+    want = 3 * 2 * N * (D * D + D) * 4      # 3 stage-2 rounds
+    assert float(state.comm_bytes) == want
+
+
+def test_club_learns(planted):
+    ops, _ = planted
+    _, m = club.run(ops, jax.random.PRNGKey(2), HYPER, T=1024, d=D)
+    assert float(m.reward.sum()) > float(m.rand_reward.sum()) * 1.1
+
+
+def test_dccb_learns_and_comm_dominates_distclub(planted):
+    ops, _ = planted
+    L = 8
+    st_d, m_d, _ = dccb.run(ops, jax.random.PRNGKey(3), HYPER,
+                            n_epochs=12, d=D, L=L)
+    # DCCB's buffer lag makes it barely better than random at this horizon
+    # (the paper's accuracy complaint about it); it must still be above.
+    assert float(m_d.reward.sum()) > float(m_d.rand_reward.sum()) * 1.01
+    st_c, _, _ = distclub.run(ops, jax.random.PRNGKey(3), HYPER,
+                              n_epochs=6, d=D)
+    # paper Table 4: DCCB ships (L+1)(d^2+d) per user per round vs
+    # DistCLUB's 2(d^2+d) per user per stage-2 -> DCCB >> DistCLUB
+    # at matched interaction counts
+    t_d = 12 * N * L
+    t_c = int(6 * 2 * HYPER.sigma * N)
+    per_i_d = float(st_d.comm_bytes) / t_d
+    per_i_c = float(st_c.comm_bytes) / t_c
+    assert per_i_d > 3 * per_i_c, (per_i_d, per_i_c)
+
+
+def test_reward_ordering_matches_paper(planted):
+    """Paper Table 5: DistCLUB reward >= DCCB reward (normalized)."""
+    ops, _ = planted
+    _, m_dc, _ = distclub.run(ops, jax.random.PRNGKey(5), HYPER,
+                              n_epochs=4, d=D)
+    _, m_db, _ = dccb.run(ops, jax.random.PRNGKey(5), HYPER,
+                          n_epochs=8, d=D, L=8)
+    r_dc = float(m_dc.reward.sum()) / float(m_dc.rand_reward.sum())
+    r_db = float(m_db.reward.sum()) / float(m_db.rand_reward.sum())
+    assert r_dc >= r_db * 0.98, (r_dc, r_db)
+
+
+def test_stage4_rebalances_budgets(planted):
+    """Users with above-cluster-mean history get MORE personalized rounds
+    (paper stage 4); under uniform sampling deltas round to zero, so the
+    mechanism is tested on a skewed state directly."""
+    ops, _ = planted
+    state = distclub.init_state(N, D, HYPER)
+    skewed_occ = jnp.zeros((N,), jnp.int32).at[0].set(40)
+    state = state._replace(
+        lin=state.lin._replace(occ=skewed_occ),
+        clusters=state.clusters._replace(
+            seen=jax.ops.segment_sum(skewed_occ, state.graph.labels,
+                                     num_segments=N)),
+    )
+    out = distclub.stage4(state, HYPER)
+    assert int(out.u_rounds[0]) > HYPER.sigma          # heavy user: more S1
+    assert int(out.c_rounds[0]) < HYPER.sigma          # ... fewer S3
+    assert int(out.u_rounds[1]) <= HYPER.sigma         # light users: <= S1
+    assert bool(jnp.all(out.u_rounds >= 0))
+    assert bool(jnp.all(out.c_rounds <= HYPER.max_rounds))
+
+
+def test_regret_rate_decreases(planted):
+    """Per-interaction regret should drop as estimates converge."""
+    ops, _ = planted
+    _, m, _ = distclub.run(ops, jax.random.PRNGKey(8), HYPER,
+                           n_epochs=8, d=D)
+    steps = m.regret.shape[0]
+    q = steps // 4
+    early = float(m.regret[:q].sum()) / max(float(m.interactions[:q].sum()), 1)
+    late = float(m.regret[-q:].sum()) / max(float(m.interactions[-q:].sum()), 1)
+    assert late < early
+
+
+def test_distclub_on_replay_log():
+    """Replay protocol: per-user queues of logged slates drive the rounds."""
+    from repro.data.datasets import DatasetSpec
+    from repro.data.replay import make_replay_env
+
+    spec = DatasetSpec("tiny", 4096, 64, 8, 4, n_candidates=10)
+    ops, _ = make_replay_env(spec, n_items=512, max_t=128, seed=3)
+    state, m, nclu = distclub.run(ops, jax.random.PRNGKey(4), HYPER,
+                                  n_epochs=3, d=8)
+    assert int(m.interactions.sum()) == 64 * 2 * HYPER.sigma * 3
+    assert float(m.reward.sum()) > float(m.rand_reward.sum()) * 1.05

@@ -1,0 +1,65 @@
+"""Clustering substrate: connected components, pruning, aggregates."""
+import jax
+import jax.numpy as jnp
+import networkx as nx
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clustering
+
+
+def test_cc_two_triangles():
+    adj = np.zeros((6, 6), bool)
+    for a, b in [(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5)]:
+        adj[a, b] = adj[b, a] = True
+    labels = clustering.connected_components(jnp.asarray(adj))
+    assert labels.tolist() == [0, 0, 0, 3, 3, 3]
+    assert int(clustering.num_clusters(labels)) == 2
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 30), st.floats(0.0, 0.3), st.integers(0, 2**31 - 1))
+def test_cc_matches_networkx(n, p, seed):
+    rng = np.random.default_rng(seed)
+    adj = rng.random((n, n)) < p
+    adj = np.triu(adj, 1)
+    adj = adj | adj.T
+    labels = np.asarray(clustering.connected_components(jnp.asarray(adj)))
+    g = nx.from_numpy_array(adj)
+    for comp in nx.connected_components(g):
+        comp = sorted(comp)
+        want = comp[0]
+        for v in comp:
+            assert labels[v] == want
+
+
+def test_prune_edges_separates_far_users():
+    n, d = 4, 3
+    v = jnp.array([[1, 0, 0], [1, 0.01, 0], [-1, 0, 0], [-1, 0.01, 0]],
+                  jnp.float32)
+    occ = jnp.full((n,), 1000, jnp.int32)   # tight confidence balls
+    adj = jnp.ones((n, n), bool) & ~jnp.eye(n, dtype=bool)
+    pruned = clustering.prune_edges(adj, v, occ, gamma=1.0)
+    assert bool(pruned[0, 1]) and bool(pruned[2, 3])
+    assert not bool(pruned[0, 2]) and not bool(pruned[1, 3])
+
+
+def test_cluster_stats_single_ridge_term():
+    """Mc = I + sum (Mu - I): members' identities must not stack."""
+    n, d = 3, 2
+    labels = jnp.zeros((n,), jnp.int32)
+    M = jnp.stack([jnp.eye(d) * (i + 1.0) for i in range(n)])
+    b = jnp.arange(n * d, dtype=jnp.float32).reshape(n, d)
+    stats = clustering.cluster_stats(labels, M, b, d)
+    want_M = jnp.eye(d) + sum(M[i] - jnp.eye(d) for i in range(n))
+    np.testing.assert_allclose(stats.Mc[0], want_M)
+    np.testing.assert_allclose(stats.bc[0], b.sum(0))
+    assert int(stats.size[0]) == 3
+    np.testing.assert_allclose(
+        stats.Mcinv[0] @ stats.Mc[0], np.eye(d), atol=1e-5)
+
+
+def test_cb_width_decreasing():
+    occ = jnp.array([0, 1, 10, 100, 10_000])
+    w = clustering.cb_width(occ)
+    assert bool(jnp.all(jnp.diff(w) < 0))

@@ -1,0 +1,90 @@
+"""Unit + property tests for the linear-bandit primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import linucb
+from repro.core.types import LinUCBState
+
+
+def test_init_state_identity():
+    st_ = linucb.init_linucb(5, 7)
+    np.testing.assert_allclose(st_.M[3], np.eye(7))
+    np.testing.assert_allclose(st_.Minv[0], np.eye(7))
+    assert st_.occ.sum() == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 2**31 - 1))
+def test_sherman_morrison_matches_inverse(d, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    A = jax.random.normal(k1, (d, d)) * 0.3
+    M = jnp.eye(d) + A @ A.T
+    x = jax.random.normal(k2, (d,))
+    got = linucb.sherman_morrison(jnp.linalg.inv(M), x)
+    want = jnp.linalg.inv(M + jnp.outer(x, x))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_ucb_scores_formula():
+    d, K = 4, 6
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (d,))
+    Minv = jnp.eye(d) * 0.5
+    ctx = jax.random.normal(jax.random.PRNGKey(1), (K, d))
+    occ = jnp.int32(7)
+    scores = linucb.ucb_scores(w, Minv, ctx, occ, alpha=0.3)
+    want = ctx @ w + 0.3 * jnp.sqrt(
+        jnp.sum(ctx * (ctx @ (jnp.eye(d) * 0.5)), -1)
+    ) * jnp.sqrt(jnp.log1p(7.0))
+    np.testing.assert_allclose(scores, want, rtol=1e-5)
+
+
+def test_bonus_shrinks_statistics_grow():
+    """More observations of a direction -> smaller bonus along it."""
+    d = 3
+    x = jnp.array([1.0, 0.0, 0.0])
+    state = linucb.init_linucb(1, d)
+    s0 = linucb.ucb_scores(jnp.zeros(d), state.Minv[0], x[None], state.occ[0], 1.0)
+    for _ in range(5):
+        state = linucb.rank1_update(state, jnp.int32(0), x, jnp.float32(1.0))
+    s1_bonus = linucb.ucb_scores(
+        jnp.zeros(d), state.Minv[0], x[None], jnp.int32(0), 1.0)
+    assert float(s1_bonus[0]) < float(s0[0]) + 1e-6
+
+
+def test_masked_batch_update_is_identity_for_masked_out():
+    n, d = 6, 4
+    state = linucb.init_linucb(n, d)
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    r = jnp.ones((n,))
+    mask = jnp.array([True, False, True, False, True, False])
+    new = linucb.masked_batch_update(state, x, r, mask)
+    for i in range(n):
+        if mask[i]:
+            assert float(jnp.abs(new.M[i] - state.M[i]).sum()) > 0
+            assert new.occ[i] == 1
+        else:
+            np.testing.assert_array_equal(new.M[i], state.M[i])
+            np.testing.assert_array_equal(new.b[i], state.b[i])
+            assert new.occ[i] == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(2, 6), st.integers(0, 2**31 - 1))
+def test_masked_update_keeps_minv_exact(n, d, seed):
+    """Property: after arbitrary masked updates, Minv == inv(M)."""
+    key = jax.random.PRNGKey(seed)
+    state = linucb.init_linucb(n, d)
+    for i in range(3):
+        kx, km, kr, key = jax.random.split(key, 4)
+        x = jax.random.normal(kx, (n, d))
+        mask = jax.random.bernoulli(km, 0.6, (n,))
+        r = jax.random.uniform(kr, (n,))
+        state = linucb.masked_batch_update(state, x, r, mask)
+    np.testing.assert_allclose(
+        jnp.einsum("nij,njk->nik", state.M, state.Minv),
+        jnp.broadcast_to(jnp.eye(d), (n, d, d)), atol=5e-2)
