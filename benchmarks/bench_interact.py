@@ -1,0 +1,170 @@
+"""Fused-vs-reference interaction-step microbenchmark + HBM accounting.
+
+Times one full stage-1-style interaction step (score -> argmax -> gather ->
+rank-1 state update) at paper-scale shapes two ways:
+
+  reference   the seed per-op path: materialize [n,K] scores, separate
+              take_along_axis gather, three separate state-update ops
+              (exactly what ``core/distclub.py`` ran before the engine).
+  fused       the interaction-engine path (``core/backend.py``): fused
+              choose + fused rank-1 update contracts.
+
+On this CPU container both lower through XLA (the Pallas kernels are
+validated separately in interpret mode — compiled-kernel wall-clock needs a
+TPU), so the wall-clock comparison checks the engine introduces no
+regression, while the analytic HBM-traffic model quantifies the TPU win:
+per user per round the fused path eliminates the score-tensor write+read,
+the [n,K,d] scored-context intermediate, the second context read of the
+gather, and two of the three Gram-state sweeps of the unfused update.  See
+README.md "Backends & HBM accounting" for the model's derivation.
+
+Writes BENCH_interact.json at the repo root so the perf trajectory is
+tracked from PR 1 onward.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import backend as backend_mod
+from repro.core import linucb
+from repro.kernels.interact.ref import choose_ref
+
+from .common import emit, timed
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+KEY = jax.random.PRNGKey(0)
+
+FULL_SHAPES = [(n, d, 128) for n in (1024, 4096, 16384) for d in (16, 32)]
+QUICK_SHAPES = [(1024, 32, 128), (4096, 32, 128)]
+
+
+# ---- analytic HBM-traffic model (f32 words per user per round) -------------
+
+def hbm_words_reference(d: int, K: int, with_M: bool = True) -> int:
+    """Seed path, op-level accounting (each XLA op streams its operands):
+
+    score:  read ctx (Kd) + Minv (d^2) + w (d); write+read the [K,d]
+            ctx@Minv intermediate (2Kd); write scores (K)
+    argmax: read scores (K); write choice (1)
+    gather: read ctx again (Kd) + choice; write x (d)
+    update: M read+write (2d^2) [core drivers only], Minv read for the
+            Sherman-Morrison matvec (d^2), Minv read+write for the
+            subtract (2d^2), b read+write (2d)
+    """
+    gram = 3 * d * d + (2 * d * d if with_M else 0) + d * d
+    ctx = 4 * K * d
+    scores = 2 * K
+    small = 4 * d + 2  # w, x, b r/w, choice
+    return gram + ctx + scores + small
+
+
+def hbm_words_fused(d: int, K: int, with_M: bool = True) -> int:
+    """Engine path: choose reads (ctx, Minv, w) once and writes (choice, x)
+    — scores and the scored-context intermediate stay in VMEM; the fused
+    rank-1 kernel reads each state array once and writes once."""
+    gram = d * d + (2 * d * d if with_M else 0) + 2 * d * d
+    ctx = K * d
+    small = 4 * d + 2
+    return gram + ctx + small
+
+
+# ---- timed steps -----------------------------------------------------------
+
+def _make_inputs(n, d, K):
+    ks = jax.random.split(KEY, 4)
+    lin = linucb.init_linucb(n, d)
+    w = jax.random.normal(ks[0], (n, d))
+    ctx = jax.random.normal(ks[1], (n, K, d))
+    ctx = ctx / jnp.linalg.norm(ctx, axis=-1, keepdims=True)
+    r = jax.random.uniform(ks[2], (n,))
+    mask = jnp.ones((n,), bool)
+    return lin, w, ctx, r, mask
+
+
+def _reference_step(lin, w, ctx, r, mask, alpha=0.3):
+    """The seed per-op path, verbatim."""
+    choice, x = choose_ref(w, lin.Minv, ctx, lin.occ, alpha)
+    return linucb.masked_batch_update(lin, x, r, mask), choice
+
+
+def _fused_step(be, lin, w, ctx, r, mask, alpha=0.3):
+    x, choice = be.choose(w, lin.Minv, ctx, lin.occ, alpha)
+    return be.update_lin(lin, x, r, mask), choice
+
+
+def bench_shape(n, d, K, repeats=3):
+    lin, w, ctx, r, mask = _make_inputs(n, d, K)
+    # auto: compiled Pallas kernels on TPU, the jnp engine elsewhere — so a
+    # TPU run of this file times the real fused path, not a stand-in.
+    be = backend_mod.get_backend(n, d, K)
+
+    f_ref = jax.jit(_reference_step)
+    f_fused = jax.jit(lambda lin, w, ctx, r, mask: _fused_step(
+        be, lin, w, ctx, r, mask))
+    f_ref(lin, w, ctx, r, mask)          # compile
+    f_fused(lin, w, ctx, r, mask)
+    t_ref, _ = timed(f_ref, lin, w, ctx, r, mask, repeats=repeats)
+    t_fused, _ = timed(f_fused, lin, w, ctx, r, mask, repeats=repeats)
+
+    words_ref = hbm_words_reference(d, K)
+    words_fused = hbm_words_fused(d, K)
+    rec = {
+        "n": n, "d": d, "K": K,
+        "fused_backend": be.kind,
+        "reference_us": 1e6 * t_ref,
+        "fused_us": 1e6 * t_fused,
+        "hbm_bytes_per_round_reference": 4 * n * words_ref,
+        "hbm_bytes_per_round_fused": 4 * n * words_fused,
+        "hbm_traffic_ratio": words_ref / words_fused,
+        "hbm_traffic_ratio_sharded": (
+            hbm_words_reference(d, K, with_M=False)
+            / hbm_words_fused(d, K, with_M=False)),
+    }
+    emit(f"interact_step_n{n}_d{d}_K{K}_reference", rec["reference_us"],
+         f"hbm_bytes={rec['hbm_bytes_per_round_reference']}")
+    emit(f"interact_step_n{n}_d{d}_K{K}_fused", rec["fused_us"],
+         f"hbm_bytes={rec['hbm_bytes_per_round_fused']}"
+         f";ratio={rec['hbm_traffic_ratio']:.2f}x")
+    return rec
+
+
+def _interpret_parity(n=128, d=16, K=20):
+    """Cheap in-run validation that the two paths agree (full parity lives
+    in tests/test_interact.py)."""
+    import numpy as np
+
+    lin, w, ctx, r, mask = _make_inputs(n, d, K)
+    be = backend_mod.get_backend(n, d, K, kind="pallas", interpret=True)
+    (lin_r, c_r) = _reference_step(lin, w, ctx, r, mask)
+    (lin_p, c_p) = _fused_step(be, lin, w, ctx, r, mask)
+    lin_p = be.unpad_lin(lin_p)
+    same_choice = bool((np.asarray(be.unpad_users(c_p))
+                        == np.asarray(c_r)).all())
+    max_err = max(
+        float(jnp.max(jnp.abs(lin_p.Minv - lin_r.Minv))),
+        float(jnp.max(jnp.abs(lin_p.b - lin_r.b))),
+    )
+    return {"choices_identical": same_choice, "state_max_abs_err": max_err}
+
+
+def main(quick: bool = False):
+    shapes = QUICK_SHAPES if quick else FULL_SHAPES
+    records = [bench_shape(n, d, K, repeats=3)
+               for (n, d, K) in shapes]
+    payload = {
+        "mode": "quick" if quick else "full",
+        "jax_backend": jax.default_backend(),
+        "shapes": records,
+        "interpret_parity": _interpret_parity(),
+        "min_traffic_ratio": min(r["hbm_traffic_ratio"] for r in records),
+    }
+    (ROOT / "BENCH_interact.json").write_text(json.dumps(payload, indent=1))
+    return payload
+
+
+if __name__ == "__main__":
+    main()

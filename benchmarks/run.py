@@ -1,13 +1,31 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV; writes results/*.json consumed by
-EXPERIMENTS.md.
+EXPERIMENTS.md plus BENCH_interact.json at the repo root (the fused-engine
+perf trajectory, tracked from PR 1 onward).
+
+``--quick`` runs only the fused-interaction microbenchmark at reduced
+shapes/repeats — finishes in well under 2 minutes on one CPU core — and
+still emits BENCH_interact.json, so CI can track the hot-path trend cheaply.
 """
 from __future__ import annotations
 
+import argparse
 
-def main() -> None:
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="fused-interaction bench only, small shapes, "
+                         "<2 min on one CPU core")
+    args = ap.parse_args(argv)
+
     print("name,us_per_call,derived")
+    from . import bench_interact
+    if args.quick:
+        bench_interact.main(quick=True)
+        return
+    bench_interact.main()
     from . import bench_kernels
     bench_kernels.main()
     from . import bench_paper

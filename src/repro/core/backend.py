@@ -1,0 +1,213 @@
+"""Backend dispatch for the fused interaction engine.
+
+The bandit hot loop is two operations per round — *choose* (UCB scores →
+argmax → gather the chosen context) and *update* (rank-1 Sherman-Morrison
+on the per-user statistics).  This module selects between:
+
+  ``reference``  the pure-jnp math in ``repro.core.linucb`` (CPU/GPU, and
+                 the numerical oracle everywhere), and
+  ``pallas``     the fused TPU kernels in ``repro.kernels.interact`` /
+                 ``repro.kernels.rank1`` (``interpret=True`` off-TPU, so
+                 tier-1 still exercises the kernel path).
+
+Selection: explicit ``kind=`` argument > ``REPRO_BACKEND`` env var
+("reference" | "pallas" | "auto") > "auto" (pallas iff running on TPU).
+
+Padding happens once per run, not once per call: the backend precomputes
+the padded dims (users to the block multiple, d/K to sublane/lane
+multiples) at construction, the drivers pad the scan-carried state a single
+time per stage via ``pad_lin``/``pad_gram``/..., and every kernel entry
+point short-circuits when handed pre-aligned arrays.  Only the per-step
+context tensor (fresh every round) is padded inside the loop.  All padding
+is exact: zero feature columns contribute nothing to scores or updates,
+padded candidates are masked to -inf inside the choose kernel, and padded
+users carry a zero budget so their mask is always off.
+
+The backend is a NamedTuple of Python scalars — hashable, so drivers can
+thread it through ``jax.jit`` as a static argument.
+"""
+from __future__ import annotations
+
+import os
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import pad
+from ..kernels.interact import ops as interact_ops
+from ..kernels.rank1 import ops as rank1_ops
+from ..kernels.rank1.ref import rank1_update_inv_ref
+from . import linucb
+from .types import LinUCBState
+
+_ENV_FLAG = "REPRO_BACKEND"
+
+
+class InteractBackend(NamedTuple):
+    """Fused-interaction engine for fixed (n, d, K) run shapes."""
+
+    kind: str          # "reference" | "pallas"
+    n: int             # logical users
+    d: int             # logical feature dim
+    K: int             # logical candidates per round
+    n_pad: int         # users rounded to the block multiple
+    d_pad: int         # d rounded to the sublane multiple
+    K_pad: int         # K rounded to the lane multiple
+    block_users: int
+    interpret: bool    # run Pallas in interpret mode (CPU fallback)
+
+    # ---- pad-once helpers (all trace-time no-ops when already padded, and
+    # ---- identities for the reference backend) ------------------------------
+
+    def pad_users(self, a: jnp.ndarray, fill=0) -> jnp.ndarray:
+        """Pad the leading user axis n -> n_pad with ``fill``."""
+        if a.shape[0] == self.n_pad:
+            return a
+        pad = [(0, self.n_pad - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+        return jnp.pad(a, pad, constant_values=fill)
+
+    def unpad_users(self, a: jnp.ndarray) -> jnp.ndarray:
+        return a if a.shape[0] == self.n else a[: self.n]
+
+    def pad_vec(self, a: jnp.ndarray) -> jnp.ndarray:
+        """[n, d] -> [n_pad, d_pad] zero-padded."""
+        if a.shape == (self.n_pad, self.d_pad):
+            return a
+        return jnp.pad(a, ((0, self.n_pad - a.shape[0]),
+                           (0, self.d_pad - a.shape[1])))
+
+    def unpad_vec(self, a: jnp.ndarray) -> jnp.ndarray:
+        if a.shape == (self.n, self.d):
+            return a
+        return a[: self.n, : self.d]
+
+    def pad_gram(self, a: jnp.ndarray) -> jnp.ndarray:
+        """[n, d, d] -> [n_pad, d_pad, d_pad], identity on the padded diag
+        (keeps padded Gram/inverse-Gram blocks well-conditioned; the real
+        d x d block never mixes with the pad because padded x columns are
+        zero)."""
+        if a.shape == (self.n_pad, self.d_pad, self.d_pad):
+            return a
+        n, d = a.shape[0], a.shape[1]
+        out = jnp.pad(a, ((0, self.n_pad - n), (0, self.d_pad - d),
+                          (0, self.d_pad - d)))
+        i = jnp.arange(d, self.d_pad)
+        out = out.at[:, i, i].set(1.0)
+        if n < self.n_pad:
+            j = jnp.arange(d)
+            out = out.at[n:, j, j].set(1.0)
+        return out
+
+    def unpad_gram(self, a: jnp.ndarray) -> jnp.ndarray:
+        if a.shape == (self.n, self.d, self.d):
+            return a
+        return a[: self.n, : self.d, : self.d]
+
+    def pad_ctx(self, a: jnp.ndarray) -> jnp.ndarray:
+        """[n, K, d] -> [n_pad, K_pad, d_pad] zero-padded (per step)."""
+        if a.shape == (self.n_pad, self.K_pad, self.d_pad):
+            return a
+        return jnp.pad(a, ((0, self.n_pad - a.shape[0]),
+                           (0, self.K_pad - a.shape[1]),
+                           (0, self.d_pad - a.shape[2])))
+
+    def pad_lin(self, lin: LinUCBState) -> LinUCBState:
+        if self.kind == "reference":
+            return lin
+        return LinUCBState(
+            M=self.pad_gram(lin.M),
+            Minv=self.pad_gram(lin.Minv),
+            b=self.pad_vec(lin.b),
+            occ=self.pad_users(lin.occ),
+        )
+
+    def unpad_lin(self, lin: LinUCBState) -> LinUCBState:
+        if self.kind == "reference":
+            return lin
+        return LinUCBState(
+            M=self.unpad_gram(lin.M),
+            Minv=self.unpad_gram(lin.Minv),
+            b=self.unpad_vec(lin.b),
+            occ=self.unpad_users(lin.occ),
+        )
+
+    # ---- the two hot-loop operations ---------------------------------------
+
+    def choose(self, w, Minv, contexts, occ, alpha):
+        """(x, choice) at the width of ``w`` (padded state in, padded out;
+        logical-width inputs get logical-width outputs).
+
+        Pallas kind: one kernel computes scores, argmax and the chosen-x
+        gather in a single VMEM residency; the [n, K] score tensor never
+        reaches HBM.  Reference kind: the seed linucb math.
+        """
+        if self.kind == "reference":
+            choice = linucb.choose_batch(w, Minv, contexts, occ, alpha)
+            x = jnp.take_along_axis(
+                contexts, choice[:, None, None], axis=1
+            )[:, 0]
+            return x, choice
+        choice, x = interact_ops.choose(
+            self.pad_vec(w), self.pad_gram(Minv), self.pad_ctx(contexts),
+            self.pad_users(occ), alpha,
+            use_pallas=True, block_users=self.block_users,
+            interpret=self.interpret, k_live=self.K,
+        )
+        return x[: w.shape[0], : w.shape[1]], choice[: w.shape[0]]
+
+    def update_lin(self, lin: LinUCBState, x, r, mask) -> LinUCBState:
+        """One masked interaction for every user: M, Minv, b in one pass."""
+        if self.kind == "reference":
+            return linucb.masked_batch_update(lin, x, r, mask)
+        M, Minv, b = rank1_ops.rank1_update(
+            lin.M, lin.Minv, lin.b, x, r, mask,
+            use_pallas=True, block_users=self.block_users,
+            interpret=self.interpret,
+        )
+        return LinUCBState(M, Minv, b, lin.occ + mask.astype(jnp.int32))
+
+    def update_inv(self, Minv, b, x, r, mask):
+        """M-free masked update (the sharded runtime carries no M)."""
+        if self.kind == "reference":
+            return rank1_update_inv_ref(Minv, b, x, r, mask)
+        return rank1_ops.rank1_update_inv(
+            Minv, b, x, r, mask,
+            use_pallas=True, block_users=self.block_users,
+            interpret=self.interpret,
+        )
+
+
+def resolve_kind(kind: str | None = None) -> str:
+    kind = kind or os.environ.get(_ENV_FLAG) or "auto"   # "" -> auto
+    if kind == "auto":
+        kind = "pallas" if jax.default_backend() == "tpu" else "reference"
+    if kind not in ("reference", "pallas"):
+        raise ValueError(
+            f"unknown backend {kind!r}; want reference|pallas|auto"
+        )
+    return kind
+
+
+def get_backend(
+    n: int,
+    d: int,
+    K: int,
+    kind: str | None = None,
+    *,
+    block_users: int = 256,
+    interpret: bool | None = None,
+) -> InteractBackend:
+    """Build the engine for a run's (n, d, K); padded dims fixed here once."""
+    kind = resolve_kind(kind)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if kind == "reference":
+        n_pad, d_pad, K_pad, bu = n, d, K, block_users
+    else:
+        n_pad, d_pad, K_pad, bu = pad.padded_dims(n, d, K, block_users)
+    return InteractBackend(
+        kind=kind, n=n, d=d, K=K,
+        n_pad=n_pad, d_pad=d_pad, K_pad=K_pad,
+        block_users=bu, interpret=interpret,
+    )

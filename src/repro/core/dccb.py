@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from . import clustering, linucb
+from .backend import InteractBackend, get_backend
 from .env_ops import EnvOps
 from .types import BanditHyper, Metrics
 
@@ -62,31 +63,32 @@ def init_state(n_users: int, d: int, L: int) -> DCCBState:
     )
 
 
-def _ucb_choice_solve(M, b, contexts, occ, alpha):
-    """Batched UCB using solves against the (non-inverted) Gram matrices.
-
-    M: [n,d,d], b: [n,d], contexts: [n,K,d] -> choice [n] i32.
-    """
-    w = jnp.linalg.solve(M, b[..., None])[..., 0]               # [n, d]
-    Z = jnp.linalg.solve(M, jnp.swapaxes(contexts, -1, -2))     # [n, d, K]
-    quad = jnp.einsum("nkd,ndk->nk", contexts, Z)
-    est = jnp.einsum("nkd,nd->nk", contexts, w)
-    bonus = alpha * jnp.sqrt(jnp.maximum(quad, 0.0)) * jnp.sqrt(
-        jnp.log1p(occ.astype(contexts.dtype))
-    )[:, None]
-    return jnp.argmax(est + bonus, axis=-1)
-
-
 def interaction_phase(state: DCCBState, ops: EnvOps, key: jax.Array,
-                      hyper: BanditHyper, L: int):
-    """L lockstep interaction steps; every user's buffer turns over once."""
+                      hyper: BanditHyper, L: int,
+                      backend: InteractBackend | None = None):
+    """L lockstep interaction steps; every user's buffer turns over once.
+
+    DCCB maintains the *non-inverted* lagged Gram ``Mw`` (gossip averaging
+    creates rank-2 mixtures Sherman-Morrison can't track), so each step
+    inverts it batched and hands the result to the fused choose engine —
+    one O(d^3) factorization per user per step either way (the seed did two
+    ``linalg.solve`` factorizations), but the scores/argmax/gather now stay
+    in one kernel on the Pallas backend.
+    """
+    n, d = state.bw.shape
+    be = backend or get_backend(n, d, hyper.n_candidates)
 
     def step(carry, k):
         s = carry
         k_ctx, k_rew = jax.random.split(k)
         contexts = ops.contexts_fn(k_ctx, s.occ)                # [n, K, d]
-        choice = _ucb_choice_solve(s.Mw, s.bw, contexts, s.occ, hyper.alpha)
-        x = jnp.take_along_axis(contexts, choice[:, None, None], axis=1)[:, 0]
+        # Minv/w are derived fresh each step (Mw moves by buffer pops, not
+        # rank-1 updates), so unlike the distclub drivers there is no
+        # carried state to pad once per stage — choose pads its per-step
+        # inputs, which these already are.
+        Minv = jnp.linalg.inv(s.Mw)
+        w = linucb.user_vector(Minv, s.bw)
+        x, choice = be.choose(w, Minv, contexts, s.occ, hyper.alpha)
         realized, expected, best, rand = ops.rewards_fn(
             k_rew, s.occ, contexts, choice
         )
@@ -176,16 +178,25 @@ def gossip_round(state: DCCBState, key: jax.Array, hyper: BanditHyper,
     )
 
 
-@partial(jax.jit, static_argnames=("ops", "hyper", "n_epochs", "d", "L"))
 def run(ops: EnvOps, key: jax.Array, hyper: BanditHyper, n_epochs: int,
-        d: int, L: int):
+        d: int, L: int, backend: InteractBackend | None = None):
     """n_epochs x (L interaction steps + gossip).  Returns (state, metrics,
     cluster-count after each gossip round)."""
+    if backend is None:
+        backend = get_backend(ops.n_users, d, hyper.n_candidates)
+    return _run(ops, key, hyper, n_epochs, d, L, backend)
+
+
+@partial(jax.jit,
+         static_argnames=("ops", "hyper", "n_epochs", "d", "L", "backend"))
+def _run(ops: EnvOps, key: jax.Array, hyper: BanditHyper, n_epochs: int,
+         d: int, L: int, backend: InteractBackend):
     state = init_state(ops.n_users, d, L)
 
     def epoch(state, k):
         k_int, k_gos = jax.random.split(k)
-        state, metrics = interaction_phase(state, ops, k_int, hyper, L)
+        state, metrics = interaction_phase(state, ops, k_int, hyper, L,
+                                           backend)
         state = gossip_round(state, k_gos, hyper, L, d)
         n_clu = clustering.num_clusters(
             clustering.connected_components(state.adj)

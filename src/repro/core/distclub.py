@@ -19,6 +19,15 @@ cluster statistics are frozen between stage-2 refreshes (exactly the paper's
 in parallel without conflicts; cross-step ordering per user is preserved by
 the scan.  The regret analysis in paper §4 covers this schedule — it is the
 same lazy-update argument used to justify DCCB's buffering.
+
+Execution backends: stages 1/3 run through the fused interaction engine
+(``repro.core.backend``) — choose (scores+argmax+gather in one kernel) and
+the fused rank-1 update.  The scan-carried LinUCB state is padded to the
+kernel block shape ONCE per stage, not per step; only the fresh per-step
+context tensor is padded inside the loop.  Stage-3 additionally hoists the
+frozen per-user cluster snapshots (Mcinv[labels], bc[labels] and the cluster
+user vector) out of the scan — they only change at stage-2 refreshes, so
+gathering them per step was pure HBM traffic.
 """
 from __future__ import annotations
 
@@ -28,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from . import clustering, linucb
+from .backend import InteractBackend, get_backend
 from .env_ops import EnvOps
 from .types import BanditHyper, ClusterStats, DistCLUBState, Metrics
 
@@ -48,19 +58,6 @@ def init_state(n_users: int, d: int, hyper: BanditHyper) -> DistCLUBState:
     )
 
 
-def _interaction_step(lin, theta, minv_eff, contexts, key, mask, alpha):
-    """Shared inner step for stages 1 and 3.
-
-    theta/minv_eff: per-user scoring parameters ([n,d], [n,d,d]).
-    Returns (new_lin, choice [n] i32).
-    """
-    choice = linucb.choose_batch(theta, minv_eff, contexts, lin.occ, alpha)
-    x = jnp.take_along_axis(
-        contexts, choice[:, None, None], axis=1
-    )[:, 0]                                                     # [n, d]
-    return x, choice
-
-
 def _metrics_of(realized, expected, best, rand, mask):
     m = mask.astype(realized.dtype)
     return Metrics(
@@ -71,29 +68,39 @@ def _metrics_of(realized, expected, best, rand, mask):
     )
 
 
-def stage1(state: DistCLUBState, ops: EnvOps, key: jax.Array, hyper: BanditHyper):
+def _default_backend(state: DistCLUBState, hyper: BanditHyper):
+    n, d = state.lin.b.shape
+    return get_backend(n, d, hyper.n_candidates)
+
+
+def stage1(state: DistCLUBState, ops: EnvOps, key: jax.Array,
+           hyper: BanditHyper, backend: InteractBackend | None = None):
     """User-based rounds: embarrassingly parallel across users."""
+    be = backend or _default_backend(state, hyper)
+    lin0 = be.pad_lin(state.lin)                  # pad once per stage
+    budget = be.pad_users(state.u_rounds)         # padded users: budget 0
 
     def step(carry, inp):
         lin = carry
         step_idx, k = inp
-        mask = step_idx < state.u_rounds
+        mask = step_idx < budget
         k_ctx, k_rew = jax.random.split(k)
-        contexts = ops.contexts_fn(k_ctx, lin.occ)
+        occ_log = be.unpad_users(lin.occ)
+        contexts = ops.contexts_fn(k_ctx, occ_log)
         v = linucb.user_vector(lin.Minv, lin.b)
-        x, choice = _interaction_step(
-            lin, v, lin.Minv, contexts, k, mask, hyper.alpha
-        )
+        x, choice = be.choose(v, lin.Minv, contexts, lin.occ, hyper.alpha)
         realized, expected, best, rand = ops.rewards_fn(
-            k_rew, lin.occ, contexts, choice
+            k_rew, occ_log, contexts, be.unpad_users(choice)
         )
-        lin = linucb.masked_batch_update(lin, x, realized, mask)
-        return lin, _metrics_of(realized, expected, best, rand, mask)
+        lin = be.update_lin(lin, x, be.pad_users(realized), mask)
+        return lin, _metrics_of(
+            realized, expected, best, rand, be.unpad_users(mask)
+        )
 
     steps = jnp.arange(hyper.max_rounds)
     keys = jax.random.split(key, hyper.max_rounds)
-    lin, metrics = jax.lax.scan(step, state.lin, (steps, keys))
-    return state._replace(lin=lin), metrics
+    lin, metrics = jax.lax.scan(step, lin0, (steps, keys))
+    return state._replace(lin=be.unpad_lin(lin)), metrics
 
 
 def stage2(state: DistCLUBState, hyper: BanditHyper, d: int) -> DistCLUBState:
@@ -119,48 +126,61 @@ def stage2(state: DistCLUBState, hyper: BanditHyper, d: int) -> DistCLUBState:
     )
 
 
-def stage3(state: DistCLUBState, ops: EnvOps, key: jax.Array, hyper: BanditHyper):
+def stage3(state: DistCLUBState, ops: EnvOps, key: jax.Array,
+           hyper: BanditHyper, backend: InteractBackend | None = None):
     """Cluster-based rounds with the beta personalization heuristic."""
+    be = backend or _default_backend(state, hyper)
     labels = state.graph.labels
+    stats = state.clusters
+    n = labels.shape[0]
+
+    # Frozen during the stage (the paper's lazy cluster statistics): hoist
+    # the per-user snapshots and the cluster user-vector out of the scan.
+    uMcinv = be.pad_gram(stats.Mcinv[labels])     # [n*, d*, d*]
+    ubc = be.pad_vec(stats.bc[labels])            # [n*, d*]
+    v_clu = linucb.user_vector(uMcinv, ubc)       # [n*, d*]
+    usize = jnp.maximum(stats.size[labels], 1)    # [n]
+
+    lin0 = be.pad_lin(state.lin)
+    budget = be.pad_users(state.c_rounds)
 
     def step(carry, inp):
-        lin, stats = carry
+        lin, seen = carry
         step_idx, k = inp
-        mask = step_idx < state.c_rounds
+        mask = step_idx < budget
         k_ctx, k_rew = jax.random.split(k)
-        contexts = ops.contexts_fn(k_ctx, lin.occ)
+        occ_log = be.unpad_users(lin.occ)
+        contexts = ops.contexts_fn(k_ctx, occ_log)
 
-        size = jnp.maximum(stats.size[labels], 1)
-        mean_occ = stats.seen[labels].astype(jnp.float32) / size
-        use_own = lin.occ.astype(jnp.float32) >= hyper.beta * mean_occ
-
+        mean_occ = seen[labels].astype(jnp.float32) / usize
+        use_own = be.pad_users(
+            occ_log.astype(jnp.float32) >= hyper.beta * mean_occ
+        )
         v_own = linucb.user_vector(lin.Minv, lin.b)
-        v_clu = linucb.user_vector(stats.Mcinv[labels], stats.bc[labels])
         theta = jnp.where(use_own[:, None], v_own, v_clu)
-        minv_eff = jnp.where(
-            use_own[:, None, None], lin.Minv, stats.Mcinv[labels]
-        )
+        minv_eff = jnp.where(use_own[:, None, None], lin.Minv, uMcinv)
 
-        x, choice = _interaction_step(
-            lin, theta, minv_eff, contexts, k, mask, hyper.alpha
-        )
+        x, choice = be.choose(theta, minv_eff, contexts, lin.occ, hyper.alpha)
         realized, expected, best, rand = ops.rewards_fn(
-            k_rew, lin.occ, contexts, choice
+            k_rew, occ_log, contexts, be.unpad_users(choice)
         )
-        lin = linucb.masked_batch_update(lin, x, realized, mask)
-        seen = stats.seen + jax.ops.segment_sum(
-            mask.astype(jnp.int32), labels, num_segments=labels.shape[0]
+        lin = be.update_lin(lin, x, be.pad_users(realized), mask)
+        mask_log = be.unpad_users(mask)
+        seen = seen + jax.ops.segment_sum(
+            mask_log.astype(jnp.int32), labels, num_segments=n
         )
-        return (lin, stats._replace(seen=seen)), _metrics_of(
-            realized, expected, best, rand, mask
+        return (lin, seen), _metrics_of(
+            realized, expected, best, rand, mask_log
         )
 
     steps = jnp.arange(hyper.max_rounds)
     keys = jax.random.split(key, hyper.max_rounds)
-    (lin, stats), metrics = jax.lax.scan(
-        step, (state.lin, state.clusters), (steps, keys)
+    (lin, seen), metrics = jax.lax.scan(
+        step, (lin0, stats.seen), (steps, keys)
     )
-    return state._replace(lin=lin, clusters=stats), metrics
+    return state._replace(
+        lin=be.unpad_lin(lin), clusters=stats._replace(seen=seen)
+    ), metrics
 
 
 def stage4(state: DistCLUBState, hyper: BanditHyper) -> DistCLUBState:
@@ -177,27 +197,42 @@ def stage4(state: DistCLUBState, hyper: BanditHyper) -> DistCLUBState:
     return state._replace(u_rounds=u_rounds, c_rounds=c_rounds)
 
 
-@partial(jax.jit, static_argnames=("ops", "hyper", "n_epochs", "d"))
 def run(
     ops: EnvOps,
     key: jax.Array,
     hyper: BanditHyper,
     n_epochs: int,
     d: int,
+    backend: InteractBackend | None = None,
 ) -> tuple[DistCLUBState, Metrics, jnp.ndarray]:
     """Run ``n_epochs`` of the four-stage loop.
 
-    Returns (final state, per-scan-step metrics stacked over the whole run,
-    cluster-count after each stage-2).
+    ``backend`` selects the interaction engine (default: REPRO_BACKEND env
+    flag, then pallas-iff-TPU).  Returns (final state, per-scan-step metrics
+    stacked over the whole run, cluster-count after each stage-2).
     """
+    if backend is None:
+        backend = get_backend(ops.n_users, d, hyper.n_candidates)
+    return _run(ops, key, hyper, n_epochs, d, backend)
+
+
+@partial(jax.jit, static_argnames=("ops", "hyper", "n_epochs", "d", "backend"))
+def _run(
+    ops: EnvOps,
+    key: jax.Array,
+    hyper: BanditHyper,
+    n_epochs: int,
+    d: int,
+    backend: InteractBackend,
+) -> tuple[DistCLUBState, Metrics, jnp.ndarray]:
     state = init_state(ops.n_users, d, hyper)
 
     def epoch(state, k):
         k1, k3 = jax.random.split(k)
-        state, m1 = stage1(state, ops, k1, hyper)
+        state, m1 = stage1(state, ops, k1, hyper, backend)
         state = stage2(state, hyper, d)
         n_clu = clustering.num_clusters(state.graph.labels)
-        state, m3 = stage3(state, ops, k3, hyper)
+        state, m3 = stage3(state, ops, k3, hyper, backend)
         state = stage4(state, hyper)
         metrics = jax.tree.map(
             lambda a, b: jnp.concatenate([a, b]), m1, m3

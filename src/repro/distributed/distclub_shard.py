@@ -30,6 +30,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core import clustering, linucb
+from ..core.backend import InteractBackend, get_backend
 from ..core.env import expected_reward, sample_contexts
 from ..core.types import BanditHyper, Metrics
 
@@ -97,56 +98,68 @@ def init_state(n: int, d: int, hyper: BanditHyper, theta: jnp.ndarray) -> Sharde
 
 
 def _local_round(lin_Minv, lin_b, occ, theta_true, budget, key, hyper,
-                 score_fn):
-    """Shared stage-1/3 inner loop over a local user shard. Zero comms."""
+                 score_fn, be: InteractBackend):
+    """Shared stage-1/3 inner loop over a local user shard. Zero comms.
+
+    Runs through the fused interaction engine: the local (Minv, b, occ)
+    shard is padded to the kernel block shape ONCE before the scan and the
+    scan carries the padded state; per step only the fresh context tensor
+    is padded.  ``score_fn`` receives and returns padded-width arrays.
+    The M-free fused update applies here — the sharded state carries no
+    Gram matrix, so the state traffic per round is one read + one write of
+    Minv (plus the choose read) instead of the reference path's separate
+    score-read / Sherman-Morrison read / subtract-and-write sweeps.
+    """
     K = hyper.n_candidates
     d = lin_b.shape[-1]
+    n_loc = lin_b.shape[0]
+
+    Minv0 = be.pad_gram(lin_Minv)                 # pad once per stage
+    b0 = be.pad_vec(lin_b)
+    occ0 = be.pad_users(occ)
+    budget_p = be.pad_users(budget)               # padded users: budget 0
 
     def step(carry, inp):
         Minv, b, occ = carry
         step_idx, k = inp
         k_ctx, k_rew = jax.random.split(k)
-        mask = step_idx < budget
-        contexts = sample_contexts(k_ctx, (Minv.shape[0],), K, d)
+        mask = step_idx < budget_p
+        contexts = sample_contexts(k_ctx, (n_loc,), K, d)
         w, minv_eff = score_fn(Minv, b, occ)
-        est = jnp.einsum("nkd,nd->nk", contexts, w)
-        quad = jnp.einsum("nkd,nde,nke->nk", contexts, minv_eff, contexts)
-        bonus = hyper.alpha * jnp.sqrt(jnp.maximum(quad, 0.0)) * jnp.sqrt(
-            jnp.log1p(occ.astype(jnp.float32))
-        )[:, None]
-        choice = jnp.argmax(est + bonus, axis=-1)
-        x = jnp.take_along_axis(contexts, choice[:, None, None], axis=1)[:, 0]
+        x, choice = be.choose(w, minv_eff, contexts, occ, hyper.alpha)
+        choice_log = be.unpad_users(choice)
 
         p_all = expected_reward(theta_true[:, None, :], contexts)
-        p_choice = jnp.take_along_axis(p_all, choice[:, None], axis=1)[:, 0]
+        p_choice = jnp.take_along_axis(p_all, choice_log[:, None],
+                                       axis=1)[:, 0]
         realized = (jax.random.uniform(k_rew, p_choice.shape) < p_choice
                     ).astype(jnp.float32)
 
-        m = mask.astype(jnp.float32)
-        xm = x * m[:, None]
-        Minv = linucb.sherman_morrison(Minv, xm)
-        b = b + (realized * m)[:, None] * x
+        Minv, b = be.update_inv(Minv, b, x, be.pad_users(realized), mask)
         occ = occ + mask.astype(jnp.int32)
+        m = be.unpad_users(mask).astype(jnp.float32)
         metrics = Metrics(
             reward=jnp.sum(realized * m),
             regret=jnp.sum((jnp.max(p_all, axis=-1) - p_choice) * m),
             rand_reward=jnp.sum(jnp.mean(p_all, axis=-1) * m),
-            interactions=jnp.sum(mask.astype(jnp.int32)),
+            interactions=jnp.sum(m.astype(jnp.int32)),
         )
         return (Minv, b, occ), metrics
 
     steps = jnp.arange(hyper.max_rounds)
     keys = jax.random.split(key, hyper.max_rounds)
     (Minv, b, occ), metrics = jax.lax.scan(
-        step, (lin_Minv, lin_b, occ), (steps, keys)
+        step, (Minv0, b0, occ0), (steps, keys)
     )
     # fold per-step metric sums into one per-round Metrics row
     metrics = jax.tree.map(lambda v: jnp.sum(v, axis=0), metrics)
-    return Minv, b, occ, metrics
+    return (be.unpad_gram(Minv), be.unpad_vec(b), be.unpad_users(occ),
+            metrics)
 
 
 def build_epoch_fn(mesh: Mesh, axes: tuple[str, ...], n: int, d: int,
-                   hyper: BanditHyper):
+                   hyper: BanditHyper,
+                   backend: InteractBackend | None = None):
     """Returns jit-able epoch(state, key) -> (state, metrics, n_clusters)."""
     n_shards = 1
     for a in axes:
@@ -154,6 +167,8 @@ def build_epoch_fn(mesh: Mesh, axes: tuple[str, ...], n: int, d: int,
     if n % n_shards:
         raise ValueError(f"n_users={n} must divide the {n_shards}-way mesh")
     n_local = n // n_shards
+    # the engine operates on the LOCAL shard inside shard_map
+    be = backend or get_backend(n_local, d, hyper.n_candidates)
 
     def epoch(state: ShardedDistCLUB, key: jax.Array):
         idx = jax.lax.axis_index(axes)
@@ -168,7 +183,7 @@ def build_epoch_fn(mesh: Mesh, axes: tuple[str, ...], n: int, d: int,
 
         Minv, b, occ, m1 = _local_round(
             state.Minv, state.b, state.occ, state.theta,
-            state.u_rounds, k1, hyper, score_own,
+            state.u_rounds, k1, hyper, score_own, be,
         )
 
         # ---- stage 2: the communication stage ------------------------------
@@ -198,6 +213,10 @@ def build_epoch_fn(mesh: Mesh, axes: tuple[str, ...], n: int, d: int,
             new_local = jnp.minimum(labels[row0 + jnp.arange(n_local)],
                                     jnp.min(neigh, axis=1))
             new = jax.lax.all_gather(new_local, axes, tiled=True)
+            # pointer-doubling on the replicated labels (free of comms):
+            # chase label->label links so convergence needs O(log n) hops
+            # instead of O(diameter).
+            new = jnp.minimum(new, new[new])
             changed = jnp.any(new != labels)
             return new, changed, it + 1
 
@@ -230,17 +249,23 @@ def build_epoch_fn(mesh: Mesh, axes: tuple[str, ...], n: int, d: int,
         n_clusters = jnp.sum(labels == init)
 
         # ---- stage 3: cluster-based rounds (local only; stats frozen) ------
+        # cluster snapshots are frozen for the whole stage: pad them and
+        # compute the cluster user-vector once, outside the scan.
+        uMcinv_p = be.pad_gram(uMcinv)
+        ubc_p = be.pad_vec(ubc)
+        v_clu = linucb.user_vector(uMcinv_p, ubc_p)
+        umean_p = be.pad_users(umean_occ)
+
         def score_cluster(Minv_, b_, occ_):
-            use_own = occ_.astype(jnp.float32) >= hyper.beta * umean_occ
+            use_own = occ_.astype(jnp.float32) >= hyper.beta * umean_p
             v_own = linucb.user_vector(Minv_, b_)
-            v_clu = linucb.user_vector(uMcinv, ubc)
             w = jnp.where(use_own[:, None], v_own, v_clu)
-            minv_eff = jnp.where(use_own[:, None, None], Minv_, uMcinv)
+            minv_eff = jnp.where(use_own[:, None, None], Minv_, uMcinv_p)
             return w, minv_eff
 
         Minv, b, occ, m3 = _local_round(
             Minv, b, occ, state.theta, state.c_rounds, k3, hyper,
-            score_cluster,
+            score_cluster, be,
         )
 
         # ---- stage 4: budget rebalancing (local) ----------------------------
@@ -271,9 +296,10 @@ def build_epoch_fn(mesh: Mesh, axes: tuple[str, ...], n: int, d: int,
 
 
 def make_runtime(mesh: Mesh, axes: tuple[str, ...], n: int, d: int,
-                 hyper: BanditHyper):
+                 hyper: BanditHyper,
+                 backend: InteractBackend | None = None):
     """(init_fn, jit'd epoch_fn) pair with global-array in/out shardings."""
-    epoch = build_epoch_fn(mesh, axes, n, d, hyper)
+    epoch = build_epoch_fn(mesh, axes, n, d, hyper, backend)
     specs = state_specs(axes)
     shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                              is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,114 @@
+"""Fused choose Pallas kernel — the bandit interaction hot path.
+
+One grid step serves a *block of users* end to end:
+
+    score[u,k]  = ctx[u,k,:].w[u] + alpha sqrt(ctx Minv ctx) sqrt(log1p(occ[u]))
+    choice[u]   = argmax_k score[u,k]          (first index on ties)
+    x[u,:]      = ctx[u, choice[u], :]         (one-hot MXU gather)
+
+This is the fusion of ``kernels/ucb`` scoring with the argmax and the
+chosen-context gather that the reference drivers run as three separate XLA
+ops.  The payoff is HBM traffic, not flops: the ``[n, K]`` score tensor and
+the ``[n, K, d]`` scored-context intermediate live and die in VMEM — the
+kernel reads each user's (w, Minv, ctx, occ) exactly once and writes only
+``choice`` ([n] i32) and the chosen ``x`` ([n, d]).  The reference path
+writes + re-reads scores and re-reads ctx for the gather, ~4 K d extra words
+per user per round (see README "Backends & HBM accounting").
+
+Padded candidates (K rounded up to the lane multiple by ``ops.py``) are
+masked to -inf *inside* the kernel so a zero-padded candidate (score 0) can
+never beat a real candidate with a negative score; padded feature columns
+are exact by the same zero-column argument as ``kernels/ucb``.
+
+VMEM budget per grid step (f32 words) matches the ucb kernel plus the
+one-hot gather: ctx (Bu K d) + Minv (Bu d d) + scores/onehot (2 Bu K)
++ w/x (2 Bu d).  Defaults (Bu=256, K=128, d=32): ~1.5 MiB << 16 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _choose_kernel(w_ref, minv_ref, ctx_ref, occ_ref, scal_ref,
+                   choice_ref, x_ref):
+    ctx = ctx_ref[...]          # [Bu, K, d]
+    minv = minv_ref[...]        # [Bu, d, d]
+    w = w_ref[...]              # [Bu, d]
+    occ = occ_ref[...]          # [Bu]
+    alpha = scal_ref[0]
+    k_live = scal_ref[1]        # number of real (non-padded) candidates
+
+    est = jax.lax.dot_general(
+        ctx, w,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                                   # [Bu, K]
+    t = jax.lax.dot_general(
+        ctx, minv,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                                   # [Bu, K, d]
+    quad = jnp.sum(t * ctx, axis=-1)                    # [Bu, K]
+    bonus = alpha * jnp.sqrt(jnp.maximum(quad, 0.0)) * jnp.sqrt(
+        jnp.log1p(occ.astype(jnp.float32))
+    )[:, None]
+
+    bu, K = est.shape
+    kidx = jax.lax.broadcasted_iota(jnp.int32, (bu, K), 1)
+    live = kidx.astype(jnp.float32) < k_live
+    scores = jnp.where(live, est + bonus, -jnp.inf)
+
+    choice = jnp.argmax(scores, axis=-1).astype(jnp.int32)   # [Bu]
+    onehot = (kidx == choice[:, None]).astype(jnp.float32)   # [Bu, K]
+    x = jax.lax.dot_general(
+        onehot, ctx,
+        dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                                        # [Bu, d]
+    choice_ref[...] = choice
+    x_ref[...] = x
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k_live", "block_users", "interpret"))
+def choose_pallas(
+    w: jnp.ndarray,          # [n, d]   (n % block_users == 0; pad in ops.py)
+    Minv: jnp.ndarray,       # [n, d, d]
+    contexts: jnp.ndarray,   # [n, K, d]
+    occ: jnp.ndarray,        # [n] i32
+    alpha: float,
+    k_live: int,             # candidates beyond this index are padding
+    *,
+    block_users: int = 256,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (choice [n] i32, x [n, d]) — scores never touch HBM."""
+    n, K, d = contexts.shape
+    assert n % block_users == 0, (n, block_users)
+    grid = (n // block_users,)
+    scal = jnp.array([alpha, float(k_live)], jnp.float32)
+
+    return pl.pallas_call(
+        _choose_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_users, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_users, d, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_users, K, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_users,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_users,), lambda i: (i,)),
+            pl.BlockSpec((block_users, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w, Minv, contexts, occ, scal)

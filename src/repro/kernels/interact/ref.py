@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused choose kernel.
+
+Kept in terms of ``linucb.choose_batch`` semantics: score, first-index
+argmax, gather.  This is also the CPU/GPU execution path when the Pallas
+backend is off.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..ucb.ref import ucb_scores_ref
+
+
+def choose_ref(
+    w: jnp.ndarray,          # [n, d]
+    Minv: jnp.ndarray,       # [n, d, d]
+    contexts: jnp.ndarray,   # [n, K, d]
+    occ: jnp.ndarray,        # [n] i32
+    alpha: float,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (choice [n] i32, x [n, d])."""
+    scores = ucb_scores_ref(w, Minv, contexts, occ, alpha)
+    choice = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+    x = jnp.take_along_axis(contexts, choice[:, None, None], axis=1)[:, 0]
+    return choice, x

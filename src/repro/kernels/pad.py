@@ -1,0 +1,30 @@
+"""Shared TPU padding policy for the bandit kernels.
+
+Single source of truth for the alignment the ucb / rank1 / interact kernels
+assume: f32 sublane multiple for the feature dim, lane multiple for the
+candidate dim, and a user-block multiple for the batch dim.  The ops
+wrappers and ``core.backend`` all derive their padded shapes here, so the
+aligned-shape short-circuits can never drift out of agreement with the
+kernels' block asserts.
+"""
+from __future__ import annotations
+
+LANE = 128     # TPU lane width
+SUB = 8        # f32 sublane multiple
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def user_block(n: int, block_users: int = 256) -> tuple[int, int]:
+    """(n_pad, block) — users rounded up to a whole number of blocks."""
+    bu = min(block_users, round_up(n, SUB))
+    return round_up(n, bu), bu
+
+
+def padded_dims(n: int, d: int, K: int,
+                block_users: int = 256) -> tuple[int, int, int, int]:
+    """(n_pad, d_pad, K_pad, block) the fused kernels run at."""
+    n_pad, bu = user_block(n, block_users)
+    return n_pad, round_up(d, SUB), round_up(K, LANE), bu

@@ -4,14 +4,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .rank1 import rank1_update_pallas
-from .ref import rank1_update_ref
+from ..pad import SUB, round_up, user_block
+from .rank1 import rank1_update_inv_pallas, rank1_update_pallas
+from .ref import rank1_update_inv_ref, rank1_update_ref
 
-_SUB = 8
 
-
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
+def _dims(n: int, d: int, block_users: int):
+    np_, bu = user_block(n, block_users)
+    return np_, round_up(d, SUB), bu
 
 
 def rank1_update(
@@ -23,7 +23,9 @@ def rank1_update(
 ):
     """(M', Minv', b') — fused masked Sherman-Morrison update.
 
-    Zero-padding users is exact (mask=0 rows are identity updates).
+    Zero-padding users is exact (mask=0 rows are identity updates).  When
+    the inputs are already block/sublane aligned (the backend engine pads
+    state once per stage) no pad copies are issued.
     """
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
@@ -33,9 +35,14 @@ def rank1_update(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     n, d = b.shape
-    dp = _round_up(d, _SUB)
-    bu = min(block_users, _round_up(n, _SUB))
-    np_ = _round_up(n, bu)
+    np_, dp, bu = _dims(n, d, block_users)
+
+    if (n, d) == (np_, dp):
+        Mo, Minvo, bo = rank1_update_pallas(
+            M, Minv, b, x, r, mask.astype(jnp.float32),
+            block_users=bu, interpret=interpret,
+        )
+        return Mo, Minvo, bo
 
     def pad2(a):
         out = jnp.zeros((np_, dp, dp), jnp.float32).at[:n, :d, :d].set(a)
@@ -53,3 +60,41 @@ def rank1_update(
         Mp, Minvp, bp, xp, rp, mp, block_users=bu, interpret=interpret
     )
     return Mo[:n, :d, :d], Minvo[:n, :d, :d], bo[:n, :d]
+
+
+def rank1_update_inv(
+    Minv, b, x, r, mask,
+    *,
+    use_pallas: bool | None = None,
+    block_users: int = 256,
+    interpret: bool | None = None,
+):
+    """(Minv', b') — M-free fused update for the sharded runtime."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return rank1_update_inv_ref(Minv, b, x, r, mask)
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, d = b.shape
+    np_, dp, bu = _dims(n, d, block_users)
+
+    if (n, d) == (np_, dp):
+        return rank1_update_inv_pallas(
+            Minv, b, x, r, mask.astype(jnp.float32),
+            block_users=bu, interpret=interpret,
+        )
+
+    Minvp = jnp.zeros((np_, dp, dp), jnp.float32).at[:n, :d, :d].set(Minv)
+    i = jnp.arange(d, dp)
+    Minvp = Minvp.at[:, i, i].set(1.0)
+    bp = jnp.zeros((np_, dp), jnp.float32).at[:n, :d].set(b)
+    xp = jnp.zeros((np_, dp), jnp.float32).at[:n, :d].set(x)
+    rp = jnp.zeros((np_,), jnp.float32).at[:n].set(r)
+    mp = jnp.zeros((np_,), jnp.float32).at[:n].set(mask.astype(jnp.float32))
+
+    Minvo, bo = rank1_update_inv_pallas(
+        Minvp, bp, xp, rp, mp, block_users=bu, interpret=interpret
+    )
+    return Minvo[:n, :d, :d], bo[:n, :d]

@@ -41,6 +41,59 @@ def _rank1_kernel(m_ref, minv_ref, b_ref, x_ref, r_ref, mask_ref,
     b_out[...] = b + (r * msk)[:, None] * x
 
 
+def _rank1_inv_kernel(minv_ref, b_ref, x_ref, r_ref, mask_ref,
+                      minv_out, b_out):
+    """M-free variant: the sharded runtime drops the Gram matrix entirely
+    (stage-2 recovers it by inversion), so its hot loop only touches Minv
+    and b — 2 state passes instead of 4."""
+    Minv = minv_ref[...]       # [Bu, d, d]
+    b = b_ref[...]             # [Bu, d]
+    x = x_ref[...]             # [Bu, d]
+    r = r_ref[...]             # [Bu]
+    msk = mask_ref[...]        # [Bu] (f32 0/1)
+
+    xm = x * msk[:, None]
+    Mx = jax.lax.dot_general(
+        Minv, xm,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                                  # [Bu, d]
+    denom = 1.0 + jnp.sum(xm * Mx, axis=-1)            # [Bu]
+    outer_inv = Mx[:, :, None] * Mx[:, None, :]        # [Bu, d, d]
+    minv_out[...] = Minv - outer_inv / denom[:, None, None]
+    b_out[...] = b + (r * msk)[:, None] * x
+
+
+@functools.partial(jax.jit, static_argnames=("block_users", "interpret"))
+def rank1_update_inv_pallas(
+    Minv: jnp.ndarray,   # [n, d, d]
+    b: jnp.ndarray,      # [n, d]
+    x: jnp.ndarray,      # [n, d]
+    r: jnp.ndarray,      # [n]
+    mask: jnp.ndarray,   # [n] f32 (0/1)
+    *,
+    block_users: int = 256,
+    interpret: bool = False,
+):
+    n, d = b.shape
+    assert n % block_users == 0
+    grid = (n // block_users,)
+    bs2 = pl.BlockSpec((block_users, d, d), lambda i: (i, 0, 0))
+    bs1 = pl.BlockSpec((block_users, d), lambda i: (i, 0))
+    bs0 = pl.BlockSpec((block_users,), lambda i: (i,))
+    return pl.pallas_call(
+        _rank1_inv_kernel,
+        grid=grid,
+        in_specs=[bs2, bs1, bs1, bs0, bs0],
+        out_specs=[bs2, bs1],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(Minv, b, x, r, mask)
+
+
 @functools.partial(jax.jit, static_argnames=("block_users", "interpret"))
 def rank1_update_pallas(
     M: jnp.ndarray,      # [n, d, d]

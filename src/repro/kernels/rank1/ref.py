@@ -25,3 +25,20 @@ def rank1_update_ref(
     M_new = M + jnp.einsum("ni,nj->nij", xm, xm)
     b_new = b + (r * m)[:, None] * x
     return M_new, Minv_new, b_new
+
+
+def rank1_update_inv_ref(
+    Minv: jnp.ndarray,    # [n, d, d]
+    b: jnp.ndarray,       # [n, d]
+    x: jnp.ndarray,       # [n, d]
+    r: jnp.ndarray,       # [n]
+    mask: jnp.ndarray,    # [n] bool
+):
+    """M-free oracle: (Minv', b') only (the sharded runtime's state)."""
+    m = mask.astype(x.dtype)
+    xm = x * m[:, None]
+    Mx = jnp.einsum("nij,nj->ni", Minv, xm)
+    denom = 1.0 + jnp.einsum("ni,ni->n", xm, Mx)
+    Minv_new = Minv - jnp.einsum("ni,nj->nij", Mx, Mx) / denom[:, None, None]
+    b_new = b + (r * m)[:, None] * x
+    return Minv_new, b_new

@@ -4,15 +4,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..pad import padded_dims
 from .ref import ucb_scores_ref
 from .ucb import ucb_scores_pallas
-
-_LANE = 128     # TPU lane width
-_SUB = 8        # f32 sublane multiple
-
-
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
 
 
 def ucb_scores(
@@ -39,15 +33,15 @@ def ucb_scores(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     n, K, d = contexts.shape
-    dp = _round_up(d, _SUB)
-    Kp = _round_up(K, _LANE)
-    bu = min(block_users, _round_up(n, _SUB))
-    np_ = _round_up(n, bu)
+    np_, dp, Kp, bu = padded_dims(n, d, K, block_users)
 
-    wp = jnp.zeros((np_, dp), jnp.float32).at[:n, :d].set(w)
-    Mp = jnp.zeros((np_, dp, dp), jnp.float32).at[:n, :d, :d].set(Minv)
-    cp = jnp.zeros((np_, Kp, dp), jnp.float32).at[:n, :K, :d].set(contexts)
-    op = jnp.zeros((np_,), occ.dtype).at[:n].set(occ)
+    if (n, K, d) == (np_, Kp, dp):       # already aligned: no pad copies
+        wp, Mp, cp, op = w, Minv, contexts, occ
+    else:
+        wp = jnp.zeros((np_, dp), jnp.float32).at[:n, :d].set(w)
+        Mp = jnp.zeros((np_, dp, dp), jnp.float32).at[:n, :d, :d].set(Minv)
+        cp = jnp.zeros((np_, Kp, dp), jnp.float32).at[:n, :K, :d].set(contexts)
+        op = jnp.zeros((np_,), occ.dtype).at[:n].set(occ)
 
     out = ucb_scores_pallas(
         wp, Mp, cp, op, alpha, block_users=bu, interpret=interpret

@@ -1,0 +1,59 @@
+"""Fallback for environments without ``hypothesis``.
+
+When the real package is available it is re-exported untouched.  Otherwise
+``@given`` degrades to running the test body over a deterministic
+pseudo-random sample grid (seeded, so failures reproduce) — weaker than
+real property testing but it keeps the whole suite collectable and the
+invariants exercised on machines where ``hypothesis`` cannot be installed.
+
+Only the surface this repo uses is shimmed: positional
+``st.integers(lo, hi)`` / ``st.floats(lo, hi)`` and
+``@settings(max_examples=..., deadline=...)``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 5     # keep the no-hypothesis path fast
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies` module
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def settings(*, max_examples=None, **_kw):
+        def deco(fn):
+            if max_examples is not None:
+                fn._max_examples = min(max_examples, _FALLBACK_EXAMPLES)
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                rng = random.Random(1234)
+                n = getattr(wrapper, "_max_examples", _FALLBACK_EXAMPLES)
+                for _ in range(n):
+                    fn(*(s.sample(rng) for s in strategies))
+
+            # hypothesis consumes the strategy-bound params; hide the
+            # original signature (set by functools.wraps) so pytest doesn't
+            # look for fixtures named n/seed/...
+            del wrapper.__wrapped__
+            return wrapper
+        return deco
