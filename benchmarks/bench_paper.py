@@ -125,7 +125,7 @@ def run_all_datasets():
         dccb_bytes = max(rounds_dccb, 1) * n * (L + 1) * (d * d + d) * 4
         # DistCLUB: stage-2 every ~2*sigma rounds/user with sigma=2500
         stages = max(1, T // (n * 2 * 2500))
-        dclub_bytes = stages * 2 * n * (d * d + d) * 4
+        dclub_bytes = stages * distclub.stage2_comm_bytes(n, d)
         analytic[name] = {"dccb_GB": dccb_bytes / 1e9,
                           "distclub_MB": dclub_bytes / 1e6}
     return {"measured": rows, "table4_paper_scale_analytic": analytic}

@@ -1,12 +1,15 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV; writes results/*.json consumed by
-EXPERIMENTS.md plus BENCH_interact.json at the repo root (the fused-engine
-perf trajectory, tracked from PR 1 onward).
+EXPERIMENTS.md plus BENCH_interact.json / BENCH_graph.json at the repo root
+(the fused-engine and stage-2 graph-engine perf trajectories, tracked from
+PR 1 / PR 2 onward).
 
-``--quick`` runs only the fused-interaction microbenchmark at reduced
-shapes/repeats — finishes in well under 2 minutes on one CPU core — and
-still emits BENCH_interact.json, so CI can track the hot-path trend cheaply.
+``--quick`` runs the fused-interaction microbenchmark at reduced
+shapes/repeats plus the stage-2 graph bench (full n sweep — its acceptance
+gates live at n=16k/64k — with trimmed repeats); a few minutes on one CPU
+core, and still emits both BENCH_*.json, so CI can track the hot-path
+trends cheaply.
 """
 from __future__ import annotations
 
@@ -16,16 +19,18 @@ import argparse
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
-                    help="fused-interaction bench only, small shapes, "
-                         "<2 min on one CPU core")
+                    help="fused-interaction + graph benches only, reduced "
+                         "shapes/repeats, a few minutes on one CPU core")
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
-    from . import bench_interact
+    from . import bench_graph, bench_interact
     if args.quick:
         bench_interact.main(quick=True)
+        bench_graph.main(quick=True)
         return
     bench_interact.main()
+    bench_graph.main()
     from . import bench_kernels
     bench_kernels.main()
     from . import bench_paper

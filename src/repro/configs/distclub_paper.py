@@ -27,7 +27,8 @@ def _epoch(cfg):
         "Minv": eye,
         "b": SDS((n, d), jnp.float32),
         "occ": SDS((n,), jnp.int32),
-        "adj": SDS((n, n), jnp.bool_),
+        # bit-packed adjacency rows (32x below the dense bool graph)
+        "adj": SDS((n, (n + 31) // 32), jnp.uint32),
         "labels": SDS((n,), jnp.int32),
         "uMcinv": eye,
         "ubc": SDS((n, d), jnp.float32),

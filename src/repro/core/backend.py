@@ -1,14 +1,18 @@
-"""Backend dispatch for the fused interaction engine.
+"""Backend dispatch for the fused interaction engine and the graph engine.
 
 The bandit hot loop is two operations per round — *choose* (UCB scores →
 argmax → gather the chosen context) and *update* (rank-1 Sherman-Morrison
-on the per-user statistics).  This module selects between:
+on the per-user statistics); stage 2 is two graph sweeps — *prune* (CLUB
+edge deletion) and *CC hops* (min-label propagation).  This module selects
+between:
 
-  ``reference``  the pure-jnp math in ``repro.core.linucb`` (CPU/GPU, and
-                 the numerical oracle everywhere), and
+  ``reference``  the pure-jnp math in ``repro.core.linucb`` /
+                 ``repro.kernels.graph.ref`` (CPU/GPU, and the numerical
+                 oracle everywhere), and
   ``pallas``     the fused TPU kernels in ``repro.kernels.interact`` /
-                 ``repro.kernels.rank1`` (``interpret=True`` off-TPU, so
-                 tier-1 still exercises the kernel path).
+                 ``repro.kernels.rank1`` / ``repro.kernels.graph``
+                 (``interpret=True`` off-TPU, so tier-1 still exercises
+                 the kernel path).
 
 Selection: explicit ``kind=`` argument > ``REPRO_BACKEND`` env var
 ("reference" | "pallas" | "auto") > "auto" (pallas iff running on TPU).
@@ -35,10 +39,11 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import pad
+from ..kernels.graph import ops as graph_ops
 from ..kernels.interact import ops as interact_ops
 from ..kernels.rank1 import ops as rank1_ops
 from ..kernels.rank1.ref import rank1_update_inv_ref
-from . import linucb
+from . import clustering, linucb
 from .types import LinUCBState
 
 _ENV_FLAG = "REPRO_BACKEND"
@@ -176,6 +181,107 @@ class InteractBackend(NamedTuple):
             use_pallas=True, block_users=self.block_users,
             interpret=self.interpret,
         )
+
+
+class GraphBackend(NamedTuple):
+    """Stage-2 graph engine over the bit-packed adjacency.
+
+    Operates on ``[n_rows, ceil(n_cols/32)]`` uint32 rows (layout:
+    ``repro.kernels.graph.ref``).  ``n_rows == n_cols`` in the single-host
+    drivers; the sharded runtime builds one backend per shard with
+    ``n_rows = n_local`` and reuses the same kernels on its row shard.
+    Like ``InteractBackend`` this is a NamedTuple of Python scalars, so it
+    threads through ``jax.jit`` as a static argument.
+    """
+
+    kind: str          # "reference" | "pallas"
+    n_rows: int        # adjacency rows held by this caller
+    n_cols: int        # global user count (columns)
+    block_i: int       # pallas row tile
+    block_j: int       # pallas column tile (bits; /32 = words)
+    row_block: int     # reference-path row blocking (lax.map tile)
+    interpret: bool
+
+    @property
+    def words(self) -> int:
+        """uint32 words per adjacency row."""
+        return graph_ops.packed_words(self.n_cols)
+
+    def init_adj(self, row_offset: int = 0) -> jnp.ndarray:
+        """Fully-connected packed adjacency minus self edges."""
+        return graph_ops.init_packed_adj(self.n_rows, self.n_cols,
+                                         row_offset=row_offset)
+
+    def pack(self, dense: jnp.ndarray) -> jnp.ndarray:
+        return graph_ops.pack_bits(dense, self.words)
+
+    def unpack(self, packed: jnp.ndarray) -> jnp.ndarray:
+        return graph_ops.unpack_bits(packed, self.n_cols)
+
+    def _opts(self):
+        return dict(use_pallas=self.kind == "pallas", block_i=self.block_i,
+                    block_j=self.block_j, interpret=self.interpret,
+                    row_block=self.row_block)
+
+    def prune_rows(self, adj, v_i, occ_i, v_j, occ_j, gamma):
+        """AND the CLUB keep-mask into the packed rows.  The [n, n] f32
+        distance matrix stays in VMEM (pallas) / a row slab (reference)."""
+        cb_i = clustering.cb_width(occ_i)
+        cb_j = clustering.cb_width(occ_j)
+        return graph_ops.prune_packed(adj, v_i, cb_i, v_j, cb_j, gamma,
+                                      **self._opts())
+
+    def prune(self, adj, v, occ, gamma):
+        """Square single-host prune (rows == columns)."""
+        return self.prune_rows(adj, v, occ, v, occ, gamma)
+
+    def cc_hop(self, adj, labels_self, labels_j):
+        """One min-label hop over the packed rows (no pointer doubling)."""
+        return graph_ops.cc_hop_packed(adj, labels_self, labels_j,
+                                       **self._opts())
+
+    def cc(self, adj) -> jnp.ndarray:
+        """Connected components of the square packed graph: min-label
+        propagation with pointer doubling, identical hop sequence to the
+        dense ``clustering.connected_components`` oracle."""
+        n = self.n_cols
+        init = jnp.arange(n, dtype=jnp.int32)
+
+        def cond(carry):
+            _, changed, it = carry
+            return changed & (it < n)
+
+        def body(carry):
+            labels, _, it = carry
+            l1 = self.cc_hop(adj, labels, labels)
+            new = jnp.minimum(l1, l1[l1])
+            return new, jnp.any(new != labels), it + 1
+
+        labels, _, _ = jax.lax.while_loop(
+            cond, body, (init, jnp.array(True), 0))
+        return labels
+
+
+def get_graph_backend(
+    n_rows: int,
+    n_cols: int | None = None,
+    kind: str | None = None,
+    *,
+    block_i: int = 256,
+    block_j: int = 4096,
+    row_block: int = 256,
+    interpret: bool | None = None,
+) -> GraphBackend:
+    """Build the graph engine for a run's row/column extents."""
+    kind = resolve_kind(kind)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return GraphBackend(
+        kind=kind, n_rows=n_rows,
+        n_cols=n_rows if n_cols is None else n_cols,
+        block_i=block_i, block_j=block_j, row_block=row_block,
+        interpret=interpret,
+    )
 
 
 def resolve_kind(kind: str | None = None) -> str:

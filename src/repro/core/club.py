@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from . import clustering, linucb
+from .backend import GraphBackend, get_graph_backend
 from .env_ops import EnvOps
 from .types import BanditHyper, ClusterStats, GraphState, LinUCBState, Metrics
 
@@ -39,21 +40,31 @@ def init_state(n_users: int, d: int) -> CLUBState:
     return CLUBState(lin, graph._replace(labels=labels), stats)
 
 
-def _network_update(state: CLUBState, hyper: BanditHyper, d: int) -> CLUBState:
+def _network_update(state: CLUBState, hyper: BanditHyper, d: int,
+                    gb: GraphBackend) -> CLUBState:
     v = linucb.user_vector(state.lin.Minv, state.lin.b)
-    adj = clustering.prune_edges(state.graph.adj, v, state.lin.occ, hyper.gamma)
-    labels = clustering.connected_components(adj)
+    adj = gb.prune(state.graph.adj, v, state.lin.occ, hyper.gamma)
+    labels = gb.cc(adj)
     stats = clustering.cluster_stats(labels, state.lin.M, state.lin.b, d)
     return CLUBState(
         state.lin, GraphState(adj=adj, labels=labels), stats
     )
 
 
-@partial(jax.jit, static_argnames=("ops", "hyper", "T", "d"))
 def run(
-    ops: EnvOps, key: jax.Array, hyper: BanditHyper, T: int, d: int
+    ops: EnvOps, key: jax.Array, hyper: BanditHyper, T: int, d: int,
+    graph: GraphBackend | None = None,
 ) -> tuple[CLUBState, Metrics]:
     """Sequential run over T interactions (scan of length T)."""
+    gb = graph or get_graph_backend(ops.n_users)
+    return _run(ops, key, hyper, T, d, gb)
+
+
+@partial(jax.jit, static_argnames=("ops", "hyper", "T", "d", "graph"))
+def _run(
+    ops: EnvOps, key: jax.Array, hyper: BanditHyper, T: int, d: int,
+    graph: GraphBackend,
+) -> tuple[CLUBState, Metrics]:
     n = ops.n_users
     state = init_state(n, d)
 
@@ -94,7 +105,7 @@ def run(
 
         state = jax.lax.cond(
             (t + 1) % hyper.delta_net == 0,
-            lambda s: _network_update(s, hyper, d),
+            lambda s: _network_update(s, hyper, d, graph),
             lambda s: s,
             state,
         )

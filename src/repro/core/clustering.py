@@ -18,17 +18,33 @@ fully data-parallel pieces:
 
 Labels live in user-id space (label = smallest user id in the component), so
 all shapes stay static regardless of how many clusters exist.
+
+Representation split: the DistCLUB / CLUB drivers carry the adjacency
+**bit-packed** (``[n, ceil(n/32)] uint32``, see ``repro.kernels.graph``) and
+run stage 2 through the ``GraphBackend`` engine — pruning only ever clears
+bits, so packing is lossless and AND-monotone, and it cuts graph memory 32x
+(the dense graph cannot even be allocated at the ROADMAP's million-user
+scale).  The *dense* ``prune_edges`` / ``connected_components`` below are
+kept as the numerical oracle for tests and for DCCB, whose gossip protocol
+does per-edge scatter updates on a small dense matrix.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from ..kernels.graph import ops as graph_ops
 from .types import ClusterStats, GraphState
 
 
+def dense_adj(n_users: int) -> jnp.ndarray:
+    """[n, n] bool fully-connected adjacency minus self edges (oracle/DCCB)."""
+    return jnp.ones((n_users, n_users), bool) & ~jnp.eye(n_users, dtype=bool)
+
+
 def init_graph(n_users: int) -> GraphState:
-    adj = jnp.ones((n_users, n_users), bool) & ~jnp.eye(n_users, dtype=bool)
+    """Packed fully-connected graph: [n, ceil(n/32)] uint32 rows."""
+    adj = graph_ops.init_packed_adj(n_users, n_users)
     return GraphState(adj=adj, labels=jnp.zeros((n_users,), jnp.int32))
 
 
@@ -44,9 +60,12 @@ def prune_edges(
     occ: jnp.ndarray,     # [n] i32
     gamma: float,
 ) -> jnp.ndarray:
-    """Remove edges between users whose estimates diverged. Symmetric."""
-    # pairwise euclidean distances; n is modest (paper max 20k) so the n^2
-    # matrix is fine; the sharded runtime shards rows of both adj and dist.
+    """Remove edges between users whose estimates diverged. Symmetric.
+
+    Dense oracle: materializes the [n, n] distance matrix, so it is only
+    used on small graphs (tests, DCCB).  Production paths go through
+    ``GraphBackend.prune`` on the packed adjacency.
+    """
     sq = jnp.sum(v * v, axis=-1)
     d2 = sq[:, None] + sq[None, :] - 2.0 * (v @ v.T)
     dist = jnp.sqrt(jnp.maximum(d2, 0.0))

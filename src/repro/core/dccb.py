@@ -57,7 +57,10 @@ def init_state(n_users: int, d: int, L: int) -> DCCBState:
         Mbuf=jnp.zeros((n_users, L, d, d), jnp.float32),
         bbuf=jnp.zeros((n_users, L, d), jnp.float32),
         occ=jnp.zeros((n_users,), jnp.int32),
-        adj=clustering.init_graph(n_users).adj,
+        # DCCB's gossip cuts individual edges with per-(i, peer) scatter
+        # updates, so it keeps the small dense graph (n is modest for the
+        # baseline); the packed representation is DistCLUB/CLUB's.
+        adj=clustering.dense_adj(n_users),
         slot=jnp.zeros((), jnp.int32),
         comm_bytes=jnp.zeros((), jnp.float32),
     )

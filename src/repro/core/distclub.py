@@ -25,19 +25,27 @@ Execution backends: stages 1/3 run through the fused interaction engine
 the fused rank-1 update.  The scan-carried LinUCB state is padded to the
 kernel block shape ONCE per stage, not per step; only the fresh per-step
 context tensor is padded inside the loop.  Stage-3 additionally hoists the
-frozen per-user cluster snapshots (Mcinv[labels], bc[labels] and the cluster
-user vector) out of the scan — they only change at stage-2 refreshes, so
-gathering them per step was pure HBM traffic.
+frozen per-user cluster snapshots (Mcinv[labels], bc[labels], the cluster
+user vector AND the cluster mean-occ) out of the scan — they only change at
+stage-2 refreshes (the paper's lazy semantics, matching the sharded
+runtime), so gathering them per step was pure HBM traffic.
+
+Stage 2 runs through the graph engine (``GraphBackend``): the adjacency is
+bit-packed ``[n, ceil(n/32)] uint32``, pruning streams distance tiles
+through VMEM (the ``[n, n]`` f32 matrix never exists), and each CC hop
+reads ``n^2/8`` bytes of packed bits instead of ``n^2`` bool.
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from . import clustering, linucb
-from .backend import InteractBackend, get_backend
+from .backend import (GraphBackend, InteractBackend, get_backend,
+                      get_graph_backend)
 from .env_ops import EnvOps
 from .types import BanditHyper, ClusterStats, DistCLUBState, Metrics
 
@@ -103,22 +111,39 @@ def stage1(state: DistCLUBState, ops: EnvOps, key: jax.Array,
     return state._replace(lin=be.unpad_lin(lin)), metrics
 
 
-def stage2(state: DistCLUBState, hyper: BanditHyper, d: int) -> DistCLUBState:
+def stage2_comm_bytes(n: int, d: int) -> int:
+    """Modeled network bytes of one stage-2 refresh (paper Fig. 3, updated
+    for the packed graph engine).  Single source of truth for the driver,
+    the tests and the paper benchmarks.
+
+    Per refresh: each user ships (M, b) once into the tree reduction and
+    the cluster stats return along the same tree (``2 n (d^2 + d)`` f32
+    words); edge pruning all-gathers the user vectors and counts
+    (``n (d + 1)`` words); and each pointer-doubling CC hop exchanges the
+    n i32 labels — ``ceil(log2 n) + 1`` hops bound the doubling schedule.
+    The adjacency itself NEVER crosses the network: it is row-sharded and
+    bit-packed, n^2/8 bytes of node-local HBM (32x below the dense bool
+    graph; see ``benchmarks/bench_graph.py`` for the HBM model).
+    """
+    hops = max(1, math.ceil(math.log2(max(n, 2))) + 1)
+    return 4 * (2 * n * (d * d + d) + n * (d + 1) + hops * n)
+
+
+def stage2(state: DistCLUBState, hyper: BanditHyper, d: int,
+           graph: GraphBackend | None = None) -> DistCLUBState:
     """Network update, clustering, cluster statistics (the comm stage)."""
+    gb = graph or get_graph_backend(state.graph.labels.shape[0])
     lin = state.lin
     v = linucb.user_vector(lin.Minv, lin.b)
-    adj = clustering.prune_edges(state.graph.adj, v, lin.occ, hyper.gamma)
-    labels = clustering.connected_components(adj)
+    adj = gb.prune(state.graph.adj, v, lin.occ, hyper.gamma)
+    labels = gb.cc(adj)
     stats = clustering.cluster_stats(labels, lin.M, lin.b, d)
     # seed 'seen' so that seen/size == mean lifetime occ of the cluster
     # (paper: "average interactions for users in the cluster").
     n = labels.shape[0]
     seen = jax.ops.segment_sum(lin.occ, labels, num_segments=n)
     stats = stats._replace(seen=seen)
-    # Communication model (paper Fig. 3): each user ships (M, b) once into
-    # the tree reduction = (d^2 + d) fp32 words; cluster stats return along
-    # the same tree.  DCCB's per-round buffer floods are the contrast.
-    nbytes = jnp.float32(2 * n * (d * d + d) * 4)
+    nbytes = jnp.float32(stage2_comm_bytes(n, d))
     return state._replace(
         graph=state.graph._replace(adj=adj, labels=labels),
         clusters=stats,
@@ -135,27 +160,32 @@ def stage3(state: DistCLUBState, ops: EnvOps, key: jax.Array,
     n = labels.shape[0]
 
     # Frozen during the stage (the paper's lazy cluster statistics): hoist
-    # the per-user snapshots and the cluster user-vector out of the scan.
+    # the per-user snapshots, the cluster user-vector AND the cluster
+    # mean-occ out of the scan.  The sharded runtime has always frozen the
+    # mean-occ snapshot ("§Perf iteration 2"); the per-scan-step
+    # segment_sum + seen[labels] gather here was the one place the
+    # single-host driver diverged from that lazy schedule — and two O(n)
+    # sweeps per step of pure HBM traffic.
     uMcinv = be.pad_gram(stats.Mcinv[labels])     # [n*, d*, d*]
     ubc = be.pad_vec(stats.bc[labels])            # [n*, d*]
     v_clu = linucb.user_vector(uMcinv, ubc)       # [n*, d*]
     usize = jnp.maximum(stats.size[labels], 1)    # [n]
+    mean_occ = be.pad_users(
+        stats.seen[labels].astype(jnp.float32) / usize
+    )                                             # [n*] frozen snapshot
 
     lin0 = be.pad_lin(state.lin)
     budget = be.pad_users(state.c_rounds)
 
     def step(carry, inp):
-        lin, seen = carry
+        lin = carry
         step_idx, k = inp
         mask = step_idx < budget
         k_ctx, k_rew = jax.random.split(k)
         occ_log = be.unpad_users(lin.occ)
         contexts = ops.contexts_fn(k_ctx, occ_log)
 
-        mean_occ = seen[labels].astype(jnp.float32) / usize
-        use_own = be.pad_users(
-            occ_log.astype(jnp.float32) >= hyper.beta * mean_occ
-        )
+        use_own = lin.occ.astype(jnp.float32) >= hyper.beta * mean_occ
         v_own = linucb.user_vector(lin.Minv, lin.b)
         theta = jnp.where(use_own[:, None], v_own, v_clu)
         minv_eff = jnp.where(use_own[:, None, None], lin.Minv, uMcinv)
@@ -165,19 +195,19 @@ def stage3(state: DistCLUBState, ops: EnvOps, key: jax.Array,
             k_rew, occ_log, contexts, be.unpad_users(choice)
         )
         lin = be.update_lin(lin, x, be.pad_users(realized), mask)
-        mask_log = be.unpad_users(mask)
-        seen = seen + jax.ops.segment_sum(
-            mask_log.astype(jnp.int32), labels, num_segments=n
-        )
-        return (lin, seen), _metrics_of(
-            realized, expected, best, rand, mask_log
+        return lin, _metrics_of(
+            realized, expected, best, rand, be.unpad_users(mask)
         )
 
     steps = jnp.arange(hyper.max_rounds)
     keys = jax.random.split(key, hyper.max_rounds)
-    (lin, seen), metrics = jax.lax.scan(
-        step, (lin0, stats.seen), (steps, keys)
-    )
+    lin, metrics = jax.lax.scan(step, lin0, (steps, keys))
+    # the seen-counter update folds into stage end: the per-user number of
+    # stage-3 interactions is deterministic (sum over steps of
+    # ``step_idx < budget`` = the clipped budget), so one segment_sum
+    # replaces max_rounds of them.
+    counts = jnp.clip(state.c_rounds, 0, hyper.max_rounds)
+    seen = stats.seen + jax.ops.segment_sum(counts, labels, num_segments=n)
     return state._replace(
         lin=be.unpad_lin(lin), clusters=stats._replace(seen=seen)
     ), metrics
@@ -204,19 +234,26 @@ def run(
     n_epochs: int,
     d: int,
     backend: InteractBackend | None = None,
+    graph: GraphBackend | None = None,
 ) -> tuple[DistCLUBState, Metrics, jnp.ndarray]:
     """Run ``n_epochs`` of the four-stage loop.
 
-    ``backend`` selects the interaction engine (default: REPRO_BACKEND env
-    flag, then pallas-iff-TPU).  Returns (final state, per-scan-step metrics
-    stacked over the whole run, cluster-count after each stage-2).
+    ``backend`` selects the interaction engine and ``graph`` the stage-2
+    graph engine (default: REPRO_BACKEND env flag, then pallas-iff-TPU;
+    ``graph`` follows ``backend``'s kind when not given).  Returns (final
+    state, per-scan-step metrics stacked over the whole run, cluster-count
+    after each stage-2).
     """
     if backend is None:
         backend = get_backend(ops.n_users, d, hyper.n_candidates)
-    return _run(ops, key, hyper, n_epochs, d, backend)
+    if graph is None:
+        graph = get_graph_backend(ops.n_users, kind=backend.kind,
+                                  interpret=backend.interpret)
+    return _run(ops, key, hyper, n_epochs, d, backend, graph)
 
 
-@partial(jax.jit, static_argnames=("ops", "hyper", "n_epochs", "d", "backend"))
+@partial(jax.jit, static_argnames=("ops", "hyper", "n_epochs", "d", "backend",
+                                   "graph"))
 def _run(
     ops: EnvOps,
     key: jax.Array,
@@ -224,13 +261,14 @@ def _run(
     n_epochs: int,
     d: int,
     backend: InteractBackend,
+    graph: GraphBackend,
 ) -> tuple[DistCLUBState, Metrics, jnp.ndarray]:
     state = init_state(ops.n_users, d, hyper)
 
     def epoch(state, k):
         k1, k3 = jax.random.split(k)
         state, m1 = stage1(state, ops, k1, hyper, backend)
-        state = stage2(state, hyper, d)
+        state = stage2(state, hyper, d, graph)
         n_clu = clustering.num_clusters(state.graph.labels)
         state, m3 = stage3(state, ops, k3, hyper, backend)
         state = stage4(state, hyper)

@@ -43,7 +43,11 @@ class LinUCBState(NamedTuple):
 class GraphState(NamedTuple):
     """User-similarity graph + current clustering.
 
-    adj      : [n, n] bool  (row-sharded in the distributed runtime)
+    adj      : [n, ceil(n/32)] uint32 — bit-packed rows, LSB-first (bit
+               ``j % 32`` of word ``j // 32`` = edge (i, j); layout in
+               ``repro.kernels.graph.ref``).  Row-sharded in the
+               distributed runtime.  Edges are only ever pruned, so the
+               packing is AND-monotone and 32x smaller than dense bool.
     labels   : [n] i32      cluster label = min user-id in the component
     """
 

@@ -1,0 +1,120 @@
+"""Public entry points for the stage-2 graph engine: pad, dispatch, unpad.
+
+Callers hold the packed adjacency at its *logical* shape
+``[n_rows, ceil(n_cols/32)]`` (backend-independent, so reference and pallas
+runs carry bit-identical state).  The pallas path pads rows to the row-block
+multiple and words to the column-block multiple per call — stage 2 runs once
+per epoch, so this is one O(n^2/8) copy per refresh, dwarfed by the sweep
+itself.  All padding is exact: padded adjacency bits are 0 (AND-monotone,
+never re-set), padded column labels are ``BIG_LABEL`` (never the min), and
+padded rows are sliced off.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..pad import SUB, round_up
+from .graph import cc_hop_packed_pallas, prune_packed_pallas
+from .ref import (BIG_LABEL, cc_hop_packed_ref, init_packed_adj, pack_bits,
+                  packed_words, pad_rows, prune_packed_ref, unpack_bits)
+
+__all__ = [
+    "BIG_LABEL", "init_packed_adj", "pack_bits", "packed_words",
+    "unpack_bits", "prune_packed", "cc_hop_packed", "graph_blocks",
+]
+
+
+def graph_blocks(n_rows: int, n_cols: int, block_i: int = 256,
+                 block_j: int = 4096) -> tuple[int, int, int, int]:
+    """(rows_pad, cols_pad, bi, bj) the tiled kernels run at.
+
+    Blocks clamp to the (sublane/word-aligned) problem size so small graphs
+    run a single tile; at scale the defaults give a ``[256, 128]`` u32
+    packed tile — exactly lane width.
+    """
+    bi = min(block_i, round_up(n_rows, SUB))
+    bj = min(block_j, round_up(n_cols, 32))
+    return round_up(n_rows, bi), round_up(n_cols, bj), bi, bj
+
+
+def _pad_packed(packed, rows_pad, cols_pad):
+    wp = cols_pad // 32
+    out = pad_rows(packed, rows_pad)
+    if out.shape[1] != wp:
+        out = jnp.pad(out, ((0, 0), (0, wp - out.shape[1])))
+    return out
+
+
+def prune_packed(
+    packed: jnp.ndarray,   # [R, W] uint32
+    v_i: jnp.ndarray,      # [R, d]
+    cb_i: jnp.ndarray,     # [R] f32 confidence widths
+    v_j: jnp.ndarray,      # [C, d]
+    cb_j: jnp.ndarray,     # [C] f32
+    gamma: float,
+    *,
+    use_pallas: bool | None = None,
+    block_i: int = 256,
+    block_j: int = 4096,
+    interpret: bool | None = None,
+    row_block: int = 256,
+) -> jnp.ndarray:
+    """packed & (dist(v_i, v_j) < gamma (cb_i + cb_j)) — tiled on TPU."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return prune_packed_ref(packed, v_i, cb_i, v_j, cb_j, gamma,
+                                row_block=row_block)
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    R, W = packed.shape
+    C, d = v_j.shape
+    rows_pad, cols_pad, bi, bj = graph_blocks(R, W * 32, block_i, block_j)
+    dp = round_up(d, SUB)
+
+    def padv(v, n):
+        out = pad_rows(v.astype(jnp.float32), n)
+        if dp != d:
+            out = jnp.pad(out, ((0, 0), (0, dp - d)))
+        return out
+
+    out = prune_packed_pallas(
+        _pad_packed(packed, rows_pad, cols_pad),
+        padv(v_i, rows_pad), pad_rows(cb_i.astype(jnp.float32), rows_pad),
+        padv(v_j, cols_pad), pad_rows(cb_j.astype(jnp.float32), cols_pad),
+        gamma, block_i=bi, block_j=bj, interpret=interpret,
+    )
+    return out[:R, :W]
+
+
+def cc_hop_packed(
+    packed: jnp.ndarray,        # [R, W] uint32
+    labels_self: jnp.ndarray,   # [R] i32
+    labels_j: jnp.ndarray,      # [C] i32
+    *,
+    use_pallas: bool | None = None,
+    block_i: int = 256,
+    block_j: int = 4096,
+    interpret: bool | None = None,
+    row_block: int = 256,
+) -> jnp.ndarray:
+    """min(labels_self, neighbour-min of labels_j over set bits) — [R] i32."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return cc_hop_packed_ref(packed, labels_self, labels_j,
+                                 row_block=row_block)
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    R, W = packed.shape
+    rows_pad, cols_pad, bi, bj = graph_blocks(R, W * 32, block_i, block_j)
+    out = cc_hop_packed_pallas(
+        _pad_packed(packed, rows_pad, cols_pad),
+        pad_rows(labels_self.astype(jnp.int32), rows_pad, fill=BIG_LABEL),
+        pad_rows(labels_j.astype(jnp.int32), cols_pad, fill=BIG_LABEL),
+        block_i=bi, block_j=bj, interpret=interpret,
+    )
+    return out[:R]

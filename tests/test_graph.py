@@ -1,0 +1,215 @@
+"""Stage-2 graph engine: bit-packed adjacency, tiled prune, fused CC hop.
+
+All Pallas runs use interpret=True (no TPU in this container) with small
+block sizes so every test exercises a multi-tile grid; the same code path
+compiles on TPU with interpret=False.  Parity against the dense oracle is
+EXACT (bit/label equality): the feature dim is the only contracted axis,
+so tiling over (i, j) cannot change any per-element contraction order.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backend, clustering, distclub, env, env_ops
+from repro.core.types import BanditHyper
+from repro.kernels.graph import ops as graph_ops
+
+
+def random_sym_adj(rng, n, p):
+    a = rng.random((n, n)) < p
+    a = np.triu(a, 1)
+    return a | a.T
+
+
+def chain_adj(n):
+    """Path graph 0-1-...-n-1: one component, max-diameter — the
+    pointer-doubling worst case."""
+    a = np.zeros((n, n), bool)
+    i = np.arange(n - 1)
+    a[i, i + 1] = a[i + 1, i] = True
+    return a
+
+
+# ---- packing ---------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 7, 32, 37, 100, 256])
+def test_pack_unpack_roundtrip(n):
+    rng = np.random.default_rng(n)
+    dense = random_sym_adj(rng, n, 0.3)
+    packed = graph_ops.pack_bits(jnp.asarray(dense))
+    assert packed.shape == (n, (n + 31) // 32) and packed.dtype == jnp.uint32
+    np.testing.assert_array_equal(
+        np.asarray(graph_ops.unpack_bits(packed, n)), dense)
+
+
+def test_pack_padding_bits_are_zero():
+    """Bits at columns >= n must be 0 — the AND-monotone invariant."""
+    n = 37
+    dense = jnp.ones((n, n), bool)
+    packed = graph_ops.pack_bits(dense)
+    full = graph_ops.unpack_bits(packed, packed.shape[1] * 32)
+    assert not bool(full[:, n:].any())
+
+
+@pytest.mark.parametrize("n", [5, 33, 64, 100])
+def test_init_packed_adj_matches_dense(n):
+    got = graph_ops.unpack_bits(graph_ops.init_packed_adj(n, n), n)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(clustering.dense_adj(n)))
+
+
+def test_init_packed_adj_row_offset():
+    """Sharded rows clear their own global column, not the local index."""
+    n, n_local, off = 64, 16, 16
+    got = graph_ops.unpack_bits(
+        graph_ops.init_packed_adj(n_local, n, row_offset=off), n)
+    want = np.ones((n_local, n), bool)
+    want[np.arange(n_local), np.arange(n_local) + off] = False
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# ---- prune -----------------------------------------------------------------
+
+# Ragged on purpose: n not a multiple of 32 nor of the block sizes.
+@pytest.mark.parametrize("n,d", [(37, 5), (70, 8), (130, 3)])
+def test_prune_packed_matches_dense_oracle(n, d):
+    rng = np.random.default_rng(n * 10 + d)
+    v = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    occ = jnp.asarray(rng.integers(0, 100, n), jnp.int32)
+    dense0 = random_sym_adj(rng, n, 0.7)
+    want = clustering.prune_edges(jnp.asarray(dense0), v, occ, gamma=1.2)
+
+    packed = graph_ops.pack_bits(jnp.asarray(dense0))
+    cb = clustering.cb_width(occ)
+    for kwargs in (
+        dict(use_pallas=False, row_block=16),
+        dict(use_pallas=True, interpret=True, block_i=16, block_j=32),
+        dict(use_pallas=True, interpret=True, block_i=8, block_j=64),
+    ):
+        got = graph_ops.unpack_bits(
+            graph_ops.prune_packed(packed, v, cb, v, cb, 1.2, **kwargs), n)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=str(kwargs))
+
+
+def test_prune_is_and_monotone():
+    """Pruning can only clear bits, never set them (packing invariant)."""
+    n, d = 50, 4
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    occ = jnp.full((n,), 1000, jnp.int32)
+    dense0 = random_sym_adj(rng, n, 0.2)
+    packed = graph_ops.pack_bits(jnp.asarray(dense0))
+    cb = clustering.cb_width(occ)
+    out = graph_ops.prune_packed(packed, v, cb, v, cb, 0.5, use_pallas=False)
+    assert not bool((np.asarray(out) & ~np.asarray(packed)).any())
+
+
+# ---- connected components --------------------------------------------------
+
+@pytest.mark.parametrize("maker,n", [
+    ("random_sparse", 60), ("random_sparse", 129), ("random_dense", 75),
+    ("chain", 300), ("chain", 64), ("empty", 40),
+])
+def test_cc_packed_matches_dense(maker, n):
+    rng = np.random.default_rng(n)
+    dense = {"random_sparse": lambda: random_sym_adj(rng, n, 0.02),
+             "random_dense": lambda: random_sym_adj(rng, n, 0.3),
+             "chain": lambda: chain_adj(n),
+             "empty": lambda: np.zeros((n, n), bool)}[maker]()
+    want = clustering.connected_components(jnp.asarray(dense))
+    packed = graph_ops.pack_bits(jnp.asarray(dense))
+    gb_ref = backend.get_graph_backend(n, kind="reference", row_block=16)
+    gb_pal = backend.get_graph_backend(n, kind="pallas", interpret=True,
+                                       block_i=16, block_j=64)
+    np.testing.assert_array_equal(np.asarray(gb_ref.cc(packed)),
+                                  np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(gb_pal.cc(packed)),
+                                  np.asarray(want))
+
+
+def test_cc_hop_bipartite_rows():
+    """The sharded runtime runs the hop on a row shard against the full
+    replicated label vector."""
+    n, n_local, off = 96, 32, 32
+    rng = np.random.default_rng(7)
+    dense = random_sym_adj(rng, n, 0.05)
+    labels = jnp.asarray(rng.permutation(n).astype(np.int32))
+    rows = jnp.asarray(dense[off:off + n_local])
+    want = jnp.minimum(
+        labels[off:off + n_local],
+        jnp.min(jnp.where(rows, labels[None, :], jnp.int32(n)), axis=1))
+
+    packed_rows = graph_ops.pack_bits(rows)
+    for kwargs in (dict(use_pallas=False, row_block=8),
+                   dict(use_pallas=True, interpret=True,
+                        block_i=8, block_j=32)):
+        got = graph_ops.cc_hop_packed(
+            packed_rows, labels[off:off + n_local], labels, **kwargs)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=str(kwargs))
+
+
+# ---- backend dispatch ------------------------------------------------------
+
+def test_graph_backend_dispatch_and_env_flag(monkeypatch):
+    monkeypatch.delenv("REPRO_BACKEND", raising=False)
+    gb = backend.get_graph_backend(100)        # auto on CPU -> reference
+    assert gb.kind == "reference" and gb.words == 4
+
+    monkeypatch.setenv("REPRO_BACKEND", "pallas")
+    gb = backend.get_graph_backend(100)
+    assert gb.kind == "pallas" and gb.interpret
+
+    monkeypatch.setenv("REPRO_BACKEND", "bogus")
+    with pytest.raises(ValueError):
+        backend.get_graph_backend(100)
+
+
+def test_graph_backend_pack_roundtrip_and_init():
+    gb = backend.get_graph_backend(45, kind="reference")
+    dense = clustering.dense_adj(45)
+    np.testing.assert_array_equal(np.asarray(gb.unpack(gb.pack(dense))),
+                                  np.asarray(dense))
+    np.testing.assert_array_equal(np.asarray(gb.unpack(gb.init_adj())),
+                                  np.asarray(dense))
+
+
+# ---- end-to-end ------------------------------------------------------------
+
+def test_distclub_stage2_reference_vs_pallas_interpret():
+    """Acceptance: end-to-end distclub agreement between the reference and
+    pallas engines now COVERS stage 2 — identical pruned-edge bits,
+    identical CC labels, identical cluster counts, and stage-1/3 state
+    within PR 1's tolerances."""
+    N, D, K = 24, 5, 10
+    hyper = BanditHyper(sigma=4, max_rounds=8, gamma=1.5, n_candidates=K)
+    e, _ = env.make_synthetic_env(jax.random.PRNGKey(0), N, D, 3, K)
+    ops = env_ops.synthetic_ops(e)
+    ref_i = backend.get_backend(N, D, K, kind="reference")
+    pal_i = backend.get_backend(N, D, K, kind="pallas", interpret=True)
+    ref_g = backend.get_graph_backend(N, kind="reference")
+    pal_g = backend.get_graph_backend(N, kind="pallas", interpret=True,
+                                      block_i=8, block_j=32)
+
+    s_r, m_r, c_r = distclub.run(ops, jax.random.PRNGKey(1), hyper,
+                                 n_epochs=2, d=D, backend=ref_i, graph=ref_g)
+    s_p, m_p, c_p = distclub.run(ops, jax.random.PRNGKey(1), hyper,
+                                 n_epochs=2, d=D, backend=pal_i, graph=pal_g)
+    np.testing.assert_array_equal(np.asarray(s_p.graph.adj),
+                                  np.asarray(s_r.graph.adj))
+    np.testing.assert_array_equal(np.asarray(s_p.graph.labels),
+                                  np.asarray(s_r.graph.labels))
+    np.testing.assert_array_equal(np.asarray(c_p), np.asarray(c_r))
+    np.testing.assert_allclose(s_p.lin.Minv, s_r.lin.Minv, atol=1e-5)
+    np.testing.assert_allclose(s_p.lin.b, s_r.lin.b, atol=1e-5)
+    np.testing.assert_allclose(m_p.reward, m_r.reward, atol=1e-6)
+
+
+def test_distclub_state_carries_packed_graph():
+    """The [n, n] bool graph is gone from the carried state."""
+    N, D = 40, 4
+    state = distclub.init_state(N, D, BanditHyper())
+    assert state.graph.adj.shape == (N, (N + 31) // 32)
+    assert state.graph.adj.dtype == jnp.uint32
