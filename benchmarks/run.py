@@ -6,10 +6,11 @@ EXPERIMENTS.md plus BENCH_interact.json / BENCH_graph.json at the repo root
 PR 1 / PR 2 onward).
 
 ``--quick`` runs the fused-interaction microbenchmark at reduced
-shapes/repeats plus the stage-2 graph bench (full n sweep — its acceptance
-gates live at n=16k/64k — with trimmed repeats); a few minutes on one CPU
-core, and still emits both BENCH_*.json, so CI can track the hot-path
-trends cheaply.
+shapes/repeats, the stage-2 graph bench (full n sweep — its acceptance
+gates live at n=16k/64k — with trimmed repeats), and the non-stationary
+drift scenario through the unified engine (single-host + 8-device
+sharded); a few minutes on one CPU core, and still emits every
+BENCH_*.json, so CI can track the hot-path trends cheaply.
 """
 from __future__ import annotations
 
@@ -24,13 +25,15 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
-    from . import bench_graph, bench_interact
+    from . import bench_drift, bench_graph, bench_interact
     if args.quick:
         bench_interact.main(quick=True)
         bench_graph.main(quick=True)
+        bench_drift.main(quick=True)
         return
     bench_interact.main()
     bench_graph.main()
+    bench_drift.main()
     from . import bench_kernels
     bench_kernels.main()
     from . import bench_paper

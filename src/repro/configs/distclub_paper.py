@@ -21,21 +21,20 @@ CONFIG = BanditHyper(
 
 
 def _epoch(cfg):
+    # the unified engine state (distclub_shard.ShardedDistCLUB): env tables
+    # and cluster snapshots are no longer carried — the environment lives
+    # in the EnvOps closure and the snapshots are stage-2 transients.
     n, d = N_USERS, D_FEAT
-    eye = SDS((n, d, d), jnp.float32)
     return {
-        "Minv": eye,
+        "Minv": SDS((n, d, d), jnp.float32),
         "b": SDS((n, d), jnp.float32),
         "occ": SDS((n,), jnp.int32),
         # bit-packed adjacency rows (32x below the dense bool graph)
         "adj": SDS((n, (n + 31) // 32), jnp.uint32),
         "labels": SDS((n,), jnp.int32),
-        "uMcinv": eye,
-        "ubc": SDS((n, d), jnp.float32),
-        "umean_occ": SDS((n,), jnp.float32),
         "u_rounds": SDS((n,), jnp.int32),
         "c_rounds": SDS((n,), jnp.int32),
-        "theta": SDS((n, d), jnp.float32),
+        "comm_bytes": SDS((), jnp.float32),
         "key": SDS((2,), jnp.uint32),
     }
 

@@ -241,25 +241,18 @@ class GraphBackend(NamedTuple):
                                        **self._opts())
 
     def cc(self, adj) -> jnp.ndarray:
-        """Connected components of the square packed graph: min-label
-        propagation with pointer doubling, identical hop sequence to the
-        dense ``clustering.connected_components`` oracle."""
-        n = self.n_cols
-        init = jnp.arange(n, dtype=jnp.int32)
-
-        def cond(carry):
-            _, changed, it = carry
-            return changed & (it < n)
-
-        def body(carry):
-            labels, _, it = carry
-            l1 = self.cc_hop(adj, labels, labels)
-            new = jnp.minimum(l1, l1[l1])
-            return new, jnp.any(new != labels), it + 1
-
-        labels, _, _ = jax.lax.while_loop(
-            cond, body, (init, jnp.array(True), 0))
-        return labels
+        """Connected components of the square packed graph: delegates to
+        the engine's CC loop (``runtime.stages.connected_components``)
+        with null collectives — ONE hop-sequence definition for CLUB, the
+        single-host DistCLUB driver and the sharded runtime, identical to
+        the dense ``clustering.connected_components`` oracle."""
+        # call-time import: runtime.stages imports repro.core modules, so
+        # a module-level import here would be order-sensitive.
+        from ..runtime import collectives, stages
+        return stages.connected_components(
+            collectives.NullCollectives(), self, adj, self.n_cols,
+            row0=0, n_local=self.n_rows,
+        )
 
 
 def get_graph_backend(

@@ -33,9 +33,10 @@ import jax
 import jax.numpy as jnp
 
 from . import clustering, linucb
+from ..runtime import stages
 from .backend import InteractBackend, get_backend
 from .env_ops import EnvOps
-from .types import BanditHyper, Metrics
+from .types import BanditHyper
 
 
 class DCCBState(NamedTuple):
@@ -71,30 +72,29 @@ def interaction_phase(state: DCCBState, ops: EnvOps, key: jax.Array,
                       backend: InteractBackend | None = None):
     """L lockstep interaction steps; every user's buffer turns over once.
 
-    DCCB maintains the *non-inverted* lagged Gram ``Mw`` (gossip averaging
-    creates rank-2 mixtures Sherman-Morrison can't track), so each step
-    inverts it batched and hands the result to the fused choose engine —
-    one O(d^3) factorization per user per step either way (the seed did two
-    ``linalg.solve`` factorizations), but the scores/argmax/gather now stay
-    in one kernel on the Pallas backend.
+    Routes through the shared round protocol
+    (``runtime.stages.interaction_rounds`` — the same loop the DistCLUB
+    stages and both sharded runtimes run): DCCB supplies its own
+    ``score_fn`` (the lagged Gram ``Mw`` is inverted batched each step —
+    gossip averaging creates rank-2 mixtures Sherman-Morrison can't
+    track) and ``update_fn`` (pop the oldest buffer slot into the current
+    statistics, push the fresh update — the paper's lazy-buffer
+    semantics).  No budget: every user is live every step.
     """
     n, d = state.bw.shape
     be = backend or get_backend(n, d, hyper.n_candidates)
 
-    def step(carry, k):
-        s = carry
-        k_ctx, k_rew = jax.random.split(k)
-        contexts = ops.contexts_fn(k_ctx, s.occ)                # [n, K, d]
+    def score_lagged(carry):
         # Minv/w are derived fresh each step (Mw moves by buffer pops, not
-        # rank-1 updates), so unlike the distclub drivers there is no
+        # rank-1 updates), so unlike the distclub stages there is no
         # carried state to pad once per stage — choose pads its per-step
         # inputs, which these already are.
-        Minv = jnp.linalg.inv(s.Mw)
-        w = linucb.user_vector(Minv, s.bw)
-        x, choice = be.choose(w, Minv, contexts, s.occ, hyper.alpha)
-        realized, expected, best, rand = ops.rewards_fn(
-            k_rew, s.occ, contexts, choice
-        )
+        Minv = jnp.linalg.inv(carry.Mw)
+        return linucb.user_vector(Minv, carry.bw), Minv
+
+    def update_buffered(carry, step_idx, x, realized, mask):
+        del step_idx, mask                      # lockstep: all users live
+        s = carry
         upd_M = jnp.einsum("ni,nj->nij", x, x)
         upd_b = realized[:, None] * x
         # pop oldest into current, push new into the freed slot
@@ -102,21 +102,16 @@ def interaction_phase(state: DCCBState, ops: EnvOps, key: jax.Array,
         bw = s.bw + s.bbuf[:, s.slot]
         Mbuf = s.Mbuf.at[:, s.slot].set(upd_M)
         bbuf = s.bbuf.at[:, s.slot].set(upd_b)
-        s = s._replace(
+        return s._replace(
             Mw=Mw, bw=bw, Mbuf=Mbuf, bbuf=bbuf,
             occ=s.occ + 1, slot=(s.slot + 1) % L,
         )
-        n = realized.shape[0]
-        metrics = Metrics(
-            reward=jnp.sum(realized),
-            regret=jnp.sum(best - expected),
-            rand_reward=jnp.sum(rand),
-            interactions=jnp.int32(n),
-        )
-        return s, metrics
 
-    keys = jax.random.split(key, L)
-    return jax.lax.scan(step, state, keys)
+    return stages.interaction_rounds(
+        be, ops, hyper, key, state, row0=0, n_steps=L,
+        occ_of=lambda s: s.occ, score_fn=score_lagged,
+        update_fn=update_buffered, budget=None,
+    )
 
 
 def gossip_round(state: DCCBState, key: jax.Array, hyper: BanditHyper,

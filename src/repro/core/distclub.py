@@ -1,53 +1,63 @@
-"""DistCLUB (paper Listing 3): the four repeating stages, batched-SPMD style.
+"""DistCLUB single-host driver: the stage engine run with null collectives.
 
-Stage 1  user-based LinUCB rounds        — all users advance in parallel, one
-                                           interaction per scan step, masked by
-                                           the per-user budget ``u_rounds``.
-Stage 2  network update + clustering     — edge pruning, connected components,
-                                           tree-reduced cluster statistics.
-Stage 3  cluster-based UCB rounds        — as stage 1 but scoring uses the
-                                           (frozen) cluster statistics, except
-                                           for the paper's beta-heuristic users
-                                           who keep personalized scoring.
-Stage 4  budget rebalancing              — delta = (occ - cluster mean occ)/2
-                                           shifts rounds between stages 1/3.
+The four stage bodies (paper Listing 3) live ONCE in
+``repro.runtime.stages`` — this module binds them to
+``NullCollectives`` (one shard, every collective the identity, row0 = 0)
+and adapts them to the public ``DistCLUBState`` record that the serving
+layer, the checkpoint manager and the tests consume.  The sharded runtime
+(``repro.distributed.distclub_shard``) binds the *same* stage functions to
+``lax`` collectives inside ``shard_map``; the two drivers cannot drift
+because there is no second stage body.
+
+Stage 1  user-based LinUCB rounds        — all users advance in parallel,
+                                           masked by ``u_rounds``.
+Stage 2  network update + clustering     — edge pruning, connected
+                                           components, tree-reduced
+                                           cluster statistics.
+Stage 3  cluster-based UCB rounds        — as stage 1 but scoring uses
+                                           the FROZEN stage-2 cluster
+                                           snapshots, except the paper's
+                                           beta-heuristic users.
+Stage 4  budget rebalancing              — delta = (occ - mean_occ)/2
+                                           where ``mean_occ`` is the
+                                           STAGE-2 snapshot (same value
+                                           stage 3 reads) — unified with
+                                           the sharded semantics.
+
+State notes: the engine is M-free (the hot loop carries only ``Minv`` —
+Sherman-Morrison + UCB never need the Gram itself).  ``lin.M`` is left
+untouched by stages 1/3 (stage 2 recovers M from Minv internally before
+the tree reduction); ``run`` refreshes it once after the epoch scan via
+:func:`refresh_gram` for the consumers that want the Gram (serving layer
+aggregates, checkpoints).  ``clusters.seen`` is the frozen
+stage-2 snapshot — stage 3 no longer advances it (the old single-host
+behavior that made stage 4 diverge from the sharded runtime).
 
 Parallelism note: the paper serializes interactions *within* a cluster in
-stage 3 only because its Spark tasks mutate shared cluster objects.  Here the
-cluster statistics are frozen between stage-2 refreshes (exactly the paper's
-"lazy" semantics) and only per-user statistics mutate, so every user advances
-in parallel without conflicts; cross-step ordering per user is preserved by
-the scan.  The regret analysis in paper §4 covers this schedule — it is the
-same lazy-update argument used to justify DCCB's buffering.
-
-Execution backends: stages 1/3 run through the fused interaction engine
-(``repro.core.backend``) — choose (scores+argmax+gather in one kernel) and
-the fused rank-1 update.  The scan-carried LinUCB state is padded to the
-kernel block shape ONCE per stage, not per step; only the fresh per-step
-context tensor is padded inside the loop.  Stage-3 additionally hoists the
-frozen per-user cluster snapshots (Mcinv[labels], bc[labels], the cluster
-user vector AND the cluster mean-occ) out of the scan — they only change at
-stage-2 refreshes (the paper's lazy semantics, matching the sharded
-runtime), so gathering them per step was pure HBM traffic.
-
-Stage 2 runs through the graph engine (``GraphBackend``): the adjacency is
-bit-packed ``[n, ceil(n/32)] uint32``, pruning streams distance tiles
-through VMEM (the ``[n, n]`` f32 matrix never exists), and each CC hop
-reads ``n^2/8`` bytes of packed bits instead of ``n^2`` bool.
+stage 3 only because its Spark tasks mutate shared cluster objects.  Here
+the cluster statistics are frozen between stage-2 refreshes (exactly the
+paper's "lazy" semantics) and only per-user statistics mutate, so every
+user advances in parallel without conflicts; cross-step ordering per user
+is preserved by the scan.  The regret analysis in paper §4 covers this
+schedule — the same lazy-update argument used to justify DCCB's buffering.
 """
 from __future__ import annotations
 
-import math
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from . import clustering, linucb
+from ..runtime import stages
+from ..runtime.collectives import NullCollectives
 from .backend import (GraphBackend, InteractBackend, get_backend,
                       get_graph_backend)
 from .env_ops import EnvOps
-from .types import BanditHyper, ClusterStats, DistCLUBState, Metrics
+from .types import (BanditHyper, ClusterStats, DistCLUBState, GraphState,
+                    Metrics)
+
+_NULL = NullCollectives()
 
 
 def init_state(n_users: int, d: int, hyper: BanditHyper) -> DistCLUBState:
@@ -66,14 +76,10 @@ def init_state(n_users: int, d: int, hyper: BanditHyper) -> DistCLUBState:
     )
 
 
-def _metrics_of(realized, expected, best, rand, mask):
-    m = mask.astype(realized.dtype)
-    return Metrics(
-        reward=jnp.sum(realized * m),
-        regret=jnp.sum((best - expected) * m),
-        rand_reward=jnp.sum(rand * m),
-        interactions=jnp.sum(mask.astype(jnp.int32)),
-    )
+def stage2_comm_bytes(n: int, d: int) -> int:
+    """Modeled network bytes per stage-2 refresh — the single source of
+    truth lives with the stage body (``runtime.stages``)."""
+    return stages.stage2_comm_bytes(n, d)
 
 
 def _default_backend(state: DistCLUBState, hyper: BanditHyper):
@@ -81,149 +87,84 @@ def _default_backend(state: DistCLUBState, hyper: BanditHyper):
     return get_backend(n, d, hyper.n_candidates)
 
 
+def _with_lin(state: DistCLUBState, Minv, b, occ) -> DistCLUBState:
+    """Fold engine outputs back into the public record.
+
+    ``lin.M`` is deliberately NOT touched here: nothing inside an epoch
+    reads it (stage 2 recovers M from Minv itself), so recomputing it per
+    stage would be two wasted n x d^3 batched inversions per epoch inside
+    the scan.  Use :func:`refresh_gram` (``run`` does, once, after the
+    epoch scan) when a coherent Gram is needed — serving aggregates,
+    checkpoints."""
+    lin = state.lin._replace(Minv=Minv, b=b, occ=occ)
+    return state._replace(lin=lin)
+
+
+def refresh_gram(state: DistCLUBState) -> DistCLUBState:
+    """Recover ``lin.M = inv(lin.Minv)`` (exact up to the accumulated
+    Sherman-Morrison fp error) for consumers of the Gram itself."""
+    lin = state.lin._replace(M=jnp.linalg.inv(state.lin.Minv))
+    return state._replace(lin=lin)
+
+
 def stage1(state: DistCLUBState, ops: EnvOps, key: jax.Array,
            hyper: BanditHyper, backend: InteractBackend | None = None):
     """User-based rounds: embarrassingly parallel across users."""
     be = backend or _default_backend(state, hyper)
-    lin0 = be.pad_lin(state.lin)                  # pad once per stage
-    budget = be.pad_users(state.u_rounds)         # padded users: budget 0
-
-    def step(carry, inp):
-        lin = carry
-        step_idx, k = inp
-        mask = step_idx < budget
-        k_ctx, k_rew = jax.random.split(k)
-        occ_log = be.unpad_users(lin.occ)
-        contexts = ops.contexts_fn(k_ctx, occ_log)
-        v = linucb.user_vector(lin.Minv, lin.b)
-        x, choice = be.choose(v, lin.Minv, contexts, lin.occ, hyper.alpha)
-        realized, expected, best, rand = ops.rewards_fn(
-            k_rew, occ_log, contexts, be.unpad_users(choice)
-        )
-        lin = be.update_lin(lin, x, be.pad_users(realized), mask)
-        return lin, _metrics_of(
-            realized, expected, best, rand, be.unpad_users(mask)
-        )
-
-    steps = jnp.arange(hyper.max_rounds)
-    keys = jax.random.split(key, hyper.max_rounds)
-    lin, metrics = jax.lax.scan(step, lin0, (steps, keys))
-    return state._replace(lin=be.unpad_lin(lin)), metrics
-
-
-def stage2_comm_bytes(n: int, d: int) -> int:
-    """Modeled network bytes of one stage-2 refresh (paper Fig. 3, updated
-    for the packed graph engine).  Single source of truth for the driver,
-    the tests and the paper benchmarks.
-
-    Per refresh: each user ships (M, b) once into the tree reduction and
-    the cluster stats return along the same tree (``2 n (d^2 + d)`` f32
-    words); edge pruning all-gathers the user vectors and counts
-    (``n (d + 1)`` words); and each pointer-doubling CC hop exchanges the
-    n i32 labels — ``ceil(log2 n) + 1`` hops bound the doubling schedule.
-    The adjacency itself NEVER crosses the network: it is row-sharded and
-    bit-packed, n^2/8 bytes of node-local HBM (32x below the dense bool
-    graph; see ``benchmarks/bench_graph.py`` for the HBM model).
-    """
-    hops = max(1, math.ceil(math.log2(max(n, 2))) + 1)
-    return 4 * (2 * n * (d * d + d) + n * (d + 1) + hops * n)
+    Minv, b, occ, metrics = stages.personalized_rounds(
+        be, ops, hyper, state.lin.Minv, state.lin.b, state.lin.occ,
+        state.u_rounds, key, row0=0,
+    )
+    return _with_lin(state, Minv, b, occ), metrics
 
 
 def stage2(state: DistCLUBState, hyper: BanditHyper, d: int,
            graph: GraphBackend | None = None) -> DistCLUBState:
     """Network update, clustering, cluster statistics (the comm stage)."""
     gb = graph or get_graph_backend(state.graph.labels.shape[0])
-    lin = state.lin
-    v = linucb.user_vector(lin.Minv, lin.b)
-    adj = gb.prune(state.graph.adj, v, lin.occ, hyper.gamma)
-    labels = gb.cc(adj)
-    stats = clustering.cluster_stats(labels, lin.M, lin.b, d)
-    # seed 'seen' so that seen/size == mean lifetime occ of the cluster
-    # (paper: "average interactions for users in the cluster").
-    n = labels.shape[0]
-    seen = jax.ops.segment_sum(lin.occ, labels, num_segments=n)
-    stats = stats._replace(seen=seen)
-    nbytes = jnp.float32(stage2_comm_bytes(n, d))
+    res = stages.stage2_refresh(
+        _NULL, gb, hyper, d,
+        state.lin.Minv, state.lin.b, state.lin.occ, state.graph.adj,
+    )
+    stats = ClusterStats(
+        Mc=res.Mc, Mcinv=jnp.linalg.inv(res.Mc), bc=res.bc,
+        size=res.size, seen=res.seen,
+    )
     return state._replace(
-        graph=state.graph._replace(adj=adj, labels=labels),
+        graph=GraphState(adj=res.adj, labels=res.labels),
         clusters=stats,
-        comm_bytes=state.comm_bytes + nbytes,
+        comm_bytes=state.comm_bytes + res.comm_bytes,
     )
 
 
 def stage3(state: DistCLUBState, ops: EnvOps, key: jax.Array,
            hyper: BanditHyper, backend: InteractBackend | None = None):
-    """Cluster-based rounds with the beta personalization heuristic."""
+    """Cluster-based rounds with the beta personalization heuristic.
+
+    The per-user cluster snapshots are gathered from the stage-2 tables
+    and stay FROZEN for the whole stage — including ``clusters.seen``,
+    which this stage no longer advances (stage 4 reads the same stage-2
+    snapshot in both runtimes)."""
     be = backend or _default_backend(state, hyper)
     labels = state.graph.labels
     stats = state.clusters
-    n = labels.shape[0]
-
-    # Frozen during the stage (the paper's lazy cluster statistics): hoist
-    # the per-user snapshots, the cluster user-vector AND the cluster
-    # mean-occ out of the scan.  The sharded runtime has always frozen the
-    # mean-occ snapshot ("§Perf iteration 2"); the per-scan-step
-    # segment_sum + seen[labels] gather here was the one place the
-    # single-host driver diverged from that lazy schedule — and two O(n)
-    # sweeps per step of pure HBM traffic.
-    uMcinv = be.pad_gram(stats.Mcinv[labels])     # [n*, d*, d*]
-    ubc = be.pad_vec(stats.bc[labels])            # [n*, d*]
-    v_clu = linucb.user_vector(uMcinv, ubc)       # [n*, d*]
-    usize = jnp.maximum(stats.size[labels], 1)    # [n]
-    mean_occ = be.pad_users(
-        stats.seen[labels].astype(jnp.float32) / usize
-    )                                             # [n*] frozen snapshot
-
-    lin0 = be.pad_lin(state.lin)
-    budget = be.pad_users(state.c_rounds)
-
-    def step(carry, inp):
-        lin = carry
-        step_idx, k = inp
-        mask = step_idx < budget
-        k_ctx, k_rew = jax.random.split(k)
-        occ_log = be.unpad_users(lin.occ)
-        contexts = ops.contexts_fn(k_ctx, occ_log)
-
-        use_own = lin.occ.astype(jnp.float32) >= hyper.beta * mean_occ
-        v_own = linucb.user_vector(lin.Minv, lin.b)
-        theta = jnp.where(use_own[:, None], v_own, v_clu)
-        minv_eff = jnp.where(use_own[:, None, None], lin.Minv, uMcinv)
-
-        x, choice = be.choose(theta, minv_eff, contexts, lin.occ, hyper.alpha)
-        realized, expected, best, rand = ops.rewards_fn(
-            k_rew, occ_log, contexts, be.unpad_users(choice)
-        )
-        lin = be.update_lin(lin, x, be.pad_users(realized), mask)
-        return lin, _metrics_of(
-            realized, expected, best, rand, be.unpad_users(mask)
-        )
-
-    steps = jnp.arange(hyper.max_rounds)
-    keys = jax.random.split(key, hyper.max_rounds)
-    lin, metrics = jax.lax.scan(step, lin0, (steps, keys))
-    # the seen-counter update folds into stage end: the per-user number of
-    # stage-3 interactions is deterministic (sum over steps of
-    # ``step_idx < budget`` = the clipped budget), so one segment_sum
-    # replaces max_rounds of them.
-    counts = jnp.clip(state.c_rounds, 0, hyper.max_rounds)
-    seen = stats.seen + jax.ops.segment_sum(counts, labels, num_segments=n)
-    return state._replace(
-        lin=be.unpad_lin(lin), clusters=stats._replace(seen=seen)
-    ), metrics
+    uMcinv = stats.Mcinv[labels]
+    ubc = stats.bc[labels]
+    umean_occ = stages.snapshot_mean_occ(stats.seen, stats.size, labels)
+    Minv, b, occ, metrics = stages.cluster_rounds(
+        be, ops, hyper, state.lin.Minv, state.lin.b, state.lin.occ,
+        state.c_rounds, key, 0, uMcinv, ubc, umean_occ,
+    )
+    return _with_lin(state, Minv, b, occ), metrics
 
 
 def stage4(state: DistCLUBState, hyper: BanditHyper) -> DistCLUBState:
-    """Rebalance per-user budgets between personalized / cluster rounds."""
-    labels = state.graph.labels
-    stats = state.clusters
-    size = jnp.maximum(stats.size[labels], 1)
-    mean_occ = stats.seen[labels].astype(jnp.float32) / size
-    delta = ((state.lin.occ.astype(jnp.float32) - mean_occ) / 2.0).astype(
-        jnp.int32
-    )
-    u_rounds = jnp.clip(state.u_rounds + delta, 0, hyper.max_rounds)
-    c_rounds = jnp.clip(state.c_rounds - delta, 0, hyper.max_rounds)
+    """Rebalance per-user budgets between personalized / cluster rounds
+    (against the stage-2 mean-occ snapshot — see the engine docstring)."""
+    umean_occ = stages.snapshot_mean_occ(
+        state.clusters.seen, state.clusters.size, state.graph.labels)
+    u_rounds, c_rounds = stages.stage4_rebalance(
+        hyper, state.lin.occ, umean_occ, state.u_rounds, state.c_rounds)
     return state._replace(u_rounds=u_rounds, c_rounds=c_rounds)
 
 
@@ -280,4 +221,4 @@ def _run(
     keys = jax.random.split(key, n_epochs)
     state, (metrics, n_clusters) = jax.lax.scan(epoch, state, keys)
     metrics = jax.tree.map(lambda x: x.reshape(-1), metrics)
-    return state, metrics, n_clusters
+    return refresh_gram(state), metrics, n_clusters

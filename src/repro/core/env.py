@@ -1,6 +1,6 @@
 """Bandit environments.
 
-Two kinds, both pure-functional and PRNG-driven so they compose with scan:
+Three kinds, all pure-functional and PRNG-driven so they compose with scan:
 
 * ``SyntheticEnv`` — planted-cluster linear environment (the paper's
   "Synthetic" dataset and the standard CLUB evaluation protocol): each user
@@ -9,15 +9,20 @@ Two kinds, both pure-functional and PRNG-driven so they compose with scan:
   probability of item x for user u is  p = (1 + x . theta_u) / 2  and the
   realized reward is Bernoulli(p) (all paper datasets have 0/1 rewards).
 
+* ``DriftEnv`` — the non-stationary variant of the above (the abstract's
+  "content popularity can change rapidly"): the cluster centroids are
+  re-drawn every ``drift_period`` interactions, so every user's preference
+  vector jumps to a fresh phase table and the learner must re-converge.
+  The phase is a pure function of the per-user interaction count, so the
+  environment stays stateless and bit-identical under any sharding.
+
 * ``ReplayEnv`` — a logged-interaction environment used by the paper-dataset
   clones in ``repro.data``: item features come from a fixed table and each
   user has a queue of logged candidate sets.  Per-user queues preserve the
   paper's per-user interaction ordering under batched rounds.
 
-Both expose the same two operations:
-
-  contexts_for(key_or_step, users)  -> [B, K, d]
-  reward(key, user, x)              -> realized, expected, best_expected
+All are wrapped into the shard-aware ``EnvOps`` protocol by
+``repro.core.env_ops``.
 """
 from __future__ import annotations
 
@@ -60,6 +65,73 @@ def make_synthetic_env(
         )
     theta /= jnp.linalg.norm(theta, axis=-1, keepdims=True)
     return SyntheticEnv(theta=theta, n_candidates=n_candidates), labels
+
+
+class DriftEnv(NamedTuple):
+    """Non-stationary planted-cluster environment (periodic centroid
+    re-draws).  ``theta`` for user ``u`` at interaction count ``occ`` is
+
+        normalize(centroids[min(occ // drift_period, P-1), label_u]
+                  + noise_u)
+
+    i.e. each user's hidden preference jumps to a freshly drawn centroid
+    table every ``drift_period`` of *their own* interactions.  Keying the
+    phase on the per-user count (not a global clock) keeps the environment
+    a pure function of ``(occ, user)`` — the property every driver (scan,
+    shard_map) relies on — while still modeling rapid popularity change.
+    """
+
+    centroids: jnp.ndarray    # [n_phases, n_clusters, d] unit rows
+    labels: jnp.ndarray       # [n_users] i32 fixed cluster assignment
+    noise: jnp.ndarray        # [n_users, d] per-user within-cluster offset
+    drift_period: int
+    n_candidates: int
+
+    @property
+    def n_users(self) -> int:
+        return self.labels.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.centroids.shape[-1]
+
+    @property
+    def n_phases(self) -> int:
+        return self.centroids.shape[0]
+
+
+def make_drift_env(
+    key: jax.Array,
+    n_users: int,
+    d: int,
+    n_clusters: int,
+    n_candidates: int = 20,
+    drift_period: int = 64,
+    n_phases: int = 4,
+    within_cluster_noise: float = 0.05,
+) -> tuple[DriftEnv, jnp.ndarray]:
+    """Planted clustered environment whose centroids re-draw every
+    ``drift_period`` interactions; returns (env, true_labels)."""
+    k_cent, k_assign, k_noise = jax.random.split(key, 3)
+    centroids = jax.random.normal(k_cent, (n_phases, n_clusters, d))
+    centroids /= jnp.linalg.norm(centroids, axis=-1, keepdims=True)
+    labels = jax.random.randint(k_assign, (n_users,), 0, n_clusters)
+    noise = within_cluster_noise * jax.random.normal(k_noise, (n_users, d))
+    return DriftEnv(
+        centroids=centroids, labels=labels, noise=noise,
+        drift_period=drift_period, n_candidates=n_candidates,
+    ), labels
+
+
+def drift_theta(env: DriftEnv, occ: jnp.ndarray, row0=0) -> jnp.ndarray:
+    """Current hidden preference vectors for the user slice
+    ``[row0, row0 + occ.shape[0])`` at per-user interaction counts ``occ``."""
+    n_local = occ.shape[0]
+    labels = jax.lax.dynamic_slice_in_dim(env.labels, row0, n_local)
+    noise = jax.lax.dynamic_slice_in_dim(env.noise, row0, n_local)
+    phase = jnp.clip(occ // env.drift_period, 0, env.n_phases - 1)
+    theta = env.centroids[phase, labels] + noise
+    return theta / jnp.linalg.norm(theta, axis=-1, keepdims=True)
 
 
 def sample_contexts(key: jax.Array, shape_prefix, K: int, d: int) -> jnp.ndarray:

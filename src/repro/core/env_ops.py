@@ -1,14 +1,28 @@
-"""Environment protocol shared by CLUB / DCCB / DistCLUB drivers.
+"""Shard-aware environment protocol shared by CLUB / DCCB / DistCLUB.
 
 An environment is two pure functions (closures over whatever tables the
 environment needs), so the algorithm drivers stay agnostic between the
-synthetic generator and logged-replay datasets:
+synthetic generator, the non-stationary drift scenario, and logged-replay
+datasets:
 
-  contexts_fn(key, occ)                     -> [n, K, d] candidate features
-  rewards_fn(key, occ, contexts, choice)    -> (realized, expected, best, rand)
+  contexts_fn(key, occ, row0=0)                  -> [n_local, K, d]
+  rewards_fn(key, occ, contexts, choice, row0=0) -> (realized, expected,
+                                                     best, rand)
 
-``occ`` is the per-user interaction count — replay environments use it as
-the per-user queue cursor, preserving the paper's per-user ordering.
+``occ`` is the per-user interaction count for a LOCAL user slice (replay
+environments use it as the per-user queue cursor, preserving the paper's
+per-user ordering; the drift environment derives its phase from it) and
+``row0`` is the global id of the slice's first user — the single-host
+drivers pass ``row0=0`` with the full range, the sharded runtime passes
+``axis_index * n_local`` inside ``shard_map``.  Environment tables are
+closed over globally and sliced with ``dynamic_slice`` per call, so one
+``EnvOps`` drives any sharding of the user axis.
+
+Determinism under sharding (load-bearing for the parity tests): every
+random draw is keyed per GLOBAL user id via ``fold_in(key, row0 + i)``, so
+user ``u`` sees identical contexts and identical Bernoulli draws whether
+the runtime is single-host or sharded 8 ways — runtimes diverge only by
+fp contraction order in stage-2 aggregates and metric reductions.
 """
 from __future__ import annotations
 
@@ -28,16 +42,57 @@ class EnvOps(NamedTuple):
     n_candidates: int
 
 
+def _user_keys(key, n_local: int, row0):
+    """One PRNG key per user in the slice, keyed by GLOBAL user id."""
+    ids = row0 + jnp.arange(n_local, dtype=jnp.int32)
+    return jax.vmap(jax.random.fold_in, in_axes=(None, 0))(key, ids)
+
+
+def _unit_contexts(key, n_local: int, K: int, d: int, row0):
+    keys = _user_keys(key, n_local, row0)
+    x = jax.vmap(lambda k: jax.random.normal(k, (K, d)))(keys)
+    return x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+
+
+def _bernoulli_metrics(key, p_all, choice, dtype, row0):
+    """(realized, expected, best, rand) from per-candidate click probs."""
+    p_choice = jnp.take_along_axis(p_all, choice[:, None], axis=1)[:, 0]
+    best = jnp.max(p_all, axis=-1)
+    rand = jnp.mean(p_all, axis=-1)
+    keys = _user_keys(key, p_all.shape[0], row0)
+    u = jax.vmap(lambda k: jax.random.uniform(k, ()))(keys)
+    realized = (u < p_choice).astype(dtype)
+    return realized, p_choice, best, rand
+
+
 def synthetic_ops(env: synth_env.SyntheticEnv) -> EnvOps:
     n, d, K = env.n_users, env.d, env.n_candidates
+    theta = env.theta
 
-    def contexts_fn(key, occ):
-        del occ
-        return synth_env.sample_contexts(key, (n,), K, d)
+    def contexts_fn(key, occ, row0=0):
+        return _unit_contexts(key, occ.shape[0], K, d, row0)
 
-    def rewards_fn(key, occ, contexts, choice):
-        del occ
-        return synth_env.step_rewards(key, env.theta, contexts, choice)
+    def rewards_fn(key, occ, contexts, choice, row0=0):
+        th = jax.lax.dynamic_slice_in_dim(theta, row0, occ.shape[0])
+        p_all = synth_env.expected_reward(th[:, None, :], contexts)
+        return _bernoulli_metrics(key, p_all, choice, contexts.dtype, row0)
+
+    return EnvOps(contexts_fn, rewards_fn, n, d, K)
+
+
+def drift_ops(env: synth_env.DriftEnv) -> EnvOps:
+    """Non-stationary scenario: contexts as the synthetic generator, click
+    probabilities against the phase-dependent ``drift_theta`` — centroids
+    re-draw every ``drift_period`` interactions per user."""
+    n, d, K = env.n_users, env.d, env.n_candidates
+
+    def contexts_fn(key, occ, row0=0):
+        return _unit_contexts(key, occ.shape[0], K, d, row0)
+
+    def rewards_fn(key, occ, contexts, choice, row0=0):
+        th = synth_env.drift_theta(env, occ, row0)
+        p_all = synth_env.expected_reward(th[:, None, :], contexts)
+        return _bernoulli_metrics(key, p_all, choice, contexts.dtype, row0)
 
     return EnvOps(contexts_fn, rewards_fn, n, d, K)
 
@@ -47,24 +102,39 @@ def replay_ops(
     cand_ids: jnp.ndarray,       # [n_users, max_t, K] candidate item ids (pad=0)
     click_probs: jnp.ndarray,    # [n_users, max_t, K] logged CTR estimates
 ) -> EnvOps:
-    """Logged-replay environment for the paper-dataset clones."""
+    """Logged-replay environment for the paper-dataset clones.  Each user
+    consumes their queue of logged slates in order (``occ`` is the
+    cursor); the tables are sliced per shard via ``row0``."""
     n, max_t, K = cand_ids.shape
     d = item_feats.shape[1]
 
-    def contexts_fn(key, occ):
+    def contexts_fn(key, occ, row0=0):
         del key
-        t = jnp.minimum(occ, max_t - 1)                        # [n]
-        ids = jnp.take_along_axis(cand_ids, t[:, None, None], axis=1)[:, 0]
-        return item_feats[ids]                                  # [n, K, d]
+        rows = jax.lax.dynamic_slice_in_dim(cand_ids, row0, occ.shape[0])
+        t = jnp.minimum(occ, max_t - 1)                        # [n_local]
+        ids = jnp.take_along_axis(rows, t[:, None, None], axis=1)[:, 0]
+        return item_feats[ids]                                  # [n_local,K,d]
 
-    def rewards_fn(key, occ, contexts, choice):
+    def rewards_fn(key, occ, contexts, choice, row0=0):
+        rows = jax.lax.dynamic_slice_in_dim(click_probs, row0, occ.shape[0])
         t = jnp.minimum(occ, max_t - 1)
-        p_all = jnp.take_along_axis(click_probs, t[:, None, None], axis=1)[:, 0]
-        p_choice = jnp.take_along_axis(p_all, choice[:, None], axis=1)[:, 0]
-        best = jnp.max(p_all, axis=-1)
-        rand = jnp.mean(p_all, axis=-1)
-        u = jax.random.uniform(key, p_choice.shape)
-        realized = (u < p_choice).astype(contexts.dtype)
-        return realized, p_choice, best, rand
+        p_all = jnp.take_along_axis(rows, t[:, None, None], axis=1)[:, 0]
+        return _bernoulli_metrics(key, p_all, choice, contexts.dtype, row0)
 
     return EnvOps(contexts_fn, rewards_fn, n, d, K)
+
+
+def default_synthetic_ops(n_users: int, d: int, n_candidates: int,
+                          seed: int = 0,
+                          n_clusters: int | None = None) -> EnvOps:
+    """Convenience constructor used by the sharded runtimes when no
+    explicit environment is given: a planted clustered env with a mild
+    cluster count so stage-2/3 have structure to find."""
+    if n_clusters is None:
+        n_clusters = max(2, n_users // 16)
+    env, _ = synth_env.make_synthetic_env(
+        jax.random.PRNGKey(seed), n_users=n_users, d=d,
+        n_clusters=n_clusters, n_candidates=n_candidates,
+        within_cluster_noise=0.05,
+    )
+    return synthetic_ops(env)

@@ -9,18 +9,33 @@ follows Li et al. 2014 as the paper does: every interaction presents a
 candidate set of items and the learner is rewarded iff the user "clicks"
 its pick (Bernoulli in the item-user affinity).
 
+``make_env`` is explicit about the protocol driving the clone:
+
+  kind="synthetic"  the simulator — fresh candidate sets sampled per
+                    interaction against the planted preference vectors.
+  kind="replay"     actual logged tables (item catalog + per-user queues
+                    of logged slates with affinity-derived CTRs),
+                    materialized via ``repro.data.replay`` and served
+                    through ``replay_ops`` — the paper's offline protocol.
+  kind="drift"      the non-stationary scenario: cluster centroids
+                    re-draw periodically ("content popularity can change
+                    rapidly"), via ``drift_ops``.
+
+Every kind returns a shard-aware ``EnvOps``, so all scenarios run under
+both the single-host and the ``shard_map`` runtimes.
+
 Cluster counts follow the CLUB evaluation convention (10 underlying
 clusters for the web datasets; the synthetic stress set uses 100).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
-import numpy as np
 
 from ..core import env as core_env
-from ..core.env_ops import EnvOps, synthetic_ops
+from ..core.env_ops import EnvOps, drift_ops, synthetic_ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,22 +61,66 @@ PAPER_DATASETS = {
     "synthetic-small": DatasetSpec("synthetic-small", 64_000, 2_000, 25, 50),
 }
 
+# replay queues are bounded: [n_users, max_t, K] logged tables must stay
+# materializable (the synthetic stress set would need max_t=200 -> 320 MB);
+# past the bound a user's queue clamps to its last logged slate, exactly
+# the ``min(occ, max_t - 1)`` cursor semantics of ``replay_ops``.
+_REPLAY_MAX_T = 128
 
-def make_env(spec: DatasetSpec, seed: int = 0):
-    """(EnvOps, true_labels) for a stat-matched clone of ``spec``."""
-    env, labels = core_env.make_synthetic_env(
-        jax.random.PRNGKey(seed),
-        n_users=spec.n_users,
-        d=spec.d,
-        n_clusters=spec.n_clusters,
-        n_candidates=spec.n_candidates,
-        within_cluster_noise=0.05,
-    )
-    return synthetic_ops(env), labels
+
+def make_env(spec: DatasetSpec, seed: int = 0, kind: str = "synthetic",
+             drift_period: int | None = None) -> tuple[EnvOps, jax.Array]:
+    """(EnvOps, true_labels) for a stat-matched clone of ``spec``.
+
+    ``kind`` selects the protocol (see module docstring): "synthetic"
+    simulates, "replay" materializes and serves actual logged tables, and
+    "drift" re-draws the planted centroids every ``drift_period``
+    interactions (default: 4 phases across the spec's per-user budget).
+    """
+    if kind == "synthetic":
+        env, labels = core_env.make_synthetic_env(
+            jax.random.PRNGKey(seed),
+            n_users=spec.n_users,
+            d=spec.d,
+            n_clusters=spec.n_clusters,
+            n_candidates=spec.n_candidates,
+            within_cluster_noise=0.05,
+        )
+        return synthetic_ops(env), labels
+    if kind == "replay":
+        from .replay import make_replay_env
+        max_t = min(_REPLAY_MAX_T,
+                    max(1, math.ceil(spec.n_interactions / spec.n_users)))
+        return make_replay_env(spec, max_t=max_t, seed=seed)
+    if kind == "drift":
+        per_user = max(1, spec.n_interactions // spec.n_users)
+        period = drift_period or max(1, per_user // 4)
+        env, labels = core_env.make_drift_env(
+            jax.random.PRNGKey(seed),
+            n_users=spec.n_users,
+            d=spec.d,
+            n_clusters=spec.n_clusters,
+            n_candidates=spec.n_candidates,
+            drift_period=period,
+            n_phases=4,
+            within_cluster_noise=0.05,
+        )
+        return drift_ops(env), labels
+    raise ValueError(f"unknown env kind {kind!r}; want synthetic|replay|drift")
 
 
 def epochs_for(spec: DatasetSpec, hyper) -> int:
     """Number of 4-stage epochs so total interactions ~= the dataset's
-    logged interaction count (each epoch processes ~n_users * (uR + cR))."""
-    per_epoch = spec.n_users * 2 * hyper.sigma
+    logged interaction count.
+
+    Per-user budget accounting (see ``runtime.stages.stage4_rebalance``):
+    rebalancing conserves the SUM ``u_rounds + c_rounds = 2 * sigma`` per
+    user, but each budget is clipped to ``[0, max_rounds]`` — the static
+    scan length — so one epoch processes at most
+    ``n_users * 2 * min(sigma, max_rounds)`` interactions.  Using the
+    clamped figure keeps the epoch count honest when
+    ``max_rounds < sigma``.
+    """
+    per_user = 2 * min(hyper.sigma, hyper.max_rounds)
+    per_epoch = spec.n_users * per_user
     return max(1, spec.n_interactions // per_epoch)

@@ -6,7 +6,10 @@ materializes such logs from the stat-matched clones so the algorithms can
 be driven by the exact replay protocol (per-user queues preserve each
 user's interaction order under batched rounds — DESIGN.md §2), and so the
 offline-evaluation counterfactual (reward only on matching pick) can be
-studied alongside the simulator.
+studied alongside the simulator.  ``data.datasets.make_env(spec,
+kind="replay")`` is the front door; the resulting ``EnvOps`` is
+shard-aware (tables sliced per shard via ``row0``), so replay-backed
+clones run under ``shard_map`` as well as single-host.
 
     item_feats  [n_items, d]        catalog features (unit rows)
     cand_ids    [n_users, max_t, K] per-user queue of logged slates

@@ -4,6 +4,14 @@ The paper's scaling argument (Fig 6) needs DCCB runnable on the same mesh
 as DistCLUB.  Users are sharded as in ``distclub_shard``; the per-epoch
 structure is L lockstep interaction steps followed by one gossip round.
 
+The interaction steps route through the SAME shared round protocol as the
+DistCLUB stages (``runtime.stages.interaction_rounds``): DCCB supplies a
+lagged-Gram ``score_fn`` and a FIFO-buffer ``update_fn``, and the
+environment is any shard-aware ``EnvOps`` (synthetic / drift / replay) —
+the old runtime inlined the synthetic generator and carried ``theta``.
+Per-user PRNG keying means a sharded DCCB run draws the same
+contexts/rewards as the single-host ``repro.core.dccb`` driver.
+
 Gossip mapping: the paper pairs each user with a random connected peer.
 On a mesh, cross-shard random pairing is an all-to-all; the standard
 hardware-shaped equivalent is a *permuted-neighbor* exchange — each shard
@@ -23,9 +31,12 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..core import clustering
-from ..core.env import expected_reward, sample_contexts
+from ..core import clustering, linucb
+from ..core.backend import InteractBackend, get_backend
+from ..core.env_ops import EnvOps, default_synthetic_ops
 from ..core.types import BanditHyper, Metrics
+from ..runtime import stages
+from ..runtime.collectives import lax_collectives
 
 
 class ShardedDCCB(NamedTuple):
@@ -34,79 +45,69 @@ class ShardedDCCB(NamedTuple):
     xbuf: jnp.ndarray     # [n, L, d]   FIFO of pending update contexts
     rbuf: jnp.ndarray     # [n, L]      ... and rewards
     occ: jnp.ndarray      # [n] i32
-    theta: jnp.ndarray    # [n, d]
     comm_bytes: jnp.ndarray  # [] f32
 
 
 def state_specs(axes) -> ShardedDCCB:
     s = P(axes)
-    return ShardedDCCB(Mw=s, bw=s, xbuf=s, rbuf=s, occ=s, theta=s,
-                       comm_bytes=P())
+    return ShardedDCCB(Mw=s, bw=s, xbuf=s, rbuf=s, occ=s, comm_bytes=P())
 
 
-def init_state(n, d, L, theta) -> ShardedDCCB:
+def init_state(n, d, L) -> ShardedDCCB:
     eye = jnp.eye(d, dtype=jnp.float32) + jnp.zeros((n, d, d), jnp.float32)
     return ShardedDCCB(
         Mw=eye, bw=jnp.zeros((n, d), jnp.float32),
         xbuf=jnp.zeros((n, L, d), jnp.float32),
         rbuf=jnp.zeros((n, L), jnp.float32),
-        occ=jnp.zeros((n,), jnp.int32), theta=theta,
+        occ=jnp.zeros((n,), jnp.int32),
         comm_bytes=jnp.zeros((), jnp.float32),
     )
 
 
 def build_epoch_fn(mesh: Mesh, axes, n: int, d: int, L: int,
-                   hyper: BanditHyper):
-    n_shards = 1
-    for a in axes:
-        n_shards *= mesh.shape[a]
+                   hyper: BanditHyper,
+                   ops: EnvOps | None = None,
+                   backend: InteractBackend | None = None):
+    col = lax_collectives(mesh, axes)
+    n_shards = col.n_shards
     assert n % n_shards == 0
+    n_local = n // n_shards
+    be = backend or get_backend(n_local, d, hyper.n_candidates)
+    env = ops or default_synthetic_ops(n, d, hyper.n_candidates)
 
     def epoch(state: ShardedDCCB, key: jax.Array):
-        idx = jax.lax.axis_index(axes)
-        key = jax.random.fold_in(key, idx)
-        K = hyper.n_candidates
+        # same key schedule as the single-host driver (dccb._run splits
+        # each epoch key into interaction/gossip halves), so both drivers
+        # draw identical per-user env streams from one epoch key; the ring
+        # gossip here is deterministic, so its key half goes unused.
+        k_int, _ = jax.random.split(key)
+        row0 = col.axis_index() * n_local
 
-        # ---- L lockstep interactions (buffer turns over once) ----------
-        def step(carry, inp):
+        # ---- L lockstep interactions via the shared round protocol ------
+        def score_lagged(carry):
+            Mw, bw, *_ = carry
+            Minv = jnp.linalg.inv(Mw)
+            return linucb.user_vector(Minv, bw), Minv
+
+        def update_buffered(carry, slot, x, realized, mask):
+            del mask                            # lockstep: all users live
             Mw, bw, xbuf, rbuf, occ = carry
-            slot, k = inp
-            k_ctx, k_rew = jax.random.split(k)
-            contexts = sample_contexts(k_ctx, (Mw.shape[0],), K, d)
-            w = jnp.linalg.solve(Mw, bw[..., None])[..., 0]
-            Z = jnp.linalg.solve(Mw, jnp.swapaxes(contexts, -1, -2))
-            quad = jnp.einsum("nkd,ndk->nk", contexts, Z)
-            est = jnp.einsum("nkd,nd->nk", contexts, w)
-            bonus = hyper.alpha * jnp.sqrt(jnp.maximum(quad, 0.0)) * jnp.sqrt(
-                jnp.log1p(occ.astype(jnp.float32)))[:, None]
-            choice = jnp.argmax(est + bonus, axis=-1)
-            x = jnp.take_along_axis(contexts, choice[:, None, None], 1)[:, 0]
-            p_all = expected_reward(state.theta[:, None, :], contexts)
-            p_c = jnp.take_along_axis(p_all, choice[:, None], 1)[:, 0]
-            r = (jax.random.uniform(k_rew, p_c.shape) < p_c).astype(
-                jnp.float32)
-
             # pop oldest into current; push the new update
             x_old = xbuf[:, slot]
             r_old = rbuf[:, slot]
             Mw = Mw + jnp.einsum("ni,nj->nij", x_old, x_old)
             bw = bw + r_old[:, None] * x_old
             xbuf = xbuf.at[:, slot].set(x)
-            rbuf = rbuf.at[:, slot].set(r)
-            m = Metrics(
-                reward=jnp.sum(r),
-                regret=jnp.sum(jnp.max(p_all, -1) - p_c),
-                rand_reward=jnp.sum(jnp.mean(p_all, -1)),
-                interactions=jnp.int32(r.shape[0]),
-            )
-            return (Mw, bw, xbuf, rbuf, occ + 1), m
+            rbuf = rbuf.at[:, slot].set(realized)
+            return (Mw, bw, xbuf, rbuf, occ + 1)
 
-        keys = jax.random.split(key, L)
-        (Mw, bw, xbuf, rbuf, occ), metrics = jax.lax.scan(
-            step, (state.Mw, state.bw, state.xbuf, state.rbuf, state.occ),
-            (jnp.arange(L), keys))
-        metrics = jax.tree.map(lambda v: jnp.sum(v, 0), metrics)
-        metrics = jax.tree.map(lambda v: jax.lax.psum(v, axes), metrics)
+        carry0 = (state.Mw, state.bw, state.xbuf, state.rbuf, state.occ)
+        (Mw, bw, xbuf, rbuf, occ), metrics = stages.interaction_rounds(
+            be, env, hyper, k_int, carry0, row0=row0, n_steps=L,
+            occ_of=lambda c: c[4], score_fn=score_lagged,
+            update_fn=update_buffered, budget=None,
+        )
+        metrics = jax.tree.map(lambda v: col.psum(v), metrics)
 
         # ---- gossip: one-hop ring exchange of (buffer + current) --------
         perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
@@ -142,7 +143,7 @@ def build_epoch_fn(mesh: Mesh, axes, n: int, d: int, L: int,
 
         per_user = (L + 1) * (d * d + d) * 4.0
         comm = state.comm_bytes + jnp.float32(n) * per_user
-        return ShardedDCCB(Mw, bw, xbuf, rbuf, occ, state.theta, comm), metrics
+        return ShardedDCCB(Mw, bw, xbuf, rbuf, occ, comm), metrics
 
     specs = state_specs(axes)
     return shard_map(
@@ -154,16 +155,18 @@ def build_epoch_fn(mesh: Mesh, axes, n: int, d: int, L: int,
 
 
 def make_runtime(mesh: Mesh, axes, n: int, d: int, L: int,
-                 hyper: BanditHyper):
-    epoch = build_epoch_fn(mesh, axes, n, d, L, hyper)
+                 hyper: BanditHyper, ops: EnvOps | None = None):
+    """(init_fn, jit'd epoch_fn); ``init_fn(key)`` ignores its key (the
+    environment's randomness lives in ``ops``).  ``metrics`` out of the
+    epoch is per-step ``[L]`` rows, like the single-host driver."""
+    epoch = build_epoch_fn(mesh, axes, n, d, L, hyper, ops)
     shardings = jax.tree.map(
         lambda s: NamedSharding(mesh, s), state_specs(axes),
         is_leaf=lambda x: isinstance(x, P))
 
     def init_fn(key):
-        theta = jax.random.normal(key, (n, d))
-        theta = theta / jnp.linalg.norm(theta, axis=-1, keepdims=True)
-        return jax.device_put(init_state(n, d, L, theta), shardings)
+        del key
+        return jax.device_put(init_state(n, d, L), shardings)
 
     epoch_jit = jax.jit(
         epoch,

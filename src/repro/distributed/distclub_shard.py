@@ -1,13 +1,18 @@
-"""Distributed DistCLUB: the paper's four stages under ``shard_map``.
+"""Distributed DistCLUB: the shared stage engine under ``shard_map``.
+
+This module contains NO stage logic — the four stage bodies live once in
+``repro.runtime.stages`` and are bound here to ``LaxCollectives`` over the
+mesh axes (the single-host driver binds the same functions to
+``NullCollectives``).  What remains here is pure plumbing: the sharded
+state record, its partition specs, and the jit/donation wiring.
 
 Layout (users = the distribution axis, sharded over every mesh axis
 flattened — the bandit equivalent of pure data parallelism):
 
-  Mu, Minv, bu, occ, budgets : sharded on dim 0   -> [n_local, ...]
+  Minv, b, occ, budgets      : sharded on dim 0   -> [n_local, ...]
   adj (bit-packed uint32)    : sharded rows       -> [n_local, ceil(n/32)]
   labels                     : replicated [n]     (refreshed by all_gather)
-  cluster stats              : replicated [n,...] (produced by psum — the
-                               paper's treeReduce on the ICI all-reduce tree)
+  comm_bytes                 : replicated scalar  (modeled stage-2 bytes)
 
 Stage 1/3 are purely local (zero communication — the paper's
 "embarrassingly parallel" claim is literal here).  Stage 2 is the only
@@ -15,18 +20,19 @@ communicating stage and its traffic is exactly the paper's model: one
 all-gather of the n x d user vectors + occ for edge pruning, label hops
 during connected components, and one psum of the (n,d,d)+(n,d) aggregates.
 The adjacency never crosses the network — each shard prunes and hops its
-own packed rows through the graph engine (``repro.kernels.graph`` inside
-``shard_map``): the [n_local, n] f32 distance slab stays in VMEM tiles and
-each CC hop reads n_local*n/8 bytes of packed bits instead of n_local*n
-bool (32x less resident graph, 8x less HBM sweep than dense bool).
+own packed rows through the graph engine.
 
-The environment inside the sharded runtime is the synthetic generator
-(per-device PRNG folded with the shard index); replay datasets use the
-single-host driver in ``repro.core``.
+Environments: ANY ``EnvOps`` (synthetic / drift / logged replay) runs
+here — environment tables are closed over (replicated per device; small
+next to the sharded state) and sliced per shard via ``row0``, and every
+random draw is keyed by GLOBAL user id, so a sharded run reproduces the
+single-host run up to fp contraction order.  The env no longer lives in
+the carried state (the old runtime hard-coded the synthetic generator and
+carried ``theta``); the per-user cluster snapshots are likewise no longer
+carried — they are epoch transients of stage 2.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -34,12 +40,13 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..core import linucb
 from ..core.backend import (GraphBackend, InteractBackend, get_backend,
                             get_graph_backend)
-from ..core.env import expected_reward, sample_contexts
+from ..core.env_ops import EnvOps, default_synthetic_ops
 from ..core.types import BanditHyper, Metrics
 from ..kernels.graph import ops as graph_ops
+from ..runtime import stages
+from ..runtime.collectives import lax_collectives
 
 
 class ShardedDistCLUB(NamedTuple):
@@ -48,29 +55,22 @@ class ShardedDistCLUB(NamedTuple):
     §Perf iteration (bandit cell): the Gram matrix M is NOT carried — only
     its inverse is needed per interaction (UCB + Sherman-Morrison), and
     stage-2's cluster aggregation recovers M = inv(Minv) locally once per
-    epoch.  Dropping M cuts the per-round state traffic by ~1/3 on the
-    memory-bound bandit cell (EXPERIMENTS.md §Perf)."""
+    epoch.  §Perf iteration 2: the label-indexed cluster tables are
+    stage-2 transients, not carried state.  §Unification: the environment
+    (previously a carried ``theta`` + inlined synthetic sampling) moved
+    into the shard-aware ``EnvOps`` closure, and the per-user cluster
+    snapshots became stage-2 transients too — the carried state is now
+    exactly the single-host ``DistCLUBState`` minus the recoverable
+    Gram/cluster tables."""
 
     Minv: jnp.ndarray     # [n, d, d]   sharded dim0
     b: jnp.ndarray        # [n, d]      sharded dim0
     occ: jnp.ndarray      # [n]         sharded dim0
     adj: jnp.ndarray      # [n, ceil(n/32)] uint32 bit-packed, sharded rows
     labels: jnp.ndarray   # [n]         replicated (n i32 — cheap)
-    uMcinv: jnp.ndarray   # [n, d, d]   sharded: per-user copy of its
-                          #             cluster's inverse Gram (stage-2 snap)
-    ubc: jnp.ndarray      # [n, d]      sharded: per-user cluster bias
-    umean_occ: jnp.ndarray  # [n] f32   sharded: cluster mean occ snapshot
     u_rounds: jnp.ndarray  # [n] i32    sharded dim0
     c_rounds: jnp.ndarray  # [n] i32    sharded dim0
-    theta: jnp.ndarray    # [n, d]      sharded dim0 (synthetic env truth)
-
-    # §Perf iteration 2 (bandit cell): the label-indexed cluster tables
-    # (Mc/Mcinv/bc, 3 x [n,d,d] REPLICATED) dominated per-device HBM
-    # traffic (cost_analysis: ~790 MB/device/epoch, mostly these).  They
-    # are now transients inside stage-2; the carried state holds only
-    # per-user sharded snapshots (n_loc x d x d).  The within-stage-3
-    # update of the seen-counter is deferred to the next stage-2 (the
-    # paper's own lazy-update argument).
+    comm_bytes: jnp.ndarray  # [] f32   replicated modeled-bytes counter
 
 
 def state_specs(axes: tuple[str, ...]) -> ShardedDistCLUB:
@@ -78,220 +78,83 @@ def state_specs(axes: tuple[str, ...]) -> ShardedDistCLUB:
     r = P()              # replicated
     return ShardedDistCLUB(
         Minv=s, b=s, occ=s, adj=s, labels=r,
-        uMcinv=s, ubc=s, umean_occ=s,
-        u_rounds=s, c_rounds=s, theta=s,
+        u_rounds=s, c_rounds=s, comm_bytes=r,
     )
 
 
-def init_state(n: int, d: int, hyper: BanditHyper, theta: jnp.ndarray) -> ShardedDistCLUB:
-    def eye():
-        # distinct buffers: the jit'd epoch donates its inputs and XLA
-        # rejects the same buffer appearing in two donated slots.
-        return jnp.eye(d, dtype=jnp.float32) + jnp.zeros((n, d, d), jnp.float32)
-
+def init_state(n: int, d: int, hyper: BanditHyper) -> ShardedDistCLUB:
+    eye = jnp.eye(d, dtype=jnp.float32) + jnp.zeros((n, d, d), jnp.float32)
     return ShardedDistCLUB(
-        Minv=eye(),
+        Minv=eye,
         b=jnp.zeros((n, d), jnp.float32),
         occ=jnp.zeros((n,), jnp.int32),
         adj=graph_ops.init_packed_adj(n, n),
         labels=jnp.zeros((n,), jnp.int32),
-        uMcinv=eye(),
-        ubc=jnp.zeros((n, d), jnp.float32),
-        umean_occ=jnp.zeros((n,), jnp.float32),
         u_rounds=jnp.full((n,), hyper.sigma, jnp.int32),
         c_rounds=jnp.full((n,), hyper.sigma, jnp.int32),
-        theta=theta,
+        comm_bytes=jnp.zeros((), jnp.float32),
     )
-
-
-def _local_round(lin_Minv, lin_b, occ, theta_true, budget, key, hyper,
-                 score_fn, be: InteractBackend):
-    """Shared stage-1/3 inner loop over a local user shard. Zero comms.
-
-    Runs through the fused interaction engine: the local (Minv, b, occ)
-    shard is padded to the kernel block shape ONCE before the scan and the
-    scan carries the padded state; per step only the fresh context tensor
-    is padded.  ``score_fn`` receives and returns padded-width arrays.
-    The M-free fused update applies here — the sharded state carries no
-    Gram matrix, so the state traffic per round is one read + one write of
-    Minv (plus the choose read) instead of the reference path's separate
-    score-read / Sherman-Morrison read / subtract-and-write sweeps.
-    """
-    K = hyper.n_candidates
-    d = lin_b.shape[-1]
-    n_loc = lin_b.shape[0]
-
-    Minv0 = be.pad_gram(lin_Minv)                 # pad once per stage
-    b0 = be.pad_vec(lin_b)
-    occ0 = be.pad_users(occ)
-    budget_p = be.pad_users(budget)               # padded users: budget 0
-
-    def step(carry, inp):
-        Minv, b, occ = carry
-        step_idx, k = inp
-        k_ctx, k_rew = jax.random.split(k)
-        mask = step_idx < budget_p
-        contexts = sample_contexts(k_ctx, (n_loc,), K, d)
-        w, minv_eff = score_fn(Minv, b, occ)
-        x, choice = be.choose(w, minv_eff, contexts, occ, hyper.alpha)
-        choice_log = be.unpad_users(choice)
-
-        p_all = expected_reward(theta_true[:, None, :], contexts)
-        p_choice = jnp.take_along_axis(p_all, choice_log[:, None],
-                                       axis=1)[:, 0]
-        realized = (jax.random.uniform(k_rew, p_choice.shape) < p_choice
-                    ).astype(jnp.float32)
-
-        Minv, b = be.update_inv(Minv, b, x, be.pad_users(realized), mask)
-        occ = occ + mask.astype(jnp.int32)
-        m = be.unpad_users(mask).astype(jnp.float32)
-        metrics = Metrics(
-            reward=jnp.sum(realized * m),
-            regret=jnp.sum((jnp.max(p_all, axis=-1) - p_choice) * m),
-            rand_reward=jnp.sum(jnp.mean(p_all, axis=-1) * m),
-            interactions=jnp.sum(m.astype(jnp.int32)),
-        )
-        return (Minv, b, occ), metrics
-
-    steps = jnp.arange(hyper.max_rounds)
-    keys = jax.random.split(key, hyper.max_rounds)
-    (Minv, b, occ), metrics = jax.lax.scan(
-        step, (Minv0, b0, occ0), (steps, keys)
-    )
-    # fold per-step metric sums into one per-round Metrics row
-    metrics = jax.tree.map(lambda v: jnp.sum(v, axis=0), metrics)
-    return (be.unpad_gram(Minv), be.unpad_vec(b), be.unpad_users(occ),
-            metrics)
 
 
 def build_epoch_fn(mesh: Mesh, axes: tuple[str, ...], n: int, d: int,
                    hyper: BanditHyper,
                    backend: InteractBackend | None = None,
-                   graph: GraphBackend | None = None):
-    """Returns jit-able epoch(state, key) -> (state, metrics, n_clusters)."""
-    n_shards = 1
-    for a in axes:
-        n_shards *= mesh.shape[a]
-    if n % n_shards:
-        raise ValueError(f"n_users={n} must divide the {n_shards}-way mesh")
-    n_local = n // n_shards
+                   graph: GraphBackend | None = None,
+                   ops: EnvOps | None = None):
+    """Returns jit-able epoch(state, key) -> (state, metrics, n_clusters).
+
+    ``metrics`` is per-scan-step ``[2 * max_rounds]`` rows (stage-1 steps
+    then stage-3 steps, psum'd over shards) — the same layout one epoch of
+    the single-host driver emits, so parity checks are slice-for-slice.
+    ``ops`` defaults to a planted synthetic environment
+    (``env_ops.default_synthetic_ops``); pass replay/drift ops to run
+    those scenarios sharded.
+    """
+    col = lax_collectives(mesh, axes)
+    if n % col.n_shards:
+        raise ValueError(f"n_users={n} must divide the {col.n_shards}-way mesh")
+    n_local = n // col.n_shards
     # the engines operate on the LOCAL shard inside shard_map (the graph
     # engine on [n_local, n] packed rows)
     be = backend or get_backend(n_local, d, hyper.n_candidates)
     gb = graph or get_graph_backend(n_local, n, kind=be.kind,
                                     interpret=be.interpret)
+    env = ops or default_synthetic_ops(n, d, hyper.n_candidates)
 
     def epoch(state: ShardedDistCLUB, key: jax.Array):
-        idx = jax.lax.axis_index(axes)
-        key = jax.random.fold_in(key, idx)
         k1, k3 = jax.random.split(key)
-        row0 = idx * n_local
-        local_ids = row0 + jnp.arange(n_local, dtype=jnp.int32)
+        row0 = col.axis_index() * n_local
 
         # ---- stage 1: personalized rounds (local only) --------------------
-        def score_own(Minv, b, occ):
-            return linucb.user_vector(Minv, b), Minv
-
-        Minv, b, occ, m1 = _local_round(
-            state.Minv, state.b, state.occ, state.theta,
-            state.u_rounds, k1, hyper, score_own, be,
+        Minv, b, occ, m1 = stages.personalized_rounds(
+            be, env, hyper, state.Minv, state.b, state.occ,
+            state.u_rounds, k1, row0,
         )
 
-        # ---- stage 2: the communication stage ------------------------------
-        v_local = linucb.user_vector(Minv, b)                     # [n_loc, d]
-        v_all = jax.lax.all_gather(v_local, axes, tiled=True)     # [n, d]
-        occ_all = jax.lax.all_gather(occ, axes, tiled=True)       # [n]
+        # ---- stage 2: the communication stage -----------------------------
+        res = stages.stage2_refresh(col, gb, hyper, d, Minv, b, occ,
+                                    state.adj)
 
-        # prune the shard's packed adjacency rows: the graph engine tiles
-        # the [n_local, n] distance slab through VMEM and ANDs the CLUB
-        # keep-mask into the bits — no dense distance matrix, no bool graph.
-        adj = gb.prune_rows(state.adj, v_local, occ, v_all, occ_all,
-                            hyper.gamma)
-
-        # connected components: min-label propagation with gathered labels
-        init = jnp.arange(n, dtype=jnp.int32)
-
-        def cc_cond(carry):
-            _, changed, it = carry
-            return changed & (it < n)
-
-        def cc_body(carry):
-            labels, _, it = carry
-            # fused neighbour-min over the packed rows (n_local*n/8 bytes)
-            new_local = gb.cc_hop(adj, labels[row0 + jnp.arange(n_local)],
-                                  labels)
-            new = jax.lax.all_gather(new_local, axes, tiled=True)
-            # pointer-doubling on the replicated labels (free of comms):
-            # chase label->label links so convergence needs O(log n) hops
-            # instead of O(diameter).
-            new = jnp.minimum(new, new[new])
-            changed = jnp.any(new != labels)
-            return new, changed, it + 1
-
-        labels, _, _ = jax.lax.while_loop(
-            cc_cond, cc_body, (init, jnp.array(True), 0)
+        # ---- stage 3: cluster-based rounds (local; stats frozen) ----------
+        Minv, b, occ, m3 = stages.cluster_rounds(
+            be, env, hyper, Minv, b, occ, state.c_rounds, k3, row0,
+            res.uMcinv, res.ubc, res.umean_occ,
         )
 
-        # cluster stats: local segment_sum -> psum (the treeReduce).
-        # M is recovered from Minv once per epoch (batched d x d inverse)
-        # instead of being carried through every round, and the replicated
-        # [n,d,d] tables are TRANSIENT — only per-user sharded snapshots
-        # survive the stage.
-        eye = jnp.eye(d, dtype=jnp.float32)
-        M = jnp.linalg.inv(Minv)
-        local_labels = labels[row0 + jnp.arange(n_local)]
-        Mc = jax.ops.segment_sum(M - eye, local_labels, num_segments=n)
-        bc = jax.ops.segment_sum(b, local_labels, num_segments=n)
-        csize = jax.ops.segment_sum(jnp.ones_like(local_labels), local_labels,
-                                    num_segments=n)
-        cseen = jax.ops.segment_sum(occ, local_labels, num_segments=n)
-        Mc = jax.lax.psum(Mc, axes) + eye
-        bc = jax.lax.psum(bc, axes)
-        csize = jax.lax.psum(csize, axes)
-        cseen = jax.lax.psum(cseen, axes)
-        lab_local = labels[local_ids]
-        uMcinv = jnp.linalg.inv(Mc[lab_local])           # [n_loc, d, d]
-        ubc = bc[lab_local]
-        umean_occ = (cseen[lab_local].astype(jnp.float32)
-                     / jnp.maximum(csize[lab_local], 1))
-        n_clusters = jnp.sum(labels == init)
+        # ---- stage 4: budget rebalancing (local; stage-2 snapshot) --------
+        u_rounds, c_rounds = stages.stage4_rebalance(
+            hyper, occ, res.umean_occ, state.u_rounds, state.c_rounds)
 
-        # ---- stage 3: cluster-based rounds (local only; stats frozen) ------
-        # cluster snapshots are frozen for the whole stage: pad them and
-        # compute the cluster user-vector once, outside the scan.
-        uMcinv_p = be.pad_gram(uMcinv)
-        ubc_p = be.pad_vec(ubc)
-        v_clu = linucb.user_vector(uMcinv_p, ubc_p)
-        umean_p = be.pad_users(umean_occ)
-
-        def score_cluster(Minv_, b_, occ_):
-            use_own = occ_.astype(jnp.float32) >= hyper.beta * umean_p
-            v_own = linucb.user_vector(Minv_, b_)
-            w = jnp.where(use_own[:, None], v_own, v_clu)
-            minv_eff = jnp.where(use_own[:, None, None], Minv_, uMcinv_p)
-            return w, minv_eff
-
-        Minv, b, occ, m3 = _local_round(
-            Minv, b, occ, state.theta, state.c_rounds, k3, hyper,
-            score_cluster, be,
-        )
-
-        # ---- stage 4: budget rebalancing (local) ----------------------------
-        lab = labels[local_ids]
-        mean_occ = cseen[lab].astype(jnp.float32) / jnp.maximum(csize[lab], 1)
-        delta = ((occ.astype(jnp.float32) - mean_occ) / 2.0).astype(jnp.int32)
-        u_rounds = jnp.clip(state.u_rounds + delta, 0, hyper.max_rounds)
-        c_rounds = jnp.clip(state.c_rounds - delta, 0, hyper.max_rounds)
-
-        metrics = jax.tree.map(lambda a_, b_: a_ + b_, m1, m3)
-        metrics = jax.tree.map(lambda v: jax.lax.psum(v, axes), metrics)
+        metrics = jax.tree.map(lambda a, b_: jnp.concatenate([a, b_]),
+                               m1, m3)
+        metrics = jax.tree.map(lambda v: col.psum(v), metrics)
 
         new_state = ShardedDistCLUB(
-            Minv=Minv, b=b, occ=occ, adj=adj, labels=labels,
-            uMcinv=uMcinv, ubc=ubc, umean_occ=umean_occ,
-            u_rounds=u_rounds, c_rounds=c_rounds, theta=state.theta,
+            Minv=Minv, b=b, occ=occ, adj=res.adj, labels=res.labels,
+            u_rounds=u_rounds, c_rounds=c_rounds,
+            comm_bytes=state.comm_bytes + res.comm_bytes,
         )
-        return new_state, metrics, n_clusters
+        return new_state, metrics, res.n_clusters
 
     specs = state_specs(axes)
     sharded = shard_map(
@@ -306,18 +169,22 @@ def build_epoch_fn(mesh: Mesh, axes: tuple[str, ...], n: int, d: int,
 def make_runtime(mesh: Mesh, axes: tuple[str, ...], n: int, d: int,
                  hyper: BanditHyper,
                  backend: InteractBackend | None = None,
-                 graph: GraphBackend | None = None):
-    """(init_fn, jit'd epoch_fn) pair with global-array in/out shardings."""
-    epoch = build_epoch_fn(mesh, axes, n, d, hyper, backend, graph)
+                 graph: GraphBackend | None = None,
+                 ops: EnvOps | None = None):
+    """(init_fn, jit'd epoch_fn) pair with global-array in/out shardings.
+
+    ``init_fn(key)`` ignores its key (kept for API stability): the initial
+    bandit state is deterministic and the environment's randomness lives
+    in ``ops``.
+    """
+    epoch = build_epoch_fn(mesh, axes, n, d, hyper, backend, graph, ops)
     specs = state_specs(axes)
     shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                              is_leaf=lambda x: isinstance(x, P))
 
     def init_fn(key):
-        theta = jax.random.normal(key, (n, d))
-        theta = theta / jnp.linalg.norm(theta, axis=-1, keepdims=True)
-        state = init_state(n, d, hyper, theta)
-        return jax.device_put(state, shardings)
+        del key
+        return jax.device_put(init_state(n, d, hyper), shardings)
 
     epoch_jit = jax.jit(
         epoch,

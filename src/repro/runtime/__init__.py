@@ -1,0 +1,15 @@
+"""One stage engine: the shard-count-agnostic DistCLUB runtime.
+
+``runtime.stages`` holds the paper's four stage bodies written exactly
+once; ``runtime.collectives`` holds the tiny communication protocol they
+are written against.  ``repro.core.distclub`` runs the engine with the
+null collectives (single host), ``repro.distributed.distclub_shard`` binds
+the same stage functions to ``lax`` collectives inside ``shard_map``, and
+both DCCB drivers route their interaction loop through the same shared
+round scan.
+
+Deliberately no eager submodule imports here: ``runtime.stages`` imports
+``repro.core`` modules while ``repro.core.distclub`` imports
+``runtime.stages`` back (call-time only), so the package init must stay
+inert for either import order to work.
+"""

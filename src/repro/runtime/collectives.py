@@ -1,0 +1,77 @@
+"""The communication protocol the stage engine is written against.
+
+The four DistCLUB stages need exactly four communication primitives:
+
+  axis_index()    which user-shard am I?        (stage 1/3: PRNG + env slice)
+  all_gather(x)   tiled gather over the user axis (stage 2: v/occ for edge
+                  pruning, label hops during connected components)
+  psum(x)         all-reduce (stage 2: the paper's treeReduce of cluster
+                  aggregates; epoch end: metrics)
+  n_shards        static shard count (layout checks, comm models)
+
+Two implementations, both hashable NamedTuples so drivers can thread them
+through ``jax.jit`` as static arguments:
+
+  ``NullCollectives``  every primitive is the identity — the engine run on
+                       one host IS the single-host driver.  ``axis_index``
+                       returns the Python int 0, so downstream offsets
+                       (``row0 = axis_index() * n_local``) stay
+                       compile-time constants.
+  ``LaxCollectives``   binds the primitives to named mesh axes; only valid
+                       inside ``shard_map`` (or another axis-binding
+                       context) over those axes.
+
+Everything else about distribution (which arrays are sharded, what the
+local row offset is) is derived from array shapes plus ``axis_index`` —
+the stage bodies in ``runtime.stages`` never mention a mesh.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+
+
+class NullCollectives(NamedTuple):
+    """Single-host: one shard, every collective is the identity."""
+
+    @property
+    def n_shards(self) -> int:
+        return 1
+
+    def axis_index(self):
+        return 0                      # Python int: offsets stay static
+
+    def all_gather(self, x):
+        return x
+
+    def psum(self, x):
+        return x
+
+
+class LaxCollectives(NamedTuple):
+    """``lax`` collectives bound to mesh axes (use inside ``shard_map``)."""
+
+    axes: tuple[str, ...]
+    shards: int                       # product of the axes' mesh sizes
+
+    @property
+    def n_shards(self) -> int:
+        return self.shards
+
+    def axis_index(self):
+        return jax.lax.axis_index(self.axes)
+
+    def all_gather(self, x):
+        return jax.lax.all_gather(x, self.axes, tiled=True)
+
+    def psum(self, x):
+        return jax.lax.psum(x, self.axes)
+
+
+def lax_collectives(mesh, axes: tuple[str, ...]) -> LaxCollectives:
+    """Collectives over ``axes`` of ``mesh`` (users = the flattened axes)."""
+    shards = 1
+    for a in axes:
+        shards *= mesh.shape[a]
+    return LaxCollectives(axes=tuple(axes), shards=shards)

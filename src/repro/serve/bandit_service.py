@@ -77,7 +77,15 @@ def recommend(svc: BanditService, user_ids: jnp.ndarray,
 def observe(svc: BanditService, user_ids: jnp.ndarray, contexts: jnp.ndarray,
             choices: jnp.ndarray, rewards: jnp.ndarray,
             *, use_pallas: bool | None = None) -> BanditService:
-    """Fold a batch of (distinct-user) feedback into the bandit state."""
+    """Fold a batch of (distinct-user) feedback into the bandit state.
+
+    Note the deliberate semantic difference from the offline 4-stage
+    driver: serving advances ``clusters.seen`` LIVE between stage-2
+    refreshes so the beta heuristic reacts to traffic immediately, while
+    the epoch drivers (single-host and sharded, via
+    ``runtime.stages``) freeze ``seen`` at the stage-2 snapshot for the
+    whole epoch — the paper's lazy semantics.  Both converge to the same
+    value at each refresh, which rebuilds ``seen`` from ``occ``."""
     st = svc.state
     x = jnp.take_along_axis(contexts, choices[:, None, None], axis=1)[:, 0]
     M_u, Minv_u, b_u = (st.lin.M[user_ids], st.lin.Minv[user_ids],

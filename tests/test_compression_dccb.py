@@ -57,7 +57,7 @@ def test_sharded_dccb_runs_and_ships_buffers():
         tot_r = tot_rand = 0.0
         for i in range(6):
             state, m = epoch(state, jax.random.PRNGKey(i + 1))
-            tot_r += float(m.reward); tot_rand += float(m.rand_reward)
+            tot_r += float(m.reward.sum()); tot_rand += float(m.rand_reward.sum())
         comm = float(state.comm_bytes)
         want = 6 * n * (L + 1) * (d * d + d) * 4
         assert comm == want, (comm, want)

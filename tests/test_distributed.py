@@ -45,7 +45,7 @@ def test_sharded_distclub_learns_on_8_devices():
         tot_r = tot_rand = 0.0
         for i in range(5):
             state, m, nclu = epoch(state, jax.random.PRNGKey(i + 1))
-            tot_r += float(m.reward); tot_rand += float(m.rand_reward)
+            tot_r += float(m.reward.sum()); tot_rand += float(m.rand_reward.sum())
         print("REWARD", tot_r, "RAND", tot_rand, "CLU", int(nclu))
     """)
     parts = out.split()
