@@ -7,10 +7,11 @@ PR 1 / PR 2 onward).
 
 ``--quick`` runs the fused-interaction microbenchmark at reduced
 shapes/repeats, the stage-2 graph bench (full n sweep — its acceptance
-gates live at n=16k/64k — with trimmed repeats), and the non-stationary
+gates live at n=16k/64k — with trimmed repeats), the non-stationary
 drift scenario through the unified engine (single-host + 8-device
-sharded); a few minutes on one CPU core, and still emits every
-BENCH_*.json, so CI can track the hot-path trends cheaply.
+sharded), and the online-serving transaction bench (fused vs reference,
+single-host + sharded); a few minutes on one CPU core, and still emits
+every BENCH_*.json, so CI can track the hot-path trends cheaply.
 """
 from __future__ import annotations
 
@@ -20,20 +21,23 @@ import argparse
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
-                    help="fused-interaction + graph benches only, reduced "
-                         "shapes/repeats, a few minutes on one CPU core")
+                    help="fused-interaction + graph + serve benches only, "
+                         "reduced shapes/repeats, a few minutes on one "
+                         "CPU core")
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
-    from . import bench_drift, bench_graph, bench_interact
+    from . import bench_drift, bench_graph, bench_interact, bench_serve
     if args.quick:
         bench_interact.main(quick=True)
         bench_graph.main(quick=True)
         bench_drift.main(quick=True)
+        bench_serve.main(quick=True)
         return
     bench_interact.main()
     bench_graph.main()
     bench_drift.main()
+    bench_serve.main()
     from . import bench_kernels
     bench_kernels.main()
     from . import bench_paper

@@ -1,9 +1,12 @@
 """End-to-end online recommendation service: SASRec embeddings + DistCLUB.
 
-This is the paper's deployment story with a real model in the loop:
-SASRec supplies candidate item embeddings as bandit contexts; DistCLUB
-explores/exploits per user, discovers user clusters, and checkpoints the
-whole service (model + bandit state) for fault tolerance.
+The paper's deployment story with a real model in the loop: SASRec
+supplies candidate item embeddings as bandit contexts, an `OnlineBandit`
+session explores/exploits per user through one jit-compiled transaction
+per batch (stage-2 re-clustering fires inside it on an interaction
+budget), and `CheckpointManager` snapshots the service for fault
+tolerance — demonstrated below by killing the session mid-run and
+resuming from the latest checkpoint with bit-identical choices.
 
     PYTHONPATH=src python examples/serve_bandit.py
 """
@@ -11,61 +14,93 @@ import shutil
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro import serve
+from repro.core import clustering
 from repro.core import env as bandit_env
 from repro.core.types import BanditHyper
 from repro.models.recsys import seqrec
-from repro.serve import bandit_service
 from repro.train.checkpoint import CheckpointManager
 
 N_USERS, N_ITEMS, D, K = 256, 2048, 32, 20
 BATCH = 128
-key = jax.random.PRNGKey(0)
+CKPT_DIR = "/tmp/repro_bandit_service"
 
 # --- the embedding model (would be trained offline; random here) -------------
 cfg = seqrec.SeqRecConfig(n_items=N_ITEMS, embed_dim=D, n_blocks=2,
                           n_heads=2, seq_len=16)
-model = seqrec.init_seqrec(key, cfg)
+model = seqrec.init_seqrec(jax.random.PRNGKey(0), cfg)
 
 # --- hidden user preferences drive simulated clicks --------------------------
 world, _ = bandit_env.make_synthetic_env(
     jax.random.PRNGKey(1), n_users=N_USERS, d=D, n_clusters=8,
     n_candidates=K)
+theta = world.theta
+
+
+def reward_fn(key, user_ids, contexts, choices):
+    """User feedback: Bernoulli clicks in the hidden affinity."""
+    return bandit_env.step_rewards(key, theta[user_ids], contexts, choices)
+
+
+def request_batch(step):
+    """One batch of requests: users + model-embedded candidate slates."""
+    k_u, k_c = jax.random.split(jax.random.fold_in(jax.random.PRNGKey(2),
+                                                   step))
+    users = jax.random.permutation(k_u, N_USERS)[:BATCH]
+    cand_ids = jax.random.randint(k_c, (BATCH, K), 0, N_ITEMS)
+    contexts = serve.embed_candidates(model["item_embed"], cand_ids)
+    return users, contexts
+
 
 # --- the service --------------------------------------------------------------
 hyper = BanditHyper(alpha=0.05, beta=2.0, gamma=2.4, n_candidates=K)
-svc = bandit_service.create(N_USERS, D, hyper)
-ckpt = CheckpointManager("/tmp/repro_bandit_service", keep=2)
-shutil.rmtree("/tmp/repro_bandit_service", ignore_errors=True)
-ckpt = CheckpointManager("/tmp/repro_bandit_service", keep=2)
+session = serve.OnlineBandit.create(N_USERS, D, hyper, policy="distclub",
+                                    refresh_every=N_USERS * 4)
+shutil.rmtree(CKPT_DIR, ignore_errors=True)   # clean slate for the demo,
+ckpt = CheckpointManager(CKPT_DIR, keep=2)    # THEN create the manager once
 
 total_reward = total_rand = 0.0
-for step in range(200):
-    k_u, k_c, k_r, key = jax.random.split(key, 4)
-    users = jax.random.permutation(k_u, N_USERS)[:BATCH]
-    cand_ids = jax.random.randint(k_c, (BATCH, K), 0, N_ITEMS)
-
-    # model -> contexts; bandit -> choice
-    contexts = bandit_service.embed_candidates(model["item_embed"], cand_ids)
-    choices = bandit_service.recommend(svc, users, contexts)
-
-    # user feedback (Bernoulli in hidden affinity)
-    realized, p_choice, best, rand = bandit_env.step_rewards(
-        k_r, world.theta[users], contexts, choices)
-    svc = bandit_service.observe(svc, users, contexts, choices, realized)
-    svc = bandit_service.maybe_refresh(svc, every=N_USERS * 4)
-
-    total_reward += float(realized.sum())
-    total_rand += float(rand.sum())
+for step in range(120):
+    users, contexts = request_batch(step)
+    session, choices, m = serve.step(session, jax.random.PRNGKey(step),
+                                     users, contexts, reward_fn)
+    total_reward += float(m.reward)
+    total_rand += float(m.rand_reward)
     if (step + 1) % 50 == 0:
-        ckpt.save(svc.state, step + 1)
-        from repro.core import clustering
-        n_clu = int(clustering.num_clusters(svc.state.graph.labels))
+        session.save(ckpt, step + 1)
+        n_clu = int(clustering.num_clusters(session.state.labels))
         print(f"step {step + 1:3d}: reward/random = "
               f"{total_reward / total_rand:.3f}, clusters = {n_clu}, "
               f"checkpointed @ {ckpt.latest_step()}")
 
-print(f"\nfinal reward vs random policy: {total_reward / total_rand:.3f} "
-      f"({total_reward:.0f} vs {total_rand:.0f})")
-restored, step = ckpt.restore_latest(jax.eval_shape(lambda: svc.state))
-print(f"service state restores from checkpoint at step {step}: OK")
+# --- kill the replica mid-run and resume from the latest checkpoint ----------
+probe_users, probe_contexts = request_batch(120)
+planned = serve.recommend(session, probe_users, probe_contexts)
+
+del session                                    # the "crash"
+session, resumed_at = serve.OnlineBandit.create(
+    N_USERS, D, hyper, policy="distclub",
+    refresh_every=N_USERS * 4).restore(ckpt)
+print(f"\nreplica restarted from checkpoint @ step {resumed_at}")
+
+# replay the traffic the checkpoint missed (steps 100..119; rewards were
+# already tallied pre-crash, so only the state advances), then the
+# restarted replica must plan the exact same slate as the dead one
+for step in range(resumed_at, 120):
+    users, contexts = request_batch(step)
+    session, _, _ = serve.step(session, jax.random.PRNGKey(step),
+                               users, contexts, reward_fn)
+resumed = serve.recommend(session, probe_users, probe_contexts)
+assert (np.asarray(planned) == np.asarray(resumed)).all()
+print("restored replica reproduces the pre-crash choices bit-for-bit: OK")
+
+for step in range(120, 200):
+    users, contexts = request_batch(step)
+    session, _, m = serve.step(session, jax.random.PRNGKey(step),
+                               users, contexts, reward_fn)
+    total_reward += float(m.reward)
+    total_rand += float(m.rand_reward)
+
+print(f"\nfinal reward vs random policy: {total_reward / total_rand:.3f}")

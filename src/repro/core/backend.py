@@ -137,6 +137,21 @@ class InteractBackend(NamedTuple):
             occ=self.unpad_users(lin.occ),
         )
 
+    def with_users(self, n: int) -> "InteractBackend":
+        """The same engine re-fit to a different leading (user/request)
+        width — d, K and the dispatch decision are kept.  The serving
+        layer uses this to derive a request-batch-width engine from the
+        run-level one: the kind is resolved once per session, the width
+        once per traced batch shape."""
+        if n == self.n:
+            return self
+        if self.kind == "reference":
+            return self._replace(n=n, n_pad=n)
+        n_pad, d_pad, K_pad, bu = pad.padded_dims(n, self.d, self.K,
+                                                  self.block_users)
+        return self._replace(n=n, n_pad=n_pad, d_pad=d_pad, K_pad=K_pad,
+                             block_users=bu)
+
     # ---- the two hot-loop operations ---------------------------------------
 
     def choose(self, w, Minv, contexts, occ, alpha):

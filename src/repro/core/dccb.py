@@ -67,6 +67,44 @@ def init_state(n_users: int, d: int, L: int) -> DCCBState:
     )
 
 
+def lagged_score(Mw: jnp.ndarray, bw: jnp.ndarray):
+    """DCCB's scoring statistics from the lagged Gram: ``(w, Minv)``.
+
+    The lagged ``Mw`` moves by buffer pops and gossip averaging (rank-2
+    mixtures), so the inverse is recomputed batched rather than tracked by
+    Sherman-Morrison.  Shared by the epoch driver's inner loop and the
+    serving layer's dccb policy."""
+    Minv = jnp.linalg.inv(Mw)
+    return linucb.user_vector(Minv, bw), Minv
+
+
+def buffered_push(s: DCCBState, x: jnp.ndarray, realized: jnp.ndarray,
+                  mask: jnp.ndarray, L: int) -> DCCBState:
+    """One masked buffered interaction for every user (the paper's
+    lazy-buffer semantics): pop the oldest slot into the current
+    statistics, push this round's update into the freed slot.
+
+    Masked-off users are untouched — their pending slot entry stays
+    buffered until their next active round pops it (push and pop share a
+    slot, so no pending update is ever overwritten).  With an all-ones
+    mask this is exactly the lockstep update of ``interaction_phase``;
+    the serving layer calls it with the batch's per-user mask."""
+    m = mask.astype(x.dtype)
+    xm = x * m[:, None]
+    upd_M = jnp.einsum("ni,nj->nij", xm, xm)
+    upd_b = (realized * m)[:, None] * xm
+    mM = m[:, None, None]
+    old_M, old_b = s.Mbuf[:, s.slot], s.bbuf[:, s.slot]
+    Mw = s.Mw + old_M * mM
+    bw = s.bw + old_b * m[:, None]
+    Mbuf = s.Mbuf.at[:, s.slot].set(jnp.where(mM > 0, upd_M, old_M))
+    bbuf = s.bbuf.at[:, s.slot].set(jnp.where(m[:, None] > 0, upd_b, old_b))
+    return s._replace(
+        Mw=Mw, bw=bw, Mbuf=Mbuf, bbuf=bbuf,
+        occ=s.occ + mask.astype(jnp.int32), slot=(s.slot + 1) % L,
+    )
+
+
 def interaction_phase(state: DCCBState, ops: EnvOps, key: jax.Array,
                       hyper: BanditHyper, L: int,
                       backend: InteractBackend | None = None):
@@ -89,23 +127,11 @@ def interaction_phase(state: DCCBState, ops: EnvOps, key: jax.Array,
         # rank-1 updates), so unlike the distclub stages there is no
         # carried state to pad once per stage — choose pads its per-step
         # inputs, which these already are.
-        Minv = jnp.linalg.inv(carry.Mw)
-        return linucb.user_vector(Minv, carry.bw), Minv
+        return lagged_score(carry.Mw, carry.bw)
 
     def update_buffered(carry, step_idx, x, realized, mask):
-        del step_idx, mask                      # lockstep: all users live
-        s = carry
-        upd_M = jnp.einsum("ni,nj->nij", x, x)
-        upd_b = realized[:, None] * x
-        # pop oldest into current, push new into the freed slot
-        Mw = s.Mw + s.Mbuf[:, s.slot]
-        bw = s.bw + s.bbuf[:, s.slot]
-        Mbuf = s.Mbuf.at[:, s.slot].set(upd_M)
-        bbuf = s.bbuf.at[:, s.slot].set(upd_b)
-        return s._replace(
-            Mw=Mw, bw=bw, Mbuf=Mbuf, bbuf=bbuf,
-            occ=s.occ + 1, slot=(s.slot + 1) % L,
-        )
+        del step_idx                  # lockstep: budget=None -> mask all-on
+        return buffered_push(carry, x, realized, mask, L)
 
     return stages.interaction_rounds(
         be, ops, hyper, key, state, row0=0, n_steps=L,

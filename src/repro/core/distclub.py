@@ -100,6 +100,17 @@ def _with_lin(state: DistCLUBState, Minv, b, occ) -> DistCLUBState:
     return state._replace(lin=lin)
 
 
+def serving_snapshot(state: DistCLUBState):
+    """Per-user cluster snapshots ``(uMcinv, ubc, umean_occ)`` gathered
+    from the label-indexed stage-2 tables — the FROZEN values stage 3's
+    beta heuristic reads, and what the serving layer (``repro.serve``)
+    carries between refreshes."""
+    labels = state.graph.labels
+    stats = state.clusters
+    return (stats.Mcinv[labels], stats.bc[labels],
+            stages.snapshot_mean_occ(stats.seen, stats.size, labels))
+
+
 def refresh_gram(state: DistCLUBState) -> DistCLUBState:
     """Recover ``lin.M = inv(lin.Minv)`` (exact up to the accumulated
     Sherman-Morrison fp error) for consumers of the Gram itself."""
@@ -146,11 +157,7 @@ def stage3(state: DistCLUBState, ops: EnvOps, key: jax.Array,
     which this stage no longer advances (stage 4 reads the same stage-2
     snapshot in both runtimes)."""
     be = backend or _default_backend(state, hyper)
-    labels = state.graph.labels
-    stats = state.clusters
-    uMcinv = stats.Mcinv[labels]
-    ubc = stats.bc[labels]
-    umean_occ = stages.snapshot_mean_occ(stats.seen, stats.size, labels)
+    uMcinv, ubc, umean_occ = serving_snapshot(state)
     Minv, b, occ, metrics = stages.cluster_rounds(
         be, ops, hyper, state.lin.Minv, state.lin.b, state.lin.occ,
         state.c_rounds, key, 0, uMcinv, ubc, umean_occ,

@@ -73,6 +73,13 @@ class ShardedDistCLUB(NamedTuple):
     comm_bytes: jnp.ndarray  # [] f32   replicated modeled-bytes counter
 
 
+def named_shardings(mesh: Mesh, specs):
+    """PartitionSpec pytree -> NamedSharding pytree over ``mesh``.  Shared
+    by this runtime and the sharded serving sessions (``repro.serve``)."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
 def state_specs(axes: tuple[str, ...]) -> ShardedDistCLUB:
     s = P(axes)          # dim-0 sharded
     r = P()              # replicated
@@ -178,9 +185,7 @@ def make_runtime(mesh: Mesh, axes: tuple[str, ...], n: int, d: int,
     in ``ops``.
     """
     epoch = build_epoch_fn(mesh, axes, n, d, hyper, backend, graph, ops)
-    specs = state_specs(axes)
-    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
-                             is_leaf=lambda x: isinstance(x, P))
+    shardings = named_shardings(mesh, state_specs(axes))
 
     def init_fn(key):
         del key

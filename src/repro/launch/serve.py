@@ -1,7 +1,9 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id>``.
 
-Runs batched online recommendation with the DistCLUB bandit layer over a
-recsys model's embeddings (reduced scale on CPU), reporting reward vs the
+Runs batched online recommendation with a policy-pluggable
+``OnlineBandit`` session over a recsys model's embeddings (reduced scale
+on CPU) — ``--policy {distclub,dccb,club,linucb}`` serves any of the four
+bandits through the identical transaction — reporting reward vs the
 random policy and throughput.  For LM archs it runs reduced-config decode
 steps against a KV cache.
 """
@@ -18,10 +20,10 @@ from .. import configs
 
 
 def serve_recsys(spec, args):
+    from .. import serve
     from ..core import env as bandit_env
     from ..core.types import BanditHyper
     from ..models.recsys import seqrec
-    from ..serve import bandit_service
 
     d, K = 32, 20
     cfg = seqrec.SeqRecConfig(n_items=4096, embed_dim=d, n_blocks=2,
@@ -31,26 +33,29 @@ def serve_recsys(spec, args):
         jax.random.PRNGKey(1), n_users=args.users, d=d, n_clusters=8,
         n_candidates=K)
     hyper = BanditHyper(alpha=0.05, gamma=2.4, n_candidates=K)
-    svc = bandit_service.create(args.users, d, hyper)
+    session = serve.OnlineBandit.create(
+        args.users, d, hyper, policy=args.policy,
+        refresh_every=args.users * 4)
+    theta = world.theta
+
+    def reward_fn(key, user_ids, contexts, choice):
+        return bandit_env.step_rewards(key, theta[user_ids], contexts,
+                                       choice)
 
     key = jax.random.PRNGKey(2)
     tot_r = tot_rand = 0.0
     t0 = time.perf_counter()
     for step in range(args.steps):
-        k_u, k_c, k_r, key = jax.random.split(key, 4)
+        k_u, k_c, k_s, key = jax.random.split(key, 4)
         users = jax.random.permutation(k_u, args.users)[:args.batch]
         cand = jax.random.randint(k_c, (args.batch, K), 0, cfg.n_items)
-        ctx = bandit_service.embed_candidates(model["item_embed"], cand)
-        choice = bandit_service.recommend(svc, users, ctx)
-        realized, _, _, rand = bandit_env.step_rewards(
-            k_r, world.theta[users], ctx, choice)
-        svc = bandit_service.observe(svc, users, ctx, choice, realized)
-        svc = bandit_service.maybe_refresh(svc, every=args.users * 4)
-        tot_r += float(realized.sum())
-        tot_rand += float(rand.sum())
+        ctx = serve.embed_candidates(model["item_embed"], cand)
+        session, choice, m = serve.step(session, k_s, users, ctx, reward_fn)
+        tot_r += float(m.reward)
+        tot_rand += float(m.rand_reward)
     dt = time.perf_counter() - t0
     n = args.steps * args.batch
-    print(f"{n} requests in {dt:.1f}s = {n / dt:.0f} req/s; "
+    print(f"[{args.policy}] {n} requests in {dt:.1f}s = {n / dt:.0f} req/s; "
           f"reward/random = {tot_r / tot_rand:.3f}")
 
 
@@ -88,6 +93,9 @@ def main():
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--users", type=int, default=256)
+    ap.add_argument("--policy", default="distclub",
+                    choices=["distclub", "dccb", "club", "linucb"],
+                    help="serving policy (recsys archs)")
     args = ap.parse_args()
     spec = configs.get(args.arch)
     if spec.family == "lm":

@@ -148,6 +148,24 @@ def personalized_rounds(be, ops, hyper, Minv, b, occ, budget, key, row0):
                           score_own)
 
 
+def beta_gate(hyper, occ, umean_occ):
+    """The paper's beta personalization heuristic: a user whose lifetime
+    occupancy has reached ``beta`` times the cluster's mean occupancy
+    scores with their OWN statistics instead of the cluster's.  Single
+    definition shared by stage 3 and the serving layer's clustered
+    policies."""
+    return occ.astype(jnp.float32) >= hyper.beta * umean_occ
+
+
+def mix_scores(use_own, v_own, v_clu, Minv_own, Minv_clu):
+    """Per-user blend of personalized vs cluster scoring statistics:
+    ``(w, minv_eff)`` for the fused choose.  Shared by stage 3 and the
+    serving policies (``repro.serve``)."""
+    w = jnp.where(use_own[:, None], v_own, v_clu)
+    minv_eff = jnp.where(use_own[:, None, None], Minv_own, Minv_clu)
+    return w, minv_eff
+
+
 def cluster_rounds(be, ops, hyper, Minv, b, occ, budget, key, row0,
                    uMcinv, ubc, umean_occ):
     """Stage 3: cluster-based rounds with the beta personalization
@@ -162,11 +180,9 @@ def cluster_rounds(be, ops, hyper, Minv, b, occ, budget, key, row0,
 
     def score_cluster(carry):
         Minv_, b_, occ_ = carry
-        use_own = occ_.astype(jnp.float32) >= hyper.beta * umean_p
+        use_own = beta_gate(hyper, occ_, umean_p)
         v_own = linucb.user_vector(Minv_, b_)
-        w = jnp.where(use_own[:, None], v_own, v_clu)
-        minv_eff = jnp.where(use_own[:, None, None], Minv_, uMcinv_p)
-        return w, minv_eff
+        return mix_scores(use_own, v_own, v_clu, Minv_, uMcinv_p)
 
     return _bandit_rounds(be, ops, hyper, Minv, b, occ, budget, key, row0,
                           score_cluster)

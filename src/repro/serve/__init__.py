@@ -1,0 +1,40 @@
+"""First-class online serving: policy-pluggable `OnlineBandit` sessions
+bound to the stage engine.
+
+    from repro import serve
+
+    session = serve.OnlineBandit.create(n_users, d, hyper,
+                                        policy="distclub",
+                                        refresh_every=n_users * 4)
+    session, choices, metrics = serve.step(session, key, user_ids,
+                                           contexts, reward_fn)
+
+or, for real request/feedback splits:
+
+    choices = serve.recommend(session, user_ids, contexts)
+    ...  # show items, collect clicks
+    session = serve.observe(session, user_ids, contexts, choices, rewards)
+
+Policies: ``distclub`` | ``dccb`` | ``club`` | ``linucb`` — one protocol,
+four bandits, head-to-head on the identical serving surface (see
+``serve.policies``).  ``OnlineBandit.sharded(mesh, ...)`` runs the same
+transaction over a device mesh; ``session.save``/``session.restore``
+round-trip through ``train.checkpoint.CheckpointManager``.
+
+The old ``serve.bandit_service`` NamedTuple API is deprecated; a shim
+remains (README "Online serving API" has the migration notes).
+"""
+from .policies import (POLICIES, ClusteredPolicy, ClusteredState,
+                       DCCBPolicy, DCCBServeState, LinUCBPolicy,
+                       LinUCBServeState, ServeCfg, from_distclub_state,
+                       get_policy, make_cfg, to_distclub_state)
+from .session import (OnlineBandit, embed_candidates, observe, recommend,
+                      refresh, step)
+
+__all__ = [
+    "POLICIES", "ClusteredPolicy", "ClusteredState", "DCCBPolicy",
+    "DCCBServeState", "LinUCBPolicy", "LinUCBServeState", "OnlineBandit",
+    "ServeCfg", "embed_candidates", "from_distclub_state", "get_policy",
+    "make_cfg", "observe", "recommend", "refresh", "step",
+    "to_distclub_state",
+]

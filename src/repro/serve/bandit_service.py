@@ -1,118 +1,105 @@
-"""DistCLUB as a first-class serving feature on top of the recsys models.
+"""DEPRECATED migration shim over the `OnlineBandit` session API.
 
-The recommendation loop the paper describes, with a real embedding model
-supplying the context vectors:
+The ``BanditService`` NamedTuple + free functions were replaced by
+``repro.serve``'s policy-pluggable sessions (README "Online serving
+API").  This shim keeps the old call sites running on top of the new
+engine-backed transaction; migrate to::
 
-  1. a recsys model (SASRec / BERT4Rec / MIND) embeds each user's candidate
-     items -> the bandit's context set ``C_t`` (unit-normalized);
-  2. the DistCLUB layer owns per-user LinUCB state and scores candidates
-     with the fused UCB kernel (estimate + exploration bonus), choosing the
-     item to show;
-  3. observed rewards fold back with the rank-1 Sherman-Morrison kernel;
-  4. periodically (stage-2) the user graph is re-clustered and cluster
-     statistics are tree-reduced, after which cold users score with cluster
-     statistics instead (the beta-heuristic decides per user).
+    session = serve.OnlineBandit.create(n, d, hyper, policy="distclub",
+                                        refresh_every=every)
+    session, choices, metrics = serve.step(session, key, users, ctx, rf)
 
-State lives in the same ``DistCLUBState`` the offline driver uses, so the
-checkpoint manager snapshots the full service (model params + bandit state)
-and a restarted/rescaled replica resumes exactly.
+Semantic changes the shim inherits from the redesign (deliberate):
+
+  * duplicate-user batches are now EXACT (the old ``observe`` dropped all
+    but the last occurrence via ``.at[ids].set``);
+  * the cluster mean-occupancy the beta heuristic reads is the FROZEN
+    stage-2 snapshot (the engine semantics) — the old service advanced
+    ``clusters.seen`` live between refreshes;
+  * scoring/updates run through the fused ``InteractBackend``
+    (``REPRO_BACKEND`` dispatch) instead of raw ucb/rank1 ops, so the
+    ``use_pallas=`` arguments are ignored.
+
+``maybe_refresh`` keeps its host-synced check for compatibility; the new
+API schedules refresh inside the jitted transaction (``refresh_every``).
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+import warnings
+from typing import NamedTuple
 
-import jax
-import jax.numpy as jnp
-
-from ..core import clustering, linucb
 from ..core.types import BanditHyper, DistCLUBState
-from ..core.distclub import init_state
-from ..kernels.rank1 import ops as rank1_ops
-from ..kernels.ucb import ops as ucb_ops
+from . import policies, session as _session
+
+embed_candidates = _session.embed_candidates
+
+
+def _deprecated(name: str):
+    warnings.warn(
+        f"repro.serve.bandit_service.{name} is deprecated; use the "
+        "repro.serve.OnlineBandit session API (README: Online serving "
+        "API / migration notes)",
+        DeprecationWarning, stacklevel=3,
+    )
 
 
 class BanditService(NamedTuple):
-    state: DistCLUBState
-    hyper: BanditHyper
-    d: int
-    interactions_since_refresh: jnp.ndarray
+    """Compatibility wrapper: an `OnlineBandit` session behind the old
+    record's attribute surface."""
+
+    session: _session.OnlineBandit
+
+    @property
+    def state(self) -> DistCLUBState:
+        """The old record, REBUILT on access (two [n, d, d] batched
+        inversions + the label-table segment sums) — the session no
+        longer carries the derived tables.  Hold the result in a local
+        when reading repeatedly; new code reads ``session.state``."""
+        cfg = self.session.policy.cfg
+        return policies.to_distclub_state(self.session.state, cfg.hyper,
+                                          cfg.d)
+
+    @property
+    def hyper(self) -> BanditHyper:
+        return self.session.policy.cfg.hyper
+
+    @property
+    def d(self) -> int:
+        return self.session.policy.cfg.d
+
+    @property
+    def interactions_since_refresh(self):
+        return self.session.state.since_refresh
 
 
 def create(n_users: int, d: int, hyper: BanditHyper) -> BanditService:
-    return BanditService(
-        state=init_state(n_users, d, hyper),
-        hyper=hyper, d=d,
-        interactions_since_refresh=jnp.zeros((), jnp.int32),
-    )
+    _deprecated("create")
+    return BanditService(session=_session.OnlineBandit.create(
+        n_users, d, hyper, policy="distclub", refresh_every=0))
 
 
-def embed_candidates(item_embed: jnp.ndarray, cand_ids: jnp.ndarray):
-    """Model item embeddings -> unit-norm bandit contexts [B, K, d]."""
-    e = item_embed[cand_ids]
-    return e / jnp.maximum(jnp.linalg.norm(e, axis=-1, keepdims=True), 1e-9)
-
-
-def recommend(svc: BanditService, user_ids: jnp.ndarray,
-              contexts: jnp.ndarray, *, use_pallas: bool | None = None):
+def recommend(svc: BanditService, user_ids, contexts, *,
+              use_pallas: bool | None = None):
     """Pick one item per request.  user_ids [B], contexts [B, K, d] -> [B]."""
-    st = svc.state
-    lin = st.lin
-    labels = st.graph.labels[user_ids]
-    stats = st.clusters
-
-    size = jnp.maximum(stats.size[labels], 1)
-    mean_occ = stats.seen[labels].astype(jnp.float32) / size
-    use_own = lin.occ[user_ids].astype(jnp.float32) >= svc.hyper.beta * mean_occ
-
-    v_own = linucb.user_vector(lin.Minv[user_ids], lin.b[user_ids])
-    v_clu = linucb.user_vector(stats.Mcinv[labels], stats.bc[labels])
-    w = jnp.where(use_own[:, None], v_own, v_clu)
-    minv = jnp.where(use_own[:, None, None], lin.Minv[user_ids],
-                     stats.Mcinv[labels])
-    scores = ucb_ops.ucb_scores(w, minv, contexts, lin.occ[user_ids],
-                                svc.hyper.alpha, use_pallas=use_pallas)
-    return jnp.argmax(scores, axis=-1)
+    _deprecated("recommend")
+    del use_pallas                     # engine dispatch is session-level now
+    return _session.recommend(svc.session, user_ids, contexts)
 
 
-def observe(svc: BanditService, user_ids: jnp.ndarray, contexts: jnp.ndarray,
-            choices: jnp.ndarray, rewards: jnp.ndarray,
-            *, use_pallas: bool | None = None) -> BanditService:
-    """Fold a batch of (distinct-user) feedback into the bandit state.
-
-    Note the deliberate semantic difference from the offline 4-stage
-    driver: serving advances ``clusters.seen`` LIVE between stage-2
-    refreshes so the beta heuristic reacts to traffic immediately, while
-    the epoch drivers (single-host and sharded, via
-    ``runtime.stages``) freeze ``seen`` at the stage-2 snapshot for the
-    whole epoch — the paper's lazy semantics.  Both converge to the same
-    value at each refresh, which rebuilds ``seen`` from ``occ``."""
-    st = svc.state
-    x = jnp.take_along_axis(contexts, choices[:, None, None], axis=1)[:, 0]
-    M_u, Minv_u, b_u = (st.lin.M[user_ids], st.lin.Minv[user_ids],
-                        st.lin.b[user_ids])
-    mask = jnp.ones(user_ids.shape, bool)
-    M2, Minv2, b2 = rank1_ops.rank1_update(
-        M_u, Minv_u, b_u, x, rewards, mask, use_pallas=use_pallas)
-    lin = st.lin._replace(
-        M=st.lin.M.at[user_ids].set(M2),
-        Minv=st.lin.Minv.at[user_ids].set(Minv2),
-        b=st.lin.b.at[user_ids].set(b2),
-        occ=st.lin.occ.at[user_ids].add(1),
-    )
-    seen = st.clusters.seen.at[st.graph.labels[user_ids]].add(1)
-    return svc._replace(
-        state=st._replace(lin=lin, clusters=st.clusters._replace(seen=seen)),
-        interactions_since_refresh=svc.interactions_since_refresh
-        + user_ids.shape[0],
-    )
+def observe(svc: BanditService, user_ids, contexts, choices, rewards, *,
+            use_pallas: bool | None = None) -> BanditService:
+    """Fold a feedback batch (duplicate-user batches are exact now)."""
+    _deprecated("observe")
+    del use_pallas
+    return BanditService(session=_session.observe(
+        svc.session, user_ids, contexts, choices, rewards))
 
 
 def maybe_refresh(svc: BanditService, every: int) -> BanditService:
-    """Stage-2: re-cluster + tree-reduce stats when the budget elapses."""
-    if int(svc.interactions_since_refresh) < every:
+    """Stage-2 refresh when the budget elapsed.  Host-synced for
+    compatibility — new code passes ``refresh_every`` at session creation
+    and lets the jitted transaction schedule it."""
+    _deprecated("maybe_refresh")
+    if int(svc.session.state.since_refresh) < every:
         return svc
-    from ..core import distclub
-
-    state = distclub.stage2(svc.state, svc.hyper, svc.d)
-    return svc._replace(state=state,
-                        interactions_since_refresh=jnp.zeros((), jnp.int32))
+    return BanditService(session=_session.refresh(svc.session))

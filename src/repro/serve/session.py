@@ -1,0 +1,405 @@
+"""`OnlineBandit`: policy-pluggable online serving sessions on the stage
+engine.
+
+The hot path is ONE jit-compiled transaction per request batch —
+
+    session, choices, metrics = serve.step(
+        session, key, user_ids, contexts, reward_fn)
+
+— score (policy-mixed statistics), fused choose (`InteractBackend`, the
+`[B, K]` score tensor never hits HBM on the pallas engine), reward,
+duplicate-safe feedback fold, and a trace-friendly refresh (`lax.cond` on
+the interaction budget; the old host-synced `int(...)` check is gone).
+For real request/feedback splits the transaction decomposes into the two
+halves `recommend` (pure, no state change) and `observe` (feedback fold +
+refresh schedule).
+
+Duplicate-user batches are EXACT.  A batch is decomposed by occurrence
+rank (item i's rank = how many earlier items carry the same user id) and
+folded rank-by-rank with `lax.fori_loop`: within one pass every live row
+is a distinct user, so a single fused masked rank-1 sweep per pass equals
+the sequential per-interaction fold.  Distinct-user batches take exactly
+one pass — the common fast path costs one fused update, and matches the
+offline `runtime.stages.interaction_rounds` update bit for bit.
+
+Sharding: `OnlineBandit.sharded(mesh, ...)` binds the SAME step body to
+`LaxCollectives` under `shard_map` — per-user state rows are sharded over
+the mesh, the request batch is replicated, each shard scores/updates the
+users it owns and the per-request results are combined with one `psum`
+(non-owner shards contribute zeros).  Refresh runs `stages.stage2_refresh`
+with the mesh collectives, i.e. the identical code path as
+`distributed.distclub_shard`.  A serving replica set is the offline
+sharded runtime plus a request front-end.
+
+Fault tolerance: `session.save(ckpt, step)` / `session.restore(ckpt)`
+round-trip the policy state through `train.checkpoint.CheckpointManager`
+(re-sharded onto whatever mesh the restoring session has) — a restarted
+replica resumes with bit-identical subsequent choices
+(`tests/test_serve.py::test_checkpoint_restore_resumes_bit_identical`).
+
+Caching note: compiled transactions are memoized per (policy, reward_fn,
+mesh) — pass a *stable* `reward_fn` (a module-level function or one
+closure built once), not a fresh lambda per call, or every call retraces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from ..core.types import BanditHyper, Metrics
+from ..runtime.collectives import NullCollectives, lax_collectives
+from . import policies as pol
+
+_NULL = NullCollectives()
+
+
+def embed_candidates(item_embed: jnp.ndarray, cand_ids: jnp.ndarray):
+    """Model item embeddings -> unit-norm bandit contexts [B, K, d]."""
+    e = item_embed[cand_ids]
+    return e / jnp.maximum(jnp.linalg.norm(e, axis=-1, keepdims=True), 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# the transaction body (shared single-host / sharded)
+# ---------------------------------------------------------------------------
+
+
+def _occurrence_ranks(user_ids: jnp.ndarray) -> jnp.ndarray:
+    """rank[i] = number of earlier batch items with the same user id.
+    O(B^2) bools — negligible next to the [B, d, d] row gathers at
+    serving batch sizes."""
+    eq = user_ids[:, None] == user_ids[None, :]
+    earlier = jnp.tril(eq, k=-1)
+    return jnp.sum(earlier, axis=1).astype(jnp.int32)
+
+
+def _normalize_rewards(out):
+    """Accept `realized [B]` or the full env 4-tuple
+    `(realized, expected, best, rand)`; missing regret/baseline terms
+    metric as zero."""
+    if isinstance(out, (tuple, list)):
+        realized, expected, best, rand = out
+    else:
+        realized = out
+        expected = best = rand = jnp.zeros_like(realized)
+    return realized, expected, best, rand
+
+
+def _request_masks(policy, col, state, user_ids):
+    """(idx, own, valid, be): local row index per request, ownership mask
+    for this shard, global validity, and the batch-width engine (the
+    session's run-level dispatch re-fit to this traced batch width)."""
+    cfg = policy.cfg
+    n_local = policy.occ_of(state).shape[0]
+    row0 = col.axis_index() * n_local
+    valid = (user_ids >= 0) & (user_ids < cfg.n_users)
+    local = user_ids - row0
+    own = valid & (local >= 0) & (local < n_local)
+    idx = jnp.clip(local, 0, n_local - 1)
+    return idx, own, valid, cfg.engine.with_users(user_ids.shape[0])
+
+
+def _choose(policy, col, state, user_ids, contexts):
+    """Score + fused choose; combine per-request results across shards."""
+    idx, own, valid, be = _request_masks(policy, col, state, user_ids)
+    w, minv_eff, occ_rows = policy.gather_score(state, idx)
+    x, choice = be.choose(w, minv_eff, contexts, occ_rows,
+                          policy.cfg.hyper.alpha)
+    choice = col.psum(jnp.where(own, choice, 0))
+    x = col.psum(jnp.where(own[:, None], x, jnp.zeros_like(x)))
+    return choice, x, (idx, own, valid, be)
+
+def _fold_feedback(policy, state, idx, own, valid, be, user_ids, x,
+                   realized):
+    """Duplicate-safe feedback fold: one fused masked pass per occurrence
+    rank (live rows of a pass are distinct users -> the pass is exact;
+    distinct-user batches take exactly one pass)."""
+    ranks = _occurrence_ranks(user_ids)
+    n_passes = jnp.max(jnp.where(valid, ranks, -1)) + 1
+
+    def one_pass(k, st):
+        live = own & (ranks == k)
+        return policy.apply_pass(st, idx, x, realized, live, be)
+
+    return jax.lax.fori_loop(0, n_passes, one_pass, state)
+
+
+def _schedule_refresh(policy, col, state, n_new, key):
+    """Trace-friendly refresh: `lax.cond` on the interaction budget.
+
+    The refresh key mixes the state's lifetime interaction count into the
+    caller's key, so a randomized refresh (dccb gossip's peer draw) still
+    varies round to round even when the caller reuses a key — e.g. the
+    `observe` half's default.  The count is part of the checkpointed
+    state, so a restored replica replays the identical schedule."""
+    since = state.since_refresh + n_new
+    state = state._replace(since_refresh=since)
+    every = policy.cfg.refresh_every
+    if not policy.has_refresh or every <= 0:
+        return state
+    k_ref = jax.random.fold_in(jax.random.fold_in(key, 1),
+                               col.psum(jnp.sum(policy.occ_of(state))))
+
+    def fire(st):
+        st = policy.refresh(col, st, k_ref)
+        return st._replace(since_refresh=jnp.zeros((), jnp.int32))
+
+    return jax.lax.cond(since >= every, fire, lambda st: st, state)
+
+
+def _step_body(policy, reward_fn, col, state, key, user_ids, contexts):
+    choice, x, (idx, own, valid, be) = _choose(policy, col, state,
+                                               user_ids, contexts)
+    realized, expected, best, rand = _normalize_rewards(
+        reward_fn(key, user_ids, contexts, choice))
+    state = _fold_feedback(policy, state, idx, own, valid, be, user_ids,
+                           x, realized)
+    n_new = jnp.sum(valid.astype(jnp.int32))
+    state = _schedule_refresh(policy, col, state, n_new, key)
+    vm = valid.astype(realized.dtype)
+    metrics = Metrics(
+        reward=jnp.sum(realized * vm),
+        regret=jnp.sum((best - expected) * vm),
+        rand_reward=jnp.sum(rand * vm),
+        interactions=n_new,
+    )
+    return state, choice, metrics
+
+
+def _observe_body(policy, col, state, key, user_ids, contexts, choices,
+                  rewards):
+    idx, own, valid, be = _request_masks(policy, col, state, user_ids)
+    x = jnp.take_along_axis(contexts, choices[:, None, None], axis=1)[:, 0]
+    state = _fold_feedback(policy, state, idx, own, valid, be, user_ids,
+                           x, rewards)
+    n_new = jnp.sum(valid.astype(jnp.int32))
+    return _schedule_refresh(policy, col, state, n_new, key)
+
+
+def _refresh_body(policy, col, state, key):
+    k_ref = jax.random.fold_in(key,
+                               col.psum(jnp.sum(policy.occ_of(state))))
+    state = policy.refresh(col, state, k_ref)
+    return state._replace(since_refresh=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# compiled-transaction cache (per policy / reward_fn / mesh)
+# ---------------------------------------------------------------------------
+
+
+def _bind_tx(policy, body, mesh, axes, out_extra=(), out_override=None):
+    """jit `body(col, state, *args)` — single-host with NullCollectives,
+    or shard_map'd over `mesh` with the policy's state specs (request
+    args and scalar/choice outputs replicated)."""
+    if mesh is None:
+        return jax.jit(functools.partial(body, _NULL))
+    col = lax_collectives(mesh, axes)
+    specs = policy.state_specs(axes)
+    bound = functools.partial(body, col)
+    if out_override is not None:
+        out_specs = out_override
+    elif out_extra:
+        out_specs = (specs,) + tuple(out_extra)
+    else:
+        out_specs = specs
+
+    def wrap(state, *args):
+        mapped = shard_map(
+            bound, mesh=mesh,
+            in_specs=(specs,) + tuple(P() for _ in args),
+            out_specs=out_specs,
+            check_rep=False,
+        )
+        return mapped(state, *args)
+
+    return jax.jit(wrap)
+
+
+@functools.lru_cache(maxsize=64)
+def _step_fn(policy, reward_fn, mesh, axes):
+    body = functools.partial(_step_body, policy, reward_fn)
+    return _bind_tx(policy, body, mesh, axes,
+                    out_extra=(P(), Metrics(P(), P(), P(), P())))
+
+
+@functools.lru_cache(maxsize=64)
+def _recommend_fn(policy, mesh, axes):
+    def body(col, state, user_ids, contexts):
+        choice, _, _ = _choose(policy, col, state, user_ids, contexts)
+        return choice
+    return _bind_tx(policy, body, mesh, axes, out_override=P())
+
+
+@functools.lru_cache(maxsize=64)
+def _observe_fn(policy, mesh, axes):
+    def body(col, state, key, user_ids, contexts, choices, rewards):
+        return _observe_body(policy, col, state, key, user_ids, contexts,
+                             choices, rewards)
+    return _bind_tx(policy, body, mesh, axes)
+
+
+@functools.lru_cache(maxsize=64)
+def _force_refresh_fn(policy, mesh, axes):
+    def body(col, state, key):
+        return _refresh_body(policy, col, state, key)
+    return _bind_tx(policy, body, mesh, axes)
+
+
+# ---------------------------------------------------------------------------
+# the session object + functional API
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineBandit:
+    """One serving session: a hashable policy (static) + its state
+    (pytree) + optional mesh binding.  Immutable — `step`/`observe`
+    return a new session wrapping the new state."""
+
+    policy: Any
+    state: Any
+    mesh: Any = None
+    axes: tuple = ()
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def create(cls, n_users: int, d: int, hyper: BanditHyper, *,
+               policy: str = "distclub", refresh_every: int = 0,
+               backend: str | None = None, interpret: bool | None = None,
+               block_users: int = 256) -> "OnlineBandit":
+        """Single-host session.  `refresh_every` is the interaction budget
+        between refreshes (stage-2 / gossip); <= 0 disables scheduling
+        (use `serve.refresh` to fire one manually)."""
+        cfg = pol.make_cfg(n_users, d, hyper, refresh_every=refresh_every,
+                           backend=backend, interpret=interpret,
+                           block_users=block_users)
+        p = pol.get_policy(policy, cfg)
+        return cls(policy=p, state=p.init())
+
+    @classmethod
+    def sharded(cls, mesh, n_users: int, d: int, hyper: BanditHyper, *,
+                axes: tuple[str, ...] | None = None,
+                policy: str = "distclub", refresh_every: int = 0,
+                backend: str | None = None, interpret: bool | None = None,
+                block_users: int = 256) -> "OnlineBandit":
+        """Serving replica set: per-user state sharded over `mesh` (users
+        on the flattened `axes`), request batches replicated, refresh on
+        the mesh collectives — the identical stage-2 code path as
+        `distributed.distclub_shard`."""
+        from ..distributed.distclub_shard import named_shardings
+
+        axes = tuple(axes) if axes is not None else tuple(mesh.axis_names)
+        cfg = pol.make_cfg(n_users, d, hyper, refresh_every=refresh_every,
+                           backend=backend, interpret=interpret,
+                           block_users=block_users)
+        p = pol.get_policy(policy, cfg)
+        shards = 1
+        for a in axes:
+            shards *= mesh.shape[a]
+        if n_users % shards:
+            raise ValueError(
+                f"the {shards}-way mesh must evenly divide n_users={n_users}")
+        state = jax.device_put(
+            p.init(), named_shardings(mesh, p.state_specs(axes)))
+        return cls(policy=p, state=state, mesh=mesh, axes=axes)
+
+    @classmethod
+    def from_offline(cls, state, hyper: BanditHyper, *,
+                     refresh_every: int = 0, backend: str | None = None,
+                     interpret: bool | None = None) -> "OnlineBandit":
+        """Warm-start a distclub serving session from an offline
+        `distclub.run` final state."""
+        n, d = state.lin.b.shape
+        cfg = pol.make_cfg(n, d, hyper, refresh_every=refresh_every,
+                           backend=backend, interpret=interpret)
+        p = pol.get_policy("distclub", cfg)
+        return cls(policy=p, state=pol.from_distclub_state(state))
+
+    # -- checkpointing -----------------------------------------------------
+    def _shardings(self):
+        if self.mesh is None:
+            return None
+        from ..distributed.distclub_shard import named_shardings
+        return named_shardings(self.mesh,
+                               self.policy.state_specs(self.axes))
+
+    def save(self, ckpt, step: int):
+        """Snapshot the policy state (atomic, keep-K — see
+        `train.checkpoint`)."""
+        return ckpt.save(self.state, step)
+
+    def restore(self, ckpt, step: int | None = None):
+        """(session, step) restored from `ckpt` (latest when `step` is
+        None; (self, None) when the directory is empty).  Re-shards onto
+        this session's mesh — a replica restarted on a different mesh
+        resumes from the same bytes."""
+        if step is None:
+            state, step = ckpt.restore_latest(self.state, self._shardings())
+            if state is None:
+                return self, None
+        else:
+            state = ckpt.restore(step, self.state, self._shardings())
+        return dataclasses.replace(self, state=state), step
+
+    # -- the transaction and its halves ------------------------------------
+    def step(self, key, user_ids, contexts, reward_fn):
+        return step(self, key, user_ids, contexts, reward_fn)
+
+    def recommend(self, user_ids, contexts):
+        return recommend(self, user_ids, contexts)
+
+    def observe(self, user_ids, contexts, choices, rewards, key=None):
+        return observe(self, user_ids, contexts, choices, rewards, key=key)
+
+    def refresh(self, key=None):
+        return refresh(self, key=key)
+
+
+def step(session: OnlineBandit, key, user_ids, contexts,
+         reward_fn: Callable):
+    """One jit-compiled serving transaction.
+
+    `user_ids [B] i32` (ids < 0 or >= n_users are ignored — padding),
+    `contexts [B, K, d]`, `reward_fn(key, user_ids, contexts, choices)`
+    returning realized rewards `[B]` or the full environment 4-tuple
+    `(realized, expected, best, rand)`.  Returns
+    `(session, choices [B], metrics)` — `metrics` rows for terms the
+    reward_fn didn't supply are zero.  `key` drives the reward draw
+    as-given (and, folded, the dccb gossip refresh)."""
+    fn = _step_fn(session.policy, reward_fn, session.mesh, session.axes)
+    state, choices, metrics = fn(session.state, key, user_ids, contexts)
+    return dataclasses.replace(session, state=state), choices, metrics
+
+
+def recommend(session: OnlineBandit, user_ids, contexts):
+    """The request half: choices `[B]` for a batch, no state change."""
+    fn = _recommend_fn(session.policy, session.mesh, session.axes)
+    return fn(session.state, user_ids, contexts)
+
+
+def observe(session: OnlineBandit, user_ids, contexts, choices, rewards,
+            key=None):
+    """The feedback half: fold a batch of (possibly duplicate-user)
+    rewards and run the refresh schedule.  `key` is only consumed by the
+    dccb gossip refresh (defaults to a fixed key)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    fn = _observe_fn(session.policy, session.mesh, session.axes)
+    state = fn(session.state, key, user_ids, contexts, choices, rewards)
+    return dataclasses.replace(session, state=state)
+
+
+def refresh(session: OnlineBandit, key=None):
+    """Force one refresh now (stage-2 for the clustered policies, a
+    gossip round for dccb, a no-op for linucb) and reset the budget."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    fn = _force_refresh_fn(session.policy, session.mesh, session.axes)
+    return dataclasses.replace(session, state=fn(session.state, key))
