@@ -1,0 +1,165 @@
+"""Bench-regression gate: modeled metrics vs checked-in baselines.
+
+Compares the fresh ``BENCH_*.json`` files at the repo root (written by
+``python -m benchmarks.run --quick``) against the quick-mode baselines
+checked in under ``benchmarks/baselines/`` and fails (exit 1) if any
+MODELED metric regressed more than ``--tolerance`` (default 10%).
+
+What is gated — and what deliberately is not:
+
+  * gated: analytic HBM-traffic / comm-volume metrics, the numbers the
+    engine PRs' acceptance criteria are written against.  By key name:
+    higher-is-better ``*ratio*`` / ``*reduction*`` / ``*cut*`` fields,
+    lower-is-better ``*bytes*`` / ``*words*`` fields.  These are pure
+    functions of shapes and the traffic model, so ANY drift is a real
+    change: either a regression in the engine's memory/comm contract or
+    an intentional model change — in which case refresh the baselines in
+    the same PR (re-run ``--quick`` and copy the JSONs) so the diff
+    reviews the new numbers.
+  * not gated: every wall-clock field (``*_us``, ``*_s``, ``req_per_s``)
+    — CI runners are far too noisy — plus shapes, flags and notes.
+
+A baseline key missing from the fresh file also fails: silently dropping
+a tracked metric is how regressions hide.  New keys in the fresh file
+are fine (benches grow).
+
+Usage (CI runs the default form after the quick benches):
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        [--baselines benchmarks/baselines] [--current .] [--tolerance 0.1]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+BASELINES = pathlib.Path(__file__).resolve().parent / "baselines"
+
+HIGHER_BETTER = ("ratio", "reduction", "cut")
+LOWER_BETTER = ("bytes", "words")
+
+
+def _direction(key: str) -> str | None:
+    k = key.lower()
+    if any(p in k for p in HIGHER_BETTER):
+        return "higher"
+    if any(p in k for p in LOWER_BETTER):
+        return "lower"
+    return None
+
+
+# fields that identify a benchmark row: list entries carrying any of
+# these are addressed by shape, not list position, so quick/full shape
+# lists (different lengths/orders at the same indices) line up on the
+# rows they share and reordering can never pair unrelated shapes
+_ID_KEYS = ("n", "n_users", "N_items", "batch", "d", "K", "K_short",
+            "policy", "backend")
+
+
+def _row_label(elem, i: int) -> str:
+    if isinstance(elem, dict):
+        ids = [f"{k}={elem[k]}" for k in _ID_KEYS if k in elem]
+        if ids:
+            return "[" + ",".join(ids) + "]"
+    return f"[{i}]"
+
+
+def _walk(obj, path=""):
+    """Yield (path, leaf) for every gated numeric leaf."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            yield from _walk(v, f"{path}/{k}")
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from _walk(v, path + _row_label(v, i))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        key = path.rsplit("/", 1)[-1]
+        if _direction(key) is not None:
+            yield path, float(obj)
+
+
+def _metrics(path: pathlib.Path) -> dict[str, float]:
+    """Gated (path -> value) map; duplicate paths are an error — two
+    rows collapsing to one label would silently un-gate each other."""
+    pairs = list(_walk(json.loads(path.read_text())))
+    seen: dict[str, float] = {}
+    for p, v in pairs:
+        if p in seen:
+            raise ValueError(
+                f"{path.name}{p}: duplicate metric path — rows share "
+                "identical identity fields (fix _ID_KEYS or the bench)")
+        seen[p] = v
+    return seen
+
+
+def check_file(baseline_path: pathlib.Path, current_path: pathlib.Path,
+               tolerance: float) -> list[str]:
+    problems = []
+    if not current_path.exists():
+        return [f"{current_path.name}: missing (did the bench run?)"]
+    try:
+        base = _metrics(baseline_path)
+        cur = _metrics(current_path)
+    except ValueError as e:
+        return [str(e)]
+    for path, b in sorted(base.items()):
+        if path not in cur:
+            # a baseline row the fresh file no longer has IS a failure —
+            # silently dropping a tracked metric is how regressions
+            # hide.  (Every bench keeps its quick shape list a SUBSET of
+            # the full list, so this never fires spuriously on a local
+            # full-mode run either.)
+            problems.append(
+                f"{current_path.name}{path}: gated metric disappeared "
+                f"(baseline {b:g})")
+            continue
+        c = cur[path]
+        key = path.rsplit("/", 1)[-1]
+        if _direction(key) == "higher":
+            bad = c < b * (1.0 - tolerance)
+        else:
+            bad = c > b * (1.0 + tolerance)
+        if bad:
+            problems.append(
+                f"{current_path.name}{path}: {c:g} vs baseline {b:g} "
+                f"({'-' if c < b else '+'}{abs(c / b - 1):.1%}, "
+                f"{_direction(key)}-is-better, tol {tolerance:.0%})")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baselines", type=pathlib.Path, default=BASELINES)
+    ap.add_argument("--current", type=pathlib.Path, default=ROOT)
+    ap.add_argument("--tolerance", type=float, default=0.10)
+    args = ap.parse_args(argv)
+
+    baselines = sorted(args.baselines.glob("BENCH_*.json"))
+    if not baselines:
+        print(f"no baselines under {args.baselines}", file=sys.stderr)
+        return 1
+    problems: list[str] = []
+    checked = 0
+    for bp in baselines:
+        file_problems = check_file(bp, args.current / bp.name,
+                                   args.tolerance)
+        problems += file_problems
+        n = len(list(_walk(json.loads(bp.read_text()))))
+        checked += n
+        status = "FAIL" if file_problems else "ok"
+        print(f"{bp.name}: {n} gated metrics — {status}")
+    if problems:
+        print(f"\n{len(problems)} modeled-metric regression(s):",
+              file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    print(f"all {checked} gated metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

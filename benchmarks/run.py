@@ -1,50 +1,72 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV; writes results/*.json consumed by
-EXPERIMENTS.md plus BENCH_interact.json / BENCH_graph.json at the repo root
-(the fused-engine and stage-2 graph-engine perf trajectories, tracked from
-PR 1 / PR 2 onward).
+EXPERIMENTS.md plus BENCH_interact.json / BENCH_graph.json /
+BENCH_drift.json / BENCH_serve.json / BENCH_retrieval.json at the repo
+root (the engine perf trajectories, tracked per PR).
 
 ``--quick`` runs the fused-interaction microbenchmark at reduced
 shapes/repeats, the stage-2 graph bench (full n sweep — its acceptance
 gates live at n=16k/64k — with trimmed repeats), the non-stationary
 drift scenario through the unified engine (single-host + 8-device
-sharded), and the online-serving transaction bench (fused vs reference,
-single-host + sharded); a few minutes on one CPU core, and still emits
-every BENCH_*.json, so CI can track the hot-path trends cheaply.
+sharded), the online-serving transaction bench, and the catalog-scale
+retrieval bench (streaming top-K incl. the 2**20-item reference row +
+8-device item-sharded transaction); a few minutes on one CPU core, and
+still emits every BENCH_*.json, so CI can track the hot-path trends
+cheaply and gate the modeled metrics (``benchmarks.check_regression``).
+
+Failure policy: every sub-benchmark runs even if an earlier one fails,
+but any failure makes the harness exit non-zero and name the culprits —
+CI's quick-bench step is a real gate, not best-effort.
 """
 from __future__ import annotations
 
 import argparse
+import importlib
+import sys
+import traceback
 
 
-def main(argv=None) -> None:
+def _bench_list(quick: bool):
+    # each module is imported lazily INSIDE its runner so an import-time
+    # error in one bench is reported/isolated like any other failure —
+    # the remaining benches still run
+    def runner(mod: str, **kw):
+        def call():
+            m = importlib.import_module(f".{mod}", __package__)
+            return m.main(**kw)
+        return call
+
+    names = ["bench_interact", "bench_graph", "bench_drift", "bench_serve",
+             "bench_retrieval"]
+    benches = [(n, runner(n, quick=quick)) for n in names]
+    if not quick:
+        benches += [(n, runner(n)) for n in
+                    ("bench_kernels", "bench_paper", "bench_scaling")]
+    return benches
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
-                    help="fused-interaction + graph + serve benches only, "
-                         "reduced shapes/repeats, a few minutes on one "
-                         "CPU core")
+                    help="engine benches only (interact/graph/drift/serve/"
+                         "retrieval), reduced shapes/repeats, a few "
+                         "minutes on one CPU core")
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
-    from . import bench_drift, bench_graph, bench_interact, bench_serve
-    if args.quick:
-        bench_interact.main(quick=True)
-        bench_graph.main(quick=True)
-        bench_drift.main(quick=True)
-        bench_serve.main(quick=True)
-        return
-    bench_interact.main()
-    bench_graph.main()
-    bench_drift.main()
-    bench_serve.main()
-    from . import bench_kernels
-    bench_kernels.main()
-    from . import bench_paper
-    bench_paper.main()
-    from . import bench_scaling
-    bench_scaling.main()
+    failures: list[str] = []
+    for name, fn in _bench_list(args.quick):
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"FAILED benchmarks: {', '.join(failures)}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

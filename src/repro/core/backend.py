@@ -1,10 +1,11 @@
-"""Backend dispatch for the fused interaction engine and the graph engine.
+"""Backend dispatch for the interaction, graph and retrieval engines.
 
 The bandit hot loop is two operations per round — *choose* (UCB scores →
 argmax → gather the chosen context) and *update* (rank-1 Sherman-Morrison
 on the per-user statistics); stage 2 is two graph sweeps — *prune* (CLUB
-edge deletion) and *CC hops* (min-label propagation).  This module selects
-between:
+edge deletion) and *CC hops* (min-label propagation); catalog serving adds
+*shortlist* (streaming UCB top-K over the item catalog).  This module
+selects between:
 
   ``reference``  the pure-jnp math in ``repro.core.linucb`` /
                  ``repro.kernels.graph.ref`` (CPU/GPU, and the numerical
@@ -43,6 +44,8 @@ from ..kernels.graph import ops as graph_ops
 from ..kernels.interact import ops as interact_ops
 from ..kernels.rank1 import ops as rank1_ops
 from ..kernels.rank1.ref import rank1_update_inv_ref
+from ..kernels.topk import ops as topk_ops
+from ..kernels.topk.ref import topk_ref
 from . import clustering, linucb
 from .types import LinUCBState
 
@@ -151,6 +154,18 @@ class InteractBackend(NamedTuple):
                                                   self.block_users)
         return self._replace(n=n, n_pad=n_pad, d_pad=d_pad, K_pad=K_pad,
                              block_users=bu)
+
+    def with_candidates(self, K: int) -> "InteractBackend":
+        """The same engine re-fit to a different slate width.  The
+        catalog serving path uses this to run the final fused choose over
+        a ``K_short`` shortlist with the session's run-level dispatch."""
+        if K == self.K:
+            return self
+        if self.kind == "reference":
+            return self._replace(K=K, K_pad=K)
+        n_pad, d_pad, K_pad, bu = pad.padded_dims(self.n, self.d, K,
+                                                  self.block_users)
+        return self._replace(K=K, n_pad=n_pad, K_pad=K_pad, block_users=bu)
 
     # ---- the two hot-loop operations ---------------------------------------
 
@@ -268,6 +283,79 @@ class GraphBackend(NamedTuple):
             collectives.NullCollectives(), self, adj, self.n_cols,
             row0=0, n_local=self.n_rows,
         )
+
+
+class RetrievalBackend(NamedTuple):
+    """Catalog-scale retrieval engine: streaming UCB top-K shortlists.
+
+    Scores a persistent ``[N_items, d]`` catalog for a batch of users
+    with the same M-free statistics the fused choose reads
+    (``theta . x + alpha sqrt(x' Minv x) sqrt(log1p(occ))``) and returns
+    each user's ``K_short`` best (scores + item ids) WITHOUT ever
+    materializing the ``[n, N_items]`` score matrix — the Pallas kernel
+    keeps the running shortlist in revisited VMEM output blocks across
+    item tiles, the jnp reference streams item tiles under ``lax.map`` /
+    ``lax.scan``.  Like the other engines this is a NamedTuple of Python
+    scalars, hashable and jit-static.
+
+    The item-sharded runtime builds ONE backend and calls it per shard
+    with that shard's catalog slice and ``row0_items = shard * n_local``;
+    selection is by (score, id) value, so per-shard shortlists merged by
+    the serving layer equal the single-host shortlist exactly (see
+    ``kernels/topk/ref.py``).
+    """
+
+    kind: str          # "reference" | "pallas"
+    d: int             # feature dim
+    K_short: int       # shortlist length per user
+    block_users: int   # pallas user block
+    block_items: int   # pallas item tile
+    row_block: int     # reference user-row blocking (lax.map tile)
+    item_block: int    # reference item tile (lax.scan step)
+    interpret: bool
+
+    def shortlist(self, w, Minv, occ, items, live, alpha, row0_items=0):
+        """(scores [n, K_short], ids [n, K_short] i32 GLOBAL item ids).
+
+        ``row0_items`` is the global id of the catalog slice's first row
+        (``axis_index * n_local`` on an item-sharded mesh).  Entries that
+        hold no live item (underfull catalog / all-retired tile) keep
+        score -inf and id -1.
+        """
+        if self.kind == "reference":
+            s, i = topk_ref(w, Minv, occ, items, live, alpha, self.K_short,
+                            row_block=self.row_block,
+                            item_block=self.item_block)
+        else:
+            s, i = topk_ops.topk(w, Minv, occ, items, live, alpha,
+                                 self.K_short, use_pallas=True,
+                                 block_users=self.block_users,
+                                 block_items=self.block_items,
+                                 interpret=self.interpret)
+        i = jnp.where(jnp.isfinite(s), i + row0_items, -1)
+        return s, i
+
+
+def get_retrieval_backend(
+    d: int,
+    K_short: int,
+    kind: str | None = None,
+    *,
+    block_users: int = 128,
+    block_items: int = 512,
+    row_block: int = 8,
+    item_block: int = 4096,
+    interpret: bool | None = None,
+) -> RetrievalBackend:
+    """Build the retrieval engine (selection mirrors ``get_backend``)."""
+    kind = resolve_kind(kind)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return RetrievalBackend(
+        kind=kind, d=d, K_short=K_short,
+        block_users=block_users, block_items=block_items,
+        row_block=row_block, item_block=item_block, interpret=interpret,
+    )
 
 
 def get_graph_backend(

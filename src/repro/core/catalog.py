@@ -1,0 +1,94 @@
+"""The persistent item catalog the retrieval engine serves against.
+
+A :class:`Catalog` is the item-side state the paper's user-side sharding
+never had: a fixed-capacity table of item embeddings plus a liveness
+mask.  Slots, not items, are the unit of storage — retiring an item just
+clears its ``live`` bit (the retrieval kernels score it -inf), and adding
+an item claims the lowest dead slot — so the array shapes (and therefore
+every compiled transaction touching the catalog) are stable across the
+add/retire churn of the drift scenario.
+
+Sharding: the catalog shards over the mesh on the ITEM axis (axis 0 of
+both arrays; ``specs``/``distributed.distclub_shard.named_shardings``).
+Inside ``shard_map`` each device holds rows
+``[axis_index * n_local, ...)`` and shortlists only those — the serving
+layer merges per-shard shortlists, so cross-device traffic is
+``O(B * K_short * shards)`` words instead of ``O(B * N_items)``.
+
+Pure-functional like everything else: mutators return a new Catalog.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+try:  # PartitionSpec only needed for the sharded binding
+    from jax.sharding import PartitionSpec as P
+except ImportError:  # pragma: no cover
+    P = None
+
+
+class Catalog(NamedTuple):
+    emb: jnp.ndarray    # [capacity, d] f32 embeddings (dead slots: zeros)
+    live: jnp.ndarray   # [capacity] f32 liveness (1 = servable)
+
+    @property
+    def capacity(self) -> int:
+        return self.live.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.emb.shape[1]
+
+    def n_live(self) -> jnp.ndarray:
+        return jnp.sum(self.live).astype(jnp.int32)
+
+
+def make_catalog(emb: jnp.ndarray, capacity: int | None = None) -> Catalog:
+    """Catalog over ``emb [N, d]`` (all live), with ``capacity - N``
+    spare dead slots for future ``add_items``."""
+    N, d = emb.shape
+    capacity = N if capacity is None else capacity
+    if capacity < N:
+        raise ValueError(f"capacity {capacity} < {N} items")
+    full = jnp.zeros((capacity, d), jnp.float32).at[:N].set(emb)
+    live = jnp.zeros((capacity,), jnp.float32).at[:N].set(1.0)
+    return Catalog(emb=full, live=live)
+
+
+def random_catalog(key: jax.Array, n_items: int, d: int,
+                   capacity: int | None = None) -> Catalog:
+    """Unit-norm random embeddings — benchmark/test construction."""
+    e = jax.random.normal(key, (n_items, d))
+    e = e / jnp.linalg.norm(e, axis=-1, keepdims=True)
+    return make_catalog(e, capacity=capacity)
+
+
+def retire_items(cat: Catalog, ids: jnp.ndarray) -> Catalog:
+    """Clear the liveness bit of ``ids`` (negative ids are ignored —
+    padding, so callers can retire ragged batches)."""
+    tgt = jnp.where(ids >= 0, ids, cat.capacity)
+    return cat._replace(live=cat.live.at[tgt].set(0.0, mode="drop"))
+
+
+def add_items(cat: Catalog, emb_new: jnp.ndarray
+              ) -> tuple[Catalog, jnp.ndarray]:
+    """Place ``emb_new [m, d]`` into the ``m`` lowest dead slots;
+    returns ``(catalog, slot_ids [m])``.  If fewer than ``m`` slots are
+    dead the remainder OVERWRITES live slots starting from the lowest id
+    (the stable ascending sort lists dead slots id-order first, then
+    live slots id-order) — capacity management is the caller's job."""
+    m = emb_new.shape[0]
+    # stable ascending sort of the 0/1 mask: dead slots first, id order
+    slots = jnp.argsort(cat.live, stable=True)[:m].astype(jnp.int32)
+    return cat._replace(
+        emb=cat.emb.at[slots].set(emb_new.astype(jnp.float32)),
+        live=cat.live.at[slots].set(1.0),
+    ), slots
+
+
+def specs(axes) -> Catalog:
+    """PartitionSpecs for an item-axis sharding over mesh ``axes``."""
+    return Catalog(emb=P(axes), live=P(axes))

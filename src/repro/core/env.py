@@ -21,6 +21,13 @@ Three kinds, all pure-functional and PRNG-driven so they compose with scan:
   user has a queue of logged candidate sets.  Per-user queues preserve the
   paper's per-user interaction ordering under batched rounds.
 
+* ``CatalogEnv`` — the item-side scale scenario: a FIXED catalog of
+  ``n_items`` embeddings drawn from region centroids (the item-axis mirror
+  of the planted user clusters), against which the retrieval engine serves
+  its two-stage shortlist -> choose path.  Item drift mirrors ``DriftEnv``
+  on the item side: the region centroids re-draw per phase, so "content
+  popularity" moves while the user preferences stay put.
+
 All are wrapped into the shard-aware ``EnvOps`` protocol by
 ``repro.core.env_ops``.
 """
@@ -132,6 +139,93 @@ def drift_theta(env: DriftEnv, occ: jnp.ndarray, row0=0) -> jnp.ndarray:
     phase = jnp.clip(occ // env.drift_period, 0, env.n_phases - 1)
     theta = env.centroids[phase, labels] + noise
     return theta / jnp.linalg.norm(theta, axis=-1, keepdims=True)
+
+
+class CatalogEnv(NamedTuple):
+    """Fixed-catalog environment (the retrieval engine's workload).
+
+    Users keep the planted-cluster hidden preferences of ``SyntheticEnv``;
+    items are persistent: item ``i`` lives in region ``item_region[i]``
+    and its embedding at phase ``p`` is
+
+        normalize(region_centroids[p, item_region[i]] + item_noise[i])
+
+    With ``drift_period > 0`` a user at interaction count ``occ`` sees
+    phase ``min(occ // drift_period, P-1)`` — centroid re-draw over
+    catalog regions, the item-side mirror of ``DriftEnv`` (and like it, a
+    pure function of ``(occ, user, item)``, so any sharding of users or
+    items reproduces identical draws).  ``drift_period == 0`` pins
+    phase 0: one static catalog, the pure scale scenario.
+    """
+
+    theta: jnp.ndarray             # [n_users, d] hidden user preferences
+    region_centroids: jnp.ndarray  # [n_phases, n_regions, d] unit rows
+    item_region: jnp.ndarray       # [n_items] i32
+    item_noise: jnp.ndarray        # [n_items, d]
+    drift_period: int
+    n_candidates: int
+
+    @property
+    def n_users(self) -> int:
+        return self.theta.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.theta.shape[1]
+
+    @property
+    def n_items(self) -> int:
+        return self.item_region.shape[0]
+
+    @property
+    def n_phases(self) -> int:
+        return self.region_centroids.shape[0]
+
+
+def make_catalog_env(
+    key: jax.Array,
+    n_users: int,
+    d: int,
+    n_clusters: int,
+    n_items: int,
+    n_regions: int | None = None,
+    n_candidates: int = 20,
+    drift_period: int = 0,
+    n_phases: int = 1,
+    within_cluster_noise: float = 0.05,
+    item_noise_scale: float = 0.05,
+) -> tuple[CatalogEnv, jnp.ndarray]:
+    """Planted users + region-structured item catalog; returns
+    ``(env, true_user_labels)``."""
+    if n_regions is None:
+        n_regions = n_clusters
+    k_u, k_rc, k_ir, k_in = jax.random.split(key, 4)
+    user_env, labels = make_synthetic_env(
+        k_u, n_users, d, n_clusters, n_candidates=n_candidates,
+        within_cluster_noise=within_cluster_noise)
+    centroids = jax.random.normal(k_rc, (n_phases, n_regions, d))
+    centroids /= jnp.linalg.norm(centroids, axis=-1, keepdims=True)
+    region = jax.random.randint(k_ir, (n_items,), 0, n_regions)
+    noise = item_noise_scale * jax.random.normal(k_in, (n_items, d))
+    return CatalogEnv(
+        theta=user_env.theta, region_centroids=centroids,
+        item_region=region, item_noise=noise,
+        drift_period=drift_period, n_candidates=n_candidates,
+    ), labels
+
+
+def catalog_embeddings(env: CatalogEnv, phase: int = 0) -> jnp.ndarray:
+    """The full ``[n_items, d]`` unit-norm catalog at ``phase`` —
+    materialize once into a ``core.catalog.Catalog`` for serving."""
+    e = env.region_centroids[phase, env.item_region] + env.item_noise
+    return e / jnp.linalg.norm(e, axis=-1, keepdims=True)
+
+
+def catalog_phase(env: CatalogEnv, occ: jnp.ndarray) -> jnp.ndarray:
+    """Per-user drift phase from the per-user interaction count."""
+    if env.drift_period <= 0:
+        return jnp.zeros(occ.shape, jnp.int32)
+    return jnp.clip(occ // env.drift_period, 0, env.n_phases - 1)
 
 
 def sample_contexts(key: jax.Array, shape_prefix, K: int, d: int) -> jnp.ndarray:

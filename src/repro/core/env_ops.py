@@ -97,6 +97,38 @@ def drift_ops(env: synth_env.DriftEnv) -> EnvOps:
     return EnvOps(contexts_fn, rewards_fn, n, d, K)
 
 
+def catalog_ops(env: synth_env.CatalogEnv) -> EnvOps:
+    """Fixed-catalog scenario for the OFFLINE drivers: each round's slate
+    is ``K`` items drawn (keyed per global user id) from the persistent
+    catalog instead of fresh Gaussian contexts, at the per-user drift
+    phase — so stage 1/3 learn against the same item population the
+    retrieval engine serves, under any sharding.  (The serving-side
+    two-stage path reads the catalog directly via
+    ``serve.step_catalog``; this adapter is for ``distclub.run`` & co.)
+    """
+    n, d, K = env.n_users, env.d, env.n_candidates
+    N = env.n_items
+    theta = env.theta
+
+    def _slate(key, occ, row0):
+        keys = _user_keys(key, occ.shape[0], row0)
+        ids = jax.vmap(lambda k: jax.random.randint(k, (K,), 0, N))(keys)
+        phase = synth_env.catalog_phase(env, occ)                # [n_local]
+        e = (env.region_centroids[phase[:, None], env.item_region[ids]]
+             + env.item_noise[ids])
+        return e / jnp.linalg.norm(e, axis=-1, keepdims=True)
+
+    def contexts_fn(key, occ, row0=0):
+        return _slate(key, occ, row0)
+
+    def rewards_fn(key, occ, contexts, choice, row0=0):
+        th = jax.lax.dynamic_slice_in_dim(theta, row0, occ.shape[0])
+        p_all = synth_env.expected_reward(th[:, None, :], contexts)
+        return _bernoulli_metrics(key, p_all, choice, contexts.dtype, row0)
+
+    return EnvOps(contexts_fn, rewards_fn, n, d, K)
+
+
 def replay_ops(
     item_feats: jnp.ndarray,     # [n_items, d]
     cand_ids: jnp.ndarray,       # [n_users, max_t, K] candidate item ids (pad=0)

@@ -20,6 +20,11 @@ its pick (Bernoulli in the item-user affinity).
   kind="drift"      the non-stationary scenario: cluster centroids
                     re-draw periodically ("content popularity can change
                     rapidly"), via ``drift_ops``.
+  kind="catalog"    the item-side scale scenario: slates drawn from a
+                    PERSISTENT region-structured item catalog (the same
+                    population the retrieval engine serves two-stage),
+                    via ``catalog_ops``; pass ``drift_period`` for
+                    centroid re-draw over the catalog regions.
 
 Every kind returns a shard-aware ``EnvOps``, so all scenarios run under
 both the single-host and the ``shard_map`` runtimes.
@@ -35,7 +40,7 @@ import math
 import jax
 
 from ..core import env as core_env
-from ..core.env_ops import EnvOps, drift_ops, synthetic_ops
+from ..core.env_ops import EnvOps, catalog_ops, drift_ops, synthetic_ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,15 +72,26 @@ PAPER_DATASETS = {
 # the ``min(occ, max_t - 1)`` cursor semantics of ``replay_ops``.
 _REPLAY_MAX_T = 128
 
+# default persistent-catalog size for kind="catalog" offline runs — big
+# enough that per-round slates rarely repeat, small enough that the
+# [n_phases, n_regions, d] + [n_items, d] tables stay trivial; serving
+# benchmarks build catalogs up to 2**20 items via make_catalog_env
+_CATALOG_ITEMS = 4096
+
 
 def make_env(spec: DatasetSpec, seed: int = 0, kind: str = "synthetic",
-             drift_period: int | None = None) -> tuple[EnvOps, jax.Array]:
+             drift_period: int | None = None,
+             n_items: int | None = None) -> tuple[EnvOps, jax.Array]:
     """(EnvOps, true_labels) for a stat-matched clone of ``spec``.
 
     ``kind`` selects the protocol (see module docstring): "synthetic"
-    simulates, "replay" materializes and serves actual logged tables, and
+    simulates, "replay" materializes and serves actual logged tables,
     "drift" re-draws the planted centroids every ``drift_period``
-    interactions (default: 4 phases across the spec's per-user budget).
+    interactions (default: 4 phases across the spec's per-user budget),
+    and "catalog" draws slates from a persistent ``n_items`` catalog
+    (default ``_CATALOG_ITEMS``; ``drift_period`` re-draws its region
+    centroids).  Catalog-kind serving sessions materialize the same
+    catalog via ``core.env.make_catalog_env``/``catalog_embeddings``.
     """
     if kind == "synthetic":
         env, labels = core_env.make_synthetic_env(
@@ -106,7 +122,23 @@ def make_env(spec: DatasetSpec, seed: int = 0, kind: str = "synthetic",
             within_cluster_noise=0.05,
         )
         return drift_ops(env), labels
-    raise ValueError(f"unknown env kind {kind!r}; want synthetic|replay|drift")
+    if kind == "catalog":
+        period = drift_period or 0        # no drift unless asked (static
+        #                                   catalog is the scale scenario)
+        env, labels = core_env.make_catalog_env(
+            jax.random.PRNGKey(seed),
+            n_users=spec.n_users,
+            d=spec.d,
+            n_clusters=spec.n_clusters,
+            n_items=n_items or _CATALOG_ITEMS,
+            n_candidates=spec.n_candidates,
+            drift_period=period,
+            n_phases=4 if period else 1,
+            within_cluster_noise=0.05,
+        )
+        return catalog_ops(env), labels
+    raise ValueError(
+        f"unknown env kind {kind!r}; want synthetic|replay|drift|catalog")
 
 
 def epochs_for(spec: DatasetSpec, hyper) -> int:

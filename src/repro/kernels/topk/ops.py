@@ -1,0 +1,70 @@
+"""Public entry point for the streaming top-K: pads, dispatches, unpads.
+
+Padding policy follows ``kernels/pad``: users to the block multiple, the
+feature dim to the f32 sublane multiple (zero columns — exact for both
+the estimate and the quadratic form), and the catalog to the item-tile
+multiple with ``live = 0`` so padded rows score -inf and behave exactly
+like retired items.  Padded *users* get zero statistics and are sliced
+off.  Item padding cannot perturb real rows' shortlists: selection is by
+(score, id) value (``ref.select_topk``), and a -inf pad entry only ever
+fills a slot no live item claims.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..pad import SUB, round_up, user_block
+from .ref import topk_ref
+from .topk import topk_pallas
+
+
+def topk(
+    w: jnp.ndarray,        # [n, d]
+    Minv: jnp.ndarray,     # [n, d, d]
+    occ: jnp.ndarray,      # [n] i32
+    items: jnp.ndarray,    # [N, d]
+    live: jnp.ndarray,     # [N] f32/bool
+    alpha: float,
+    k_short: int,
+    *,
+    use_pallas: bool | None = None,
+    block_users: int = 128,
+    block_items: int = 512,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(scores [n, k_short], ids [n, k_short]).  Pallas on TPU, jnp
+    oracle elsewhere; ids of dead/underfull entries are whatever the
+    selection produced — callers wanting a sentinel mask on
+    ``isfinite(scores)`` (``core.backend.RetrievalBackend`` does)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return topk_ref(w, Minv, occ, items, live, alpha, k_short)
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, d = w.shape
+    N = items.shape[0]
+    n_pad, bu = user_block(n, block_users)
+    d_pad = round_up(d, SUB)
+    bt = min(block_items, round_up(N, SUB))
+    N_pad = round_up(N, bt)
+
+    if (n, d, N) == (n_pad, d_pad, N_pad):
+        wp, Mp, op = w, Minv, occ
+        ip, lp = items, live.astype(jnp.float32)
+    else:
+        wp = jnp.zeros((n_pad, d_pad), jnp.float32).at[:n, :d].set(w)
+        Mp = jnp.zeros((n_pad, d_pad, d_pad), jnp.float32
+                       ).at[:n, :d, :d].set(Minv)
+        op = jnp.zeros((n_pad,), occ.dtype).at[:n].set(occ)
+        ip = jnp.zeros((N_pad, d_pad), jnp.float32).at[:N, :d].set(items)
+        lp = jnp.zeros((N_pad,), jnp.float32
+                       ).at[:N].set(live.astype(jnp.float32))
+
+    scores, ids = topk_pallas(
+        wp, Mp, op, ip, lp, alpha, k_short,
+        block_users=bu, block_items=bt, interpret=interpret,
+    )
+    return scores[:n], ids[:n]

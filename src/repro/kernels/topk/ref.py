@@ -1,0 +1,134 @@
+"""Row-blocked jnp oracle for the streaming UCB top-K retrieval kernel.
+
+Semantics (shared with the Pallas kernel via :func:`select_topk`):
+
+    score[u, i] = x_i . w_u + alpha sqrt(x_i' Minv_u x_i) sqrt(log1p(occ_u))
+    shortlist_u = the ``k_short`` items with the largest scores, ordered by
+                  (score desc, item id asc); dead items (``live == 0``)
+                  score -inf and can only fill an underfull shortlist.
+
+This is the same UCB the fused choose kernel computes over a per-round
+slate — retrieval is "choose" with the catalog as the slate — so a
+two-stage recommend (shortlist -> choose) degenerates to the direct-slate
+path when the catalog fits in one slate.
+
+The oracle never materializes the ``[n, N_items]`` score matrix either:
+users are processed in ``row_block`` groups via ``lax.map`` and items in
+``item_block`` tiles via ``lax.scan``, carrying a running
+``[row_block, k_short]`` shortlist — ``N_items = 2**20`` runs on one CPU
+core in a few seconds (see ``benchmarks/bench_retrieval.py``).
+
+Tiling invariance (load-bearing for every parity claim): each item's
+score contracts only over the feature dim, so its bits do not depend on
+the tile partition, and :func:`select_topk` selects by *value*
+``(score, id)`` — therefore reference/pallas, any block sizes, and the
+per-shard + merge path of the item-sharded catalog all produce the
+identical shortlist.
+
+The quadratic form is computed as ``vec(Minv) . vec(x x')`` — one
+``[rows, d^2] x [d^2, tile]`` contraction — matching the Pallas kernel's
+MXU formulation bit for bit in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+NEG_INF = -jnp.inf
+
+
+def select_topk(buf_s: jnp.ndarray, buf_i: jnp.ndarray, k: int):
+    """Top-``k`` of each row of ``(buf_s [n, W], buf_i [n, W])`` by
+    (score desc, id asc) — repeated (max score, min id) selection, so the
+    result depends only on the (score, id) value multiset, never on the
+    buffer order.  Returns ``(scores [n, k], ids [n, k])`` sorted the
+    same way.  Shared verbatim by the oracle and the Pallas kernel."""
+    n = buf_s.shape[0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (n, k), 1)
+
+    def step(j, carry):
+        buf, out_s, out_i = carry
+        m = jnp.max(buf, axis=1)                           # [n]
+        tied = buf == m[:, None]
+        sel = jnp.min(jnp.where(tied, buf_i, INT_MAX), axis=1)
+        buf = jnp.where(tied & (buf_i == sel[:, None]), NEG_INF, buf)
+        put = cols == j
+        out_s = jnp.where(put, m[:, None], out_s)
+        out_i = jnp.where(put, sel[:, None], out_i)
+        return buf, out_s, out_i
+
+    init = (buf_s,
+            jnp.full((n, k), NEG_INF, jnp.float32),
+            jnp.full((n, k), -1, jnp.int32))
+    _, out_s, out_i = jax.lax.fori_loop(0, k, step, init)
+    return out_s, out_i
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("k_short", "row_block",
+                                             "item_block"))
+def topk_ref(
+    w: jnp.ndarray,        # [n, d] user score vectors
+    Minv: jnp.ndarray,     # [n, d, d]
+    occ: jnp.ndarray,      # [n] i32
+    items: jnp.ndarray,    # [N, d] catalog embeddings
+    live: jnp.ndarray,     # [N] f32/bool liveness (0 = retired)
+    alpha: float,
+    k_short: int,
+    *,
+    row_block: int = 8,
+    item_block: int = 4096,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(scores [n, k_short], ids [n, k_short] i32; dead/pad entries keep
+    score -inf — the caller maps them to id -1)."""
+    n, d = w.shape
+    N = items.shape[0]
+    ib = min(item_block, _round_up(N, 8))
+    Np = _round_up(N, ib)
+    rb = min(row_block, n)
+    npad = _round_up(n, rb)
+
+    items_p = jnp.pad(items.astype(jnp.float32), ((0, Np - N), (0, 0)))
+    live_p = jnp.pad(live.astype(jnp.float32), (0, Np - N))
+    mf = jnp.pad(Minv.reshape(n, d * d), ((0, npad - n), (0, 0)))
+    w_p = jnp.pad(w, ((0, npad - n), (0, 0)))
+    widen = jnp.pad(jnp.sqrt(jnp.log1p(occ.astype(jnp.float32))),
+                    (0, npad - n))
+    tiles = Np // ib
+
+    def block_fn(blk):
+        w_b, mf_b, f_b = blk                     # [rb, d], [rb, d^2], [rb]
+
+        def tile_step(carry, t):
+            run_s, run_i = carry
+            x = jax.lax.dynamic_slice_in_dim(items_p, t * ib, ib)
+            lv = jax.lax.dynamic_slice_in_dim(live_p, t * ib, ib)
+            G = (x[:, None, :] * x[:, :, None]).reshape(ib, d * d)
+            est = w_b @ x.T                                     # [rb, ib]
+            quad = mf_b @ G.T                                   # [rb, ib]
+            s = est + alpha * jnp.sqrt(jnp.maximum(quad, 0.0)) * f_b[:, None]
+            s = jnp.where(lv[None, :] > 0, s, NEG_INF)
+            ids = t * ib + jnp.arange(ib, dtype=jnp.int32)
+            buf_s = jnp.concatenate([run_s, s], axis=1)
+            buf_i = jnp.concatenate(
+                [run_i, jnp.broadcast_to(ids[None], (rb, ib))], axis=1)
+            return select_topk(buf_s, buf_i, k_short), None
+
+        init = (jnp.full((rb, k_short), NEG_INF, jnp.float32),
+                jnp.full((rb, k_short), -1, jnp.int32))
+        (out_s, out_i), _ = jax.lax.scan(
+            tile_step, init, jnp.arange(tiles, dtype=jnp.int32))
+        return out_s, out_i
+
+    blocks = (w_p.reshape(npad // rb, rb, d),
+              mf.reshape(npad // rb, rb, d * d),
+              widen.reshape(npad // rb, rb))
+    out_s, out_i = jax.lax.map(block_fn, blocks)
+    return (out_s.reshape(npad, k_short)[:n],
+            out_i.reshape(npad, k_short)[:n])

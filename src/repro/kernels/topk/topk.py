@@ -1,0 +1,132 @@
+"""Streaming UCB top-K Pallas kernel — catalog-scale retrieval.
+
+One grid column serves a *block of users* against the whole item catalog:
+the grid is ``(n / Bu, N / Bt)`` with the item axis innermost, so each
+step streams one ``[Bt, d]`` catalog tile into VMEM, scores it for the
+user block, and folds it into a running ``[Bu, k_short]`` shortlist held
+in the (revisited) output blocks — exactly the ``cc_hop`` revisit pattern
+of the graph engine.  The payoff is the whole point of the retrieval
+engine: the ``[n, N_items]`` score matrix is never formed anywhere — not
+in HBM, not even in VMEM — so serving against ``N_items ~ 2**20`` costs
+the catalog stream (amortized over the user block) plus ``O(k_short)``
+words of output per user instead of ``O(N_items)``.
+
+Per tile the kernel computes
+
+    est  = w @ x'                     [Bu, Bt]   (MXU)
+    quad = vec(Minv) @ vec(x x')'     [Bu, Bt]   (MXU, d^2 contraction)
+    s    = est + alpha sqrt(max(quad, 0)) sqrt(log1p(occ))   (VPU)
+
+— the identical UCB the fused choose kernel scores a slate with, so the
+two-stage recommend path re-ranks the shortlist with the same statistics
+it was selected by.  Dead items (``live == 0``) and tile padding score
+-inf.  The running shortlist is merged with the tile by
+``ref.select_topk`` — repeated (max score, min id) selection, value-based
+and therefore invariant to tile order/size — which the jnp oracle uses
+verbatim; see ``ref.py`` for why that makes reference/pallas/sharded
+shortlists identical.
+
+VMEM per step (f32 words, defaults Bu=128, Bt=512, d<=32): Gram tile
+``Bt d^2`` (2 MiB at d=32) + ``Minv`` ``Bu d^2`` (0.5 MiB) + score/merge
+buffers ``~4 Bu (k_short + Bt)`` (~1.2 MiB at k_short=64) — well under
+the 16 MiB budget.  The d^2 contraction is the LinUCB confidence width's
+inherent cost; there is no [Bu, d, Bt] intermediate.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF, select_topk
+
+
+def _topk_kernel(w_ref, minv_ref, occ_ref, items_ref, live_ref, scal_ref,
+                 sc_ref, id_ref, *, k_short: int):
+    t = pl.program_id(1)
+    w = w_ref[...]                     # [Bu, d]
+    minv = minv_ref[...]               # [Bu, d, d]
+    occ = occ_ref[...]                 # [Bu]
+    x = items_ref[...]                 # [Bt, d]
+    live = live_ref[...]               # [Bt]
+    alpha = scal_ref[0]
+    bu, d = w.shape
+    bt = x.shape[0]
+
+    est = jax.lax.dot_general(
+        w, x,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                   # [Bu, Bt]
+    G = (x[:, None, :] * x[:, :, None]).reshape(bt, d * d)
+    quad = jax.lax.dot_general(
+        minv.reshape(bu, d * d), G,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                   # [Bu, Bt]
+    widen = jnp.sqrt(jnp.log1p(occ.astype(jnp.float32)))
+    s = est + alpha * jnp.sqrt(jnp.maximum(quad, 0.0)) * widen[:, None]
+    s = jnp.where(live[None, :] > 0, s, NEG_INF)
+    ids = t * bt + jax.lax.broadcasted_iota(jnp.int32, (bu, bt), 1)
+
+    @pl.when(t == 0)
+    def _():
+        sc_ref[...] = jnp.full((bu, k_short), NEG_INF, jnp.float32)
+        id_ref[...] = jnp.full((bu, k_short), -1, jnp.int32)
+
+    buf_s = jnp.concatenate([sc_ref[...], s], axis=1)
+    buf_i = jnp.concatenate([id_ref[...], ids], axis=1)
+    out_s, out_i = select_topk(buf_s, buf_i, k_short)
+    sc_ref[...] = out_s
+    id_ref[...] = out_i
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k_short", "block_users", "block_items",
+                                    "interpret"))
+def topk_pallas(
+    w: jnp.ndarray,        # [n, d]    (n % block_users == 0; pad in ops.py)
+    Minv: jnp.ndarray,     # [n, d, d]
+    occ: jnp.ndarray,      # [n] i32
+    items: jnp.ndarray,    # [N, d]    (N % block_items == 0)
+    live: jnp.ndarray,     # [N] f32   (0 = retired/padding -> -inf)
+    alpha: float,
+    k_short: int,
+    *,
+    block_users: int = 128,
+    block_items: int = 512,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(scores [n, k_short], ids [n, k_short] i32) — the [n, N] score
+    matrix never exists; the running shortlist lives in revisited output
+    blocks across the item-tile grid axis."""
+    n, d = w.shape
+    N = items.shape[0]
+    assert n % block_users == 0, (n, block_users)
+    assert N % block_items == 0, (N, block_items)
+    grid = (n // block_users, N // block_items)
+    scal = jnp.array([alpha], jnp.float32)
+
+    return pl.pallas_call(
+        functools.partial(_topk_kernel, k_short=k_short),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_users, d), lambda i, t: (i, 0)),
+            pl.BlockSpec((block_users, d, d), lambda i, t: (i, 0, 0)),
+            pl.BlockSpec((block_users,), lambda i, t: (i,)),
+            pl.BlockSpec((block_items, d), lambda i, t: (t, 0)),
+            pl.BlockSpec((block_items,), lambda i, t: (t,)),
+            pl.BlockSpec((1,), lambda i, t: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_users, k_short), lambda i, t: (i, 0)),
+            pl.BlockSpec((block_users, k_short), lambda i, t: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k_short), jnp.float32),
+            jax.ShapeDtypeStruct((n, k_short), jnp.int32),
+        ],
+        interpret=interpret,
+    )(w, Minv, occ, items, live, scal)

@@ -21,20 +21,35 @@ four bandits, head-to-head on the identical serving surface (see
 transaction over a device mesh; ``session.save``/``session.restore``
 round-trip through ``train.checkpoint.CheckpointManager``.
 
+Catalog-scale retrieval (README "Catalog-scale retrieval"): when the
+item side outgrows caller-supplied slates, serve against a persistent
+``Catalog`` — the streaming top-K engine shortlists each user's
+``k_short`` highest-UCB items per item shard and the fused choose ranks
+the shortlist, never materializing ``[B, N_items]`` scores::
+
+    cat = serve.make_catalog(item_embeddings)        # or random_catalog
+    session, item_ids, metrics = serve.step_catalog(
+        session, key, user_ids, cat, reward_fn, k_short=64)
+    item_ids, slots, ctx = serve.recommend_catalog(session, user_ids, cat)
+
 The old ``serve.bandit_service`` NamedTuple API is deprecated; a shim
 remains (README "Online serving API" has the migration notes).
 """
+from ..core.catalog import (Catalog, add_items, make_catalog,
+                            random_catalog, retire_items)
 from .policies import (POLICIES, ClusteredPolicy, ClusteredState,
                        DCCBPolicy, DCCBServeState, LinUCBPolicy,
                        LinUCBServeState, ServeCfg, from_distclub_state,
                        get_policy, make_cfg, to_distclub_state)
 from .session import (OnlineBandit, embed_candidates, observe, recommend,
-                      refresh, step)
+                      recommend_catalog, refresh, step, step_catalog)
 
 __all__ = [
-    "POLICIES", "ClusteredPolicy", "ClusteredState", "DCCBPolicy",
-    "DCCBServeState", "LinUCBPolicy", "LinUCBServeState", "OnlineBandit",
-    "ServeCfg", "embed_candidates", "from_distclub_state", "get_policy",
-    "make_cfg", "observe", "recommend", "refresh", "step",
+    "Catalog", "POLICIES", "ClusteredPolicy", "ClusteredState",
+    "DCCBPolicy", "DCCBServeState", "LinUCBPolicy", "LinUCBServeState",
+    "OnlineBandit", "ServeCfg", "add_items", "embed_candidates",
+    "from_distclub_state", "get_policy", "make_catalog", "make_cfg",
+    "observe", "random_catalog", "recommend", "recommend_catalog",
+    "refresh", "retire_items", "step", "step_catalog",
     "to_distclub_state",
 ]

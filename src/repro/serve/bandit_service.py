@@ -34,11 +34,23 @@ from . import policies, session as _session
 embed_candidates = _session.embed_candidates
 
 
+# emit the deprecation exactly once per process: the shim sits in
+# request/feedback hot loops, so a per-call warning floods serving logs
+# (and per-call `warnings` bookkeeping isn't free).  Tests reset this
+# module-level guard to re-arm the warning.
+_warned = False
+
+
 def _deprecated(name: str):
+    global _warned
+    if _warned:
+        return
+    _warned = True
     warnings.warn(
-        f"repro.serve.bandit_service.{name} is deprecated; use the "
-        "repro.serve.OnlineBandit session API (README: Online serving "
-        "API / migration notes)",
+        f"repro.serve.bandit_service.{name} is deprecated (first use; "
+        "further uses won't warn): migrate to the repro.serve session "
+        "API — serve.OnlineBandit.create / serve.step (README: Online "
+        "serving API / migration notes)",
         DeprecationWarning, stacklevel=3,
     )
 

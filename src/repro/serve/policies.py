@@ -30,6 +30,14 @@ the fused engine, and dccb reuses ``core.dccb.lagged_score`` /
 | `linucb`   | own stats always                 | none                       |
 | `dccb`     | lagged buffered stats            | one gossip round           |
 
+``gather_score`` doubles as the CATALOG-RETRIEVAL statistics hook: the
+``(w, minv_eff, occ)`` rows it returns are exactly what the streaming
+top-K engine scores the item catalog with (``serve.step_catalog``), so
+every policy serves two-stage against a ``core.catalog.Catalog`` with no
+policy-specific retrieval code — the shortlist is ranked by the same
+mixed statistics the fused choose would score a caller-supplied slate
+with.
+
 The clustered policies adopt the engine's FROZEN-snapshot semantics: the
 per-user cluster statistics (``uMcinv``/``ubc``/``umean_occ``) are taken
 at refresh time and held constant until the next refresh — exactly what

@@ -22,6 +22,15 @@ the sequential per-interaction fold.  Distinct-user batches take exactly
 one pass — the common fast path costs one fused update, and matches the
 offline `runtime.stages.interaction_rounds` update bit for bit.
 
+Catalog-scale retrieval: `step_catalog`/`recommend_catalog` serve the
+same transaction against a persistent `core.catalog.Catalog` instead of
+a caller-supplied slate — the streaming top-K engine
+(`core.backend.RetrievalBackend`, `kernels/topk`) shortlists each user's
+`k_short` highest-UCB live items (per item shard on a sharded session,
+merged by (score desc, id asc) — bit-equal to a single-host shortlist)
+and the fused choose ranks the shortlist.  The `[B, N_items]` score
+matrix never exists; comm on a sharded session is O(B k_short shards).
+
 Sharding: `OnlineBandit.sharded(mesh, ...)` binds the SAME step body to
 `LaxCollectives` under `shard_map` — per-user state rows are sharded over
 the mesh, the request batch is replicated, each shard scores/updates the
@@ -52,7 +61,10 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from ..core import catalog as catalog_mod
+from ..core.backend import get_retrieval_backend
 from ..core.types import BanditHyper, Metrics
+from ..kernels.topk.ref import select_topk
 from ..runtime.collectives import NullCollectives, lax_collectives
 from . import policies as pol
 
@@ -153,11 +165,11 @@ def _schedule_refresh(policy, col, state, n_new, key):
     return jax.lax.cond(since >= every, fire, lambda st: st, state)
 
 
-def _step_body(policy, reward_fn, col, state, key, user_ids, contexts):
-    choice, x, (idx, own, valid, be) = _choose(policy, col, state,
-                                               user_ids, contexts)
-    realized, expected, best, rand = _normalize_rewards(
-        reward_fn(key, user_ids, contexts, choice))
+def _apply_feedback(policy, col, state, key, idx, own, valid, be,
+                    user_ids, x, rewards):
+    """The shared transaction tail of both step bodies: fold the reward
+    4-tuple, run the refresh schedule, reduce the batch metrics."""
+    realized, expected, best, rand = rewards
     state = _fold_feedback(policy, state, idx, own, valid, be, user_ids,
                            x, realized)
     n_new = jnp.sum(valid.astype(jnp.int32))
@@ -169,6 +181,15 @@ def _step_body(policy, reward_fn, col, state, key, user_ids, contexts):
         rand_reward=jnp.sum(rand * vm),
         interactions=n_new,
     )
+    return state, metrics
+
+
+def _step_body(policy, reward_fn, col, state, key, user_ids, contexts):
+    choice, x, (idx, own, valid, be) = _choose(policy, col, state,
+                                               user_ids, contexts)
+    rewards = _normalize_rewards(reward_fn(key, user_ids, contexts, choice))
+    state, metrics = _apply_feedback(policy, col, state, key, idx, own,
+                                     valid, be, user_ids, x, rewards)
     return state, choice, metrics
 
 
@@ -180,6 +201,76 @@ def _observe_body(policy, col, state, key, user_ids, contexts, choices,
                            x, rewards)
     n_new = jnp.sum(valid.astype(jnp.int32))
     return _schedule_refresh(policy, col, state, n_new, key)
+
+
+# ---------------------------------------------------------------------------
+# catalog-scale retrieval: shortlist -> merge -> fused choose
+# ---------------------------------------------------------------------------
+
+
+def _catalog_choose(policy, rb, col, state, user_ids, catalog):
+    """Two-stage choose against a persistent (item-sharded) catalog.
+
+    Stage 1 (shortlist): the request users' statistics are psum-replicated
+    to every shard, each shard runs the streaming top-K engine over its
+    LOCAL catalog slice, and the per-shard ``[B, K_short]`` (score, id)
+    lists are all-gathered and merged by (score desc, id asc) — the exact
+    order the kernel itself selects in, so the merged list is bit-equal
+    to a single-host shortlist over the whole catalog (comm:
+    ``O(B K_short shards)`` words, never ``O(B N_items)``).
+
+    Stage 2 (choose): shortlist embeddings are assembled by a one-hot
+    psum (each shard contributes the rows it owns) and ranked by the
+    session's fused ``InteractBackend.choose`` re-fit to ``K_short``
+    candidates.  Underfull slots (score -inf) are filled with the user's
+    top entry, so the filler can never outrank a real candidate and maps
+    back to a valid item id.  For ``N_items <= K_short`` the shortlist is
+    the whole catalog in (score desc, id asc) order and the chosen item
+    is bit-identical to scoring the catalog as one direct slate.
+    """
+    cfg = policy.cfg
+    idx, own, valid, be = _request_masks(policy, col, state, user_ids)
+    w, minv_eff, occ_rows = policy.gather_score(state, idx)
+    # replicate the request rows: exactly one shard owns each valid user
+    w = col.psum(jnp.where(own[:, None], w, 0.0))
+    minv_eff = col.psum(jnp.where(own[:, None, None], minv_eff, 0.0))
+    occ_rows = col.psum(jnp.where(own, occ_rows, 0))
+
+    n_local_items = catalog.live.shape[0]
+    row0_items = col.axis_index() * n_local_items
+    sc, ids = rb.shortlist(w, minv_eff, occ_rows, catalog.emb, catalog.live,
+                           cfg.hyper.alpha, row0_items=row0_items)
+    sc_all = col.all_gather(sc[None])           # [S, B, K_short]
+    id_all = col.all_gather(ids[None])
+    B = user_ids.shape[0]
+    sc_flat = jnp.moveaxis(sc_all, 0, 1).reshape(B, -1)
+    id_flat = jnp.moveaxis(id_all, 0, 1).reshape(B, -1)
+    # merge with the kernel's OWN selection routine, so the merged order
+    # is the kernel's order by construction (not a re-implementation
+    # that could diverge on e.g. signed-zero ties)
+    top_s, top_i = select_topk(sc_flat, id_flat, rb.K_short)
+    top_i = jnp.where(jnp.isfinite(top_s), top_i, top_i[:, :1])
+
+    loc = top_i - row0_items
+    ok = (loc >= 0) & (loc < n_local_items)
+    rows = catalog.emb[jnp.clip(loc, 0, n_local_items - 1)]
+    ctx = col.psum(jnp.where(ok[..., None], rows, 0.0))   # [B, K_short, d]
+
+    be_s = be.with_candidates(rb.K_short)
+    x, slot = be_s.choose(w, minv_eff, ctx, occ_rows, cfg.hyper.alpha)
+    item = jnp.take_along_axis(top_i, slot[:, None], axis=1)[:, 0]
+    item = jnp.where(valid, item, -1)
+    return item, slot, ctx, x, (idx, own, valid, be)
+
+
+def _catalog_step_body(policy, rb, reward_fn, col, state, key, user_ids,
+                       catalog):
+    item, slot, ctx, x, (idx, own, valid, be) = _catalog_choose(
+        policy, rb, col, state, user_ids, catalog)
+    rewards = _normalize_rewards(reward_fn(key, user_ids, ctx, slot))
+    state, metrics = _apply_feedback(policy, col, state, key, idx, own,
+                                     valid, be, user_ids, x, rewards)
+    return state, item, metrics
 
 
 def _refresh_body(policy, col, state, key):
@@ -243,6 +334,47 @@ def _observe_fn(policy, mesh, axes):
         return _observe_body(policy, col, state, key, user_ids, contexts,
                              choices, rewards)
     return _bind_tx(policy, body, mesh, axes)
+
+
+def _bind_catalog_tx(policy, body, mesh, axes, n_plain, out_specs):
+    """Like ``_bind_tx`` but the LAST argument is a Catalog sharded on
+    the ITEM axis over the same mesh axes the user state shards on (the
+    ``n_plain`` args before it are replicated request inputs)."""
+    if mesh is None:
+        return jax.jit(functools.partial(body, _NULL))
+    col = lax_collectives(mesh, axes)
+    bound = functools.partial(body, col)
+    in_specs = ((policy.state_specs(axes),)
+                + tuple(P() for _ in range(n_plain))
+                + (catalog_mod.specs(axes),))
+
+    def wrap(state, *args):
+        mapped = shard_map(
+            bound, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False,
+        )
+        return mapped(state, *args)
+
+    return jax.jit(wrap)
+
+
+@functools.lru_cache(maxsize=64)
+def _catalog_step_fn(policy, rb, reward_fn, mesh, axes):
+    body = functools.partial(_catalog_step_body, policy, rb, reward_fn)
+    out = ((policy.state_specs(axes) if mesh is not None else None),
+           P(), Metrics(P(), P(), P(), P()))
+    return _bind_catalog_tx(policy, body, mesh, axes, n_plain=2,
+                            out_specs=out)
+
+
+@functools.lru_cache(maxsize=64)
+def _catalog_recommend_fn(policy, rb, mesh, axes):
+    def body(col, state, user_ids, catalog):
+        item, slot, ctx, _, _ = _catalog_choose(policy, rb, col, state,
+                                                user_ids, catalog)
+        return item, slot, ctx
+    return _bind_catalog_tx(policy, body, mesh, axes, n_plain=1,
+                            out_specs=(P(), P(), P()))
 
 
 @functools.lru_cache(maxsize=64)
@@ -355,6 +487,14 @@ class OnlineBandit:
     def recommend(self, user_ids, contexts):
         return recommend(self, user_ids, contexts)
 
+    def step_catalog(self, key, user_ids, catalog, reward_fn, *,
+                     k_short: int = 64):
+        return step_catalog(self, key, user_ids, catalog, reward_fn,
+                            k_short=k_short)
+
+    def recommend_catalog(self, user_ids, catalog, *, k_short: int = 64):
+        return recommend_catalog(self, user_ids, catalog, k_short=k_short)
+
     def observe(self, user_ids, contexts, choices, rewards, key=None):
         return observe(self, user_ids, contexts, choices, rewards, key=key)
 
@@ -394,6 +534,51 @@ def observe(session: OnlineBandit, user_ids, contexts, choices, rewards,
     fn = _observe_fn(session.policy, session.mesh, session.axes)
     state = fn(session.state, key, user_ids, contexts, choices, rewards)
     return dataclasses.replace(session, state=state)
+
+
+def _retrieval_engine(session: OnlineBandit, k_short: int):
+    """The session's retrieval backend: dispatch (kind/interpret) follows
+    the run-level interact engine, resolved once per (session, k_short)."""
+    eng = session.policy.cfg.engine
+    return get_retrieval_backend(eng.d, k_short, kind=eng.kind,
+                                 interpret=eng.interpret)
+
+
+def step_catalog(session: OnlineBandit, key, user_ids, catalog,
+                 reward_fn: Callable, *, k_short: int = 64):
+    """One serving transaction against a persistent catalog.
+
+    Like :func:`step`, but the slate is not supplied by the caller — it
+    is retrieved: each user's ``k_short`` highest-UCB live items are
+    shortlisted by the streaming top-K engine (per item shard on a
+    sharded session) and the fused choose ranks the shortlist.
+
+    ``catalog`` is a ``core.catalog.Catalog``; on a sharded session it
+    must be device_put item-sharded over the session mesh
+    (``catalog.specs(axes)``) with ``capacity % shards == 0``.
+    ``reward_fn(key, user_ids, contexts, choice)`` sees the
+    ``[B, k_short, d]`` shortlist slate and the chosen SLOT — the same
+    contract as :func:`step` — so regret terms are relative to the
+    shortlist's best.  Returns ``(session, item_ids [B], metrics)`` with
+    GLOBAL catalog ids (-1 for padded requests).
+    """
+    rb = _retrieval_engine(session, k_short)
+    fn = _catalog_step_fn(session.policy, rb, reward_fn, session.mesh,
+                          session.axes)
+    state, item_ids, metrics = fn(session.state, key, user_ids, catalog)
+    return dataclasses.replace(session, state=state), item_ids, metrics
+
+
+def recommend_catalog(session: OnlineBandit, user_ids, catalog, *,
+                      k_short: int = 64):
+    """The request half against a catalog: no state change.  Returns
+    ``(item_ids [B], slots [B], contexts [B, k_short, d])`` — feed
+    ``(user_ids, contexts, slots, rewards)`` to :func:`observe` to fold
+    the feedback, exactly as with a caller-supplied slate."""
+    rb = _retrieval_engine(session, k_short)
+    fn = _catalog_recommend_fn(session.policy, rb, session.mesh,
+                               session.axes)
+    return fn(session.state, user_ids, catalog)
 
 
 def refresh(session: OnlineBandit, key=None):
