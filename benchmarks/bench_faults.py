@@ -1,0 +1,106 @@
+"""Fault-injection benchmark: the feedback loop under hostile delivery.
+
+Runs the seeded harness (`serve.faults.run_faulted`) over a small grid
+of fault scenarios against a clean control on IDENTICAL traffic (same
+JAX keys; the fault draws come from a separate NumPy stream) and
+records, per scenario:
+
+  matched_ratio           folded / issued decisions — deterministic
+                          bookkeeping of the pending ring (gated)
+  reward_vs_clean_ratio   true realized reward vs the clean control —
+                          the learning cost of the faults (gated; fully
+                          seeded, so any drift is a real change in the
+                          fold/ring semantics)
+  regret_degradation      faulted regret / clean regret (recorded, not
+                          gated: a ratio of two small sums, noisier
+                          than its inputs)
+  tx_per_s                wall clock — never gated
+
+Writes BENCH_faults.json at the repo root (tracked from PR 6 onward).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+
+from repro import serve
+from repro.core import env
+from repro.core.types import BanditHyper
+from repro.serve import faults
+
+from .common import emit
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+N_USERS, D, K, BATCH = 64, 8, 10, 16
+ROUNDS, CAPACITY, TTL = 30, 256, 16
+
+# QUICK_SCENARIOS stays a subset of FULL_SCENARIOS (check_regression
+# matches rows by identity and fails on vanished baseline rows)
+FULL_SCENARIOS = [
+    ("clean", faults.FaultSpec()),
+    ("delay_loss_dup", faults.FaultSpec(seed=7, p_delay=0.3, max_delay=4,
+                                        p_loss=0.1, p_dup=0.05)),
+    ("stall", faults.FaultSpec(seed=3, stall_every=5, stall_rounds=2)),
+    ("heavy", faults.FaultSpec(seed=9, p_delay=0.5, max_delay=6,
+                               p_loss=0.2, p_dup=0.1)),
+]
+QUICK_SCENARIOS = FULL_SCENARIOS[:2]
+
+
+def _session():
+    hyper = BanditHyper(sigma=4, max_rounds=1, gamma=1.5, n_candidates=K)
+    return serve.OnlineBandit.create(
+        N_USERS, D, hyper, policy="distclub", refresh_every=N_USERS,
+        pending_capacity=CAPACITY, pending_ttl=TTL)
+
+
+def main(quick: bool = False):
+    scenarios = QUICK_SCENARIOS if quick else FULL_SCENARIOS
+    e, _ = env.make_synthetic_env(jax.random.PRNGKey(0), N_USERS, D, 4, K)
+
+    _, clean = faults.run_faulted(_session(), e.theta, ROUNDS,
+                                  faults.FaultSpec(), batch=BATCH, key=11)
+    rows = []
+    for name, spec in scenarios:
+        _, rep = faults.run_faulted(_session(), e.theta, ROUNDS, spec,
+                                    batch=BATCH, key=11)
+        st = rep.pending
+        row = {
+            "scenario": name, "policy": "distclub",
+            "n_users": N_USERS, "batch": BATCH, "d": D, "K": K,
+            "rounds": ROUNDS, "capacity": CAPACITY, "ttl": TTL,
+            "p_delay": spec.p_delay, "p_loss": spec.p_loss,
+            "p_dup": spec.p_dup, "stall_every": spec.stall_every,
+            "matched_ratio": st["matched"] / max(1, st["issued"]),
+            "reward_vs_clean_ratio": rep.reward / max(clean.reward, 1e-9),
+            "regret_degradation": rep.regret / max(clean.regret, 1e-9),
+            "delivered": rep.delivered,
+            "unmatched": st["unmatched"], "expired": st["expired"],
+            "dropped": st["dropped"],
+            "tx_per_s": rep.tx_per_s,
+        }
+        rows.append(row)
+        emit(f"faults_{name}", 1e6 / max(rep.tx_per_s, 1e-9),
+             f"matched={row['matched_ratio']:.3f} "
+             f"reward_vs_clean={row['reward_vs_clean_ratio']:.3f} "
+             f"regret_x={row['regret_degradation']:.2f}")
+
+    payload = {
+        "mode": "quick" if quick else "full",
+        "jax_backend": jax.default_backend(),
+        "determinism_note": (
+            "matched_ratio and reward_vs_clean_ratio are fully seeded "
+            "(JAX traffic keys + NumPy fault stream) — gated; "
+            "regret_degradation is recorded but not gated (ratio of "
+            "small sums); tx_per_s is wall clock, never gated"),
+        "scenarios": rows,
+    }
+    (ROOT / "BENCH_faults.json").write_text(json.dumps(payload, indent=1))
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -21,7 +21,11 @@ What is gated — and what deliberately is not:
 
 A baseline key missing from the fresh file also fails: silently dropping
 a tracked metric is how regressions hide.  New keys in the fresh file
-are fine (benches grow).
+are fine (benches grow) — but a whole fresh ``BENCH_*.json`` with NO
+checked-in baseline fails with a clear message: a new bench must land
+its quick-mode baseline in the same PR, or its metrics are never gated.
+Malformed or unreadable files (either side) are reported by name, never
+as a traceback.
 
 Usage (CI runs the default form after the quick benches):
 
@@ -56,7 +60,7 @@ def _direction(key: str) -> str | None:
 # lists (different lengths/orders at the same indices) line up on the
 # rows they share and reordering can never pair unrelated shapes
 _ID_KEYS = ("n", "n_users", "N_items", "batch", "d", "K", "K_short",
-            "policy", "backend")
+            "policy", "backend", "scenario")
 
 
 def _row_label(elem, i: int) -> str:
@@ -103,8 +107,10 @@ def check_file(baseline_path: pathlib.Path, current_path: pathlib.Path,
     try:
         base = _metrics(baseline_path)
         cur = _metrics(current_path)
-    except ValueError as e:
-        return [str(e)]
+    except ValueError as e:       # includes JSONDecodeError: name the
+        return [str(e)]           # file, don't traceback
+    except OSError as e:
+        return [f"unreadable bench file: {e}"]
     for path, b in sorted(base.items()):
         if path not in cur:
             # a baseline row the fresh file no longer has IS a failure —
@@ -138,19 +144,43 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     baselines = sorted(args.baselines.glob("BENCH_*.json"))
-    if not baselines:
-        print(f"no baselines under {args.baselines}", file=sys.stderr)
+    current = sorted(args.current.glob("BENCH_*.json"))
+    if not baselines and not current:
+        print(f"no baselines under {args.baselines} and no fresh "
+              f"BENCH_*.json under {args.current}", file=sys.stderr)
         return 1
     problems: list[str] = []
     checked = 0
     for bp in baselines:
         file_problems = check_file(bp, args.current / bp.name,
                                    args.tolerance)
+        try:
+            n = len(list(_walk(json.loads(bp.read_text()))))
+        except ValueError:
+            n = 0
         problems += file_problems
-        n = len(list(_walk(json.loads(bp.read_text()))))
         checked += n
         status = "FAIL" if file_problems else "ok"
         print(f"{bp.name}: {n} gated metrics — {status}")
+    known = {bp.name for bp in baselines}
+    for cp in current:
+        if cp.name in known:
+            continue
+        try:
+            n_gated = len(_metrics(cp))
+        except (ValueError, OSError) as e:
+            problems.append(f"{cp.name}: unreadable fresh bench file "
+                            f"with no baseline: {e}")
+            continue
+        if n_gated == 0:      # nothing to gate (wall-clock-only bench)
+            print(f"{cp.name}: 0 gated metrics — no baseline needed")
+            continue
+        problems.append(
+            f"{cp.name}: {n_gated} gated metric(s) but no baseline "
+            f"checked in under {args.baselines} — a new bench must land "
+            "its quick-mode baseline in the same PR (run `python -m "
+            "benchmarks.run --quick` and copy the JSON), or its metrics "
+            "are never gated")
     if problems:
         print(f"\n{len(problems)} modeled-metric regression(s):",
               file=sys.stderr)

@@ -66,27 +66,40 @@ def random_catalog(key: jax.Array, n_items: int, d: int,
     return make_catalog(e, capacity=capacity)
 
 
-def retire_items(cat: Catalog, ids: jnp.ndarray) -> Catalog:
-    """Clear the liveness bit of ``ids`` (negative ids are ignored —
-    padding, so callers can retire ragged batches)."""
+def retire_items(cat: Catalog, ids: jnp.ndarray
+                 ) -> tuple[Catalog, jnp.ndarray]:
+    """Clear the liveness bit of ``ids``; returns
+    ``(catalog, n_retired)`` where ``n_retired`` counts slots that
+    actually went live -> dead.  Negative ids (ragged-batch padding),
+    out-of-range ids, duplicates, and already-dead slots are all
+    well-defined no-ops — they simply don't count."""
     tgt = jnp.where(ids >= 0, ids, cat.capacity)
-    return cat._replace(live=cat.live.at[tgt].set(0.0, mode="drop"))
+    new_live = cat.live.at[tgt].set(0.0, mode="drop")
+    n_retired = jnp.sum(cat.live - new_live).astype(jnp.int32)
+    return cat._replace(live=new_live), n_retired
 
 
 def add_items(cat: Catalog, emb_new: jnp.ndarray
-              ) -> tuple[Catalog, jnp.ndarray]:
-    """Place ``emb_new [m, d]`` into the ``m`` lowest dead slots;
-    returns ``(catalog, slot_ids [m])``.  If fewer than ``m`` slots are
-    dead the remainder OVERWRITES live slots starting from the lowest id
-    (the stable ascending sort lists dead slots id-order first, then
-    live slots id-order) — capacity management is the caller's job."""
+              ) -> tuple[Catalog, jnp.ndarray, jnp.ndarray]:
+    """Place ``emb_new [m, d]`` into the lowest dead slots; returns
+    ``(catalog, slot_ids [m], n_added)``.
+
+    A PARTIAL FILL when fewer than ``m`` slots are free: the first
+    ``n_added`` rows (in input order) claim the dead slots in ascending
+    id order, the overflow is NOT placed and gets slot id -1 — live
+    items are never silently overwritten.  Callers that must make room
+    retire first and re-add the remainder."""
     m = emb_new.shape[0]
     # stable ascending sort of the 0/1 mask: dead slots first, id order
-    slots = jnp.argsort(cat.live, stable=True)[:m].astype(jnp.int32)
+    order = jnp.argsort(cat.live, stable=True).astype(jnp.int32)
+    n_free = (cat.capacity - jnp.sum(cat.live)).astype(jnp.int32)
+    placed = jnp.arange(m, dtype=jnp.int32) < n_free
+    slot = order[jnp.minimum(jnp.arange(m), cat.capacity - 1)]
+    tgt = jnp.where(placed, slot, cat.capacity)   # overflow writes drop
     return cat._replace(
-        emb=cat.emb.at[slots].set(emb_new.astype(jnp.float32)),
-        live=cat.live.at[slots].set(1.0),
-    ), slots
+        emb=cat.emb.at[tgt].set(emb_new.astype(jnp.float32), mode="drop"),
+        live=cat.live.at[tgt].set(1.0, mode="drop"),
+    ), jnp.where(placed, slot, -1), jnp.sum(placed.astype(jnp.int32))
 
 
 def specs(axes) -> Catalog:

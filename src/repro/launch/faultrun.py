@@ -1,0 +1,101 @@
+"""Fault-injection driver: the feedback loop under hostile delivery.
+
+    PYTHONPATH=src python -m repro.launch.faultrun --policy distclub \
+        --rounds 60 --delay 0.3 --loss 0.1 --dup 0.05
+
+Runs the same seeded traffic twice — a clean control (no faults) and the
+faulted run — through a buffer-enabled ``OnlineBandit`` session and
+prints the degradation attributable to the faults.  ``--guard`` wraps
+the session in ``serve.guardrails.Guarded`` (CTR floor vs the clean
+run's rate) so a ``--flip``-corrupted run ends in an auto-rollback
+instead of a poisoned session; guardrail events are printed.
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+
+import jax
+
+from ..core import env as bandit_env
+from ..core.types import BanditHyper
+from ..serve import OnlineBandit, faults, guardrails
+from ..train.checkpoint import CheckpointManager
+
+
+def make_session(args):
+    hyper = BanditHyper(alpha=0.05, gamma=2.4, n_candidates=args.k)
+    return OnlineBandit.create(
+        args.users, args.d, hyper, policy=args.policy,
+        refresh_every=args.users * 4,
+        pending_capacity=args.capacity, pending_ttl=args.ttl)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="distclub",
+                    choices=["distclub", "dccb", "club", "linucb"])
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--users", type=int, default=256)
+    ap.add_argument("--d", type=int, default=16)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--capacity", type=int, default=512)
+    ap.add_argument("--ttl", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--delay", type=float, default=0.0,
+                    help="P(feedback delayed 1..max-delay rounds)")
+    ap.add_argument("--max-delay", type=int, default=4)
+    ap.add_argument("--loss", type=float, default=0.0)
+    ap.add_argument("--dup", type=float, default=0.0)
+    ap.add_argument("--flip", type=float, default=0.0,
+                    help="P(delivered reward sign-flipped)")
+    ap.add_argument("--flip-after", type=int, default=0)
+    ap.add_argument("--stall-every", type=int, default=0)
+    ap.add_argument("--stall-rounds", type=int, default=2)
+    ap.add_argument("--guard", action="store_true",
+                    help="wrap in guardrails (CTR floor + auto-rollback)")
+    ap.add_argument("--ctr-floor", type=float, default=0.25)
+    args = ap.parse_args()
+
+    env, _ = bandit_env.make_synthetic_env(
+        jax.random.PRNGKey(1), n_users=args.users, d=args.d,
+        n_clusters=max(2, args.users // 16), n_candidates=args.k)
+    spec = faults.FaultSpec(
+        seed=args.seed, p_delay=args.delay, max_delay=args.max_delay,
+        p_loss=args.loss, p_dup=args.dup, p_flip=args.flip,
+        flip_after=args.flip_after, stall_every=args.stall_every,
+        stall_rounds=args.stall_rounds)
+
+    _, clean = faults.run_faulted(make_session(args), env.theta,
+                                  args.rounds, faults.FaultSpec(),
+                                  batch=args.batch, key=args.seed)
+
+    session = make_session(args)
+    if args.guard:
+        cfg = guardrails.GuardrailConfig(
+            ctr_floor=args.ctr_floor, warmup=2 * args.batch,
+            ema=0.7, snapshot_every=8, cooldown=2)
+        session = guardrails.Guarded.create(
+            session, CheckpointManager(tempfile.mkdtemp(), keep=4), cfg)
+    session, rep = faults.run_faulted(session, env.theta, args.rounds,
+                                      spec, batch=args.batch,
+                                      key=args.seed)
+
+    n = max(1, rep.interactions)
+    print(f"[{args.policy}] {rep.rounds} rounds x {args.batch} "
+          f"({rep.interactions} decisions, {rep.delivered} deliveries, "
+          f"{rep.tx_per_s:.0f} tx/s)")
+    print(f"  clean  : reward {clean.reward:8.1f}  regret {clean.regret:8.1f}"
+          f"  ({clean.reward / max(1, clean.interactions):.3f}/decision)")
+    print(f"  faulted: reward {rep.reward:8.1f}  regret {rep.regret:8.1f}"
+          f"  ({rep.reward / n:.3f}/decision)")
+    print(f"  regret degradation: "
+          f"{rep.regret / max(clean.regret, 1e-9):.2f}x clean")
+    print(f"  pending: {rep.pending}")
+    for e in rep.events:
+        print(f"  guard event: {e}")
+
+
+if __name__ == "__main__":
+    main()

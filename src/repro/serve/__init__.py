@@ -32,24 +32,44 @@ the shortlist, never materializing ``[B, N_items]`` scores::
         session, key, user_ids, cat, reward_fn, k_short=64)
     item_ids, slots, ctx = serve.recommend_catalog(session, user_ids, cat)
 
+Fault-tolerant feedback (README "Fault tolerance & guardrails"): create
+the session with ``pending_capacity > 0`` and the request half ISSUES —
+``recommend`` returns ``(session, choices, decision_ids)``, enqueuing
+each decision into a device-resident ring — while
+``observe_delayed(session, decision_ids, rewards)`` folds feedback
+whenever it arrives: exact under out-of-order/duplicate/lossy delivery,
+TTL-dropping the rest, bit-identical to the synchronous ``step`` at zero
+delay.  ``serve.guardrails`` layers streaming breach monitors with
+checkpoint auto-rollback on top; ``serve.faults`` is the seeded
+fault-injection harness that drives the whole stack
+(``python -m repro.launch.faultrun``).
+
 The old ``serve.bandit_service`` NamedTuple API is deprecated; a shim
 remains (README "Online serving API" has the migration notes).
 """
 from ..core.catalog import (Catalog, add_items, make_catalog,
                             random_catalog, retire_items)
+from .faults import FaultReport, FaultSpec, run_faulted
+from .guardrails import (Guarded, GuardrailConfig, GuardrailState,
+                         shortlist_recall)
+from .pending import PendingBuffer
 from .policies import (POLICIES, ClusteredPolicy, ClusteredState,
                        DCCBPolicy, DCCBServeState, LinUCBPolicy,
                        LinUCBServeState, ServeCfg, from_distclub_state,
                        get_policy, make_cfg, to_distclub_state)
-from .session import (OnlineBandit, embed_candidates, observe, recommend,
-                      recommend_catalog, refresh, step, step_catalog)
+from .session import (OnlineBandit, embed_candidates, observe,
+                      observe_delayed, pending_stats, recommend,
+                      recommend_catalog, refresh, reset_pending, step,
+                      step_catalog)
 
 __all__ = [
     "Catalog", "POLICIES", "ClusteredPolicy", "ClusteredState",
-    "DCCBPolicy", "DCCBServeState", "LinUCBPolicy", "LinUCBServeState",
-    "OnlineBandit", "ServeCfg", "add_items", "embed_candidates",
-    "from_distclub_state", "get_policy", "make_catalog", "make_cfg",
-    "observe", "random_catalog", "recommend", "recommend_catalog",
-    "refresh", "retire_items", "step", "step_catalog",
-    "to_distclub_state",
+    "DCCBPolicy", "DCCBServeState", "FaultReport", "FaultSpec",
+    "Guarded", "GuardrailConfig", "GuardrailState", "LinUCBPolicy",
+    "LinUCBServeState", "OnlineBandit", "PendingBuffer", "ServeCfg",
+    "add_items", "embed_candidates", "from_distclub_state", "get_policy",
+    "make_catalog", "make_cfg", "observe", "observe_delayed",
+    "pending_stats", "random_catalog", "recommend", "recommend_catalog",
+    "refresh", "reset_pending", "retire_items", "run_faulted",
+    "shortlist_recall", "step", "step_catalog", "to_distclub_state",
 ]

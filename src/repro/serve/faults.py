@@ -1,0 +1,184 @@
+"""Seeded fault-injection harness for the delayed-feedback loop.
+
+Drives a buffer-enabled session through the request/feedback split under
+controlled failure modes — the knobs a real feedback pipeline actually
+breaks on:
+
+  p_delay / max_delay   feedback arrives 1..max_delay rounds late
+  p_loss                feedback never arrives (pending slot TTL-expires)
+  p_dup                 feedback delivered twice (second copy must be a
+                        counted no-op)
+  p_flip / flip_after   reward sign-flip corruption from a given round —
+                        the poisoning scenario the guardrails exist for
+  stall_every / stall_rounds
+                        every k-th round the (simulated) feedback shard
+                        stalls: nothing is delivered for `stall_rounds`
+                        rounds, then the backlog floods in
+
+Two random streams, deliberately separate: JAX keys (folded per round
+from ``key``) drive users/contexts/realized rewards, a NumPy
+``default_rng(spec.seed)`` drives the fault draws — so a faulted run and
+its clean control (``FaultSpec()``) see IDENTICAL traffic and coupled
+reward draws, and any metric gap is attributable to the faults alone.
+
+Issue-time regret accounting: ``expected``/``best``/``rand`` are scored
+when the decision is made (what the user experienced), while the
+*delivered* reward — possibly flipped — is what the learner folds.
+``report.reward`` is therefore the true realized reward, not the
+corrupted one.
+
+    session = serve.OnlineBandit.create(..., pending_capacity=256)
+    session, report = run_faulted(session, env.theta, rounds=50,
+                                  spec=FaultSpec(p_delay=0.3, p_loss=0.1))
+
+Pass a ``guardrails.Guarded`` wrapper instead of a bare session and the
+harness routes every transaction through the monitors — the sign-flip
+scenario then ends in an auto-rollback event instead of a poisoned
+session.  ``python -m repro.launch.faultrun`` is the CLI.
+"""
+from __future__ import annotations
+
+import time
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import env as bandit_env
+from . import guardrails as guardrails_mod
+from . import session as session_mod
+
+
+class FaultSpec(NamedTuple):
+    seed: int = 0
+    p_delay: float = 0.0
+    max_delay: int = 4
+    p_loss: float = 0.0
+    p_dup: float = 0.0
+    p_flip: float = 0.0
+    flip_after: int = 0
+    stall_every: int = 0
+    stall_rounds: int = 2
+
+
+class FaultReport(NamedTuple):
+    rounds: int
+    interactions: int       # valid decisions issued
+    reward: float           # TRUE realized reward sum (pre-corruption)
+    expected: float         # sum E[r | choice] at issue
+    best: float             # sum max_k E[r | k] at issue
+    rand_reward: float      # sum of the RAN baseline at issue
+    regret: float           # best - expected, summed
+    delivered: int          # feedback entries handed to observe_delayed
+    tx_per_s: float         # recommend + observe transactions per second
+    pending: dict           # final pending-buffer counters
+    events: tuple           # guardrail events ((,) for a bare session)
+
+
+def run_faulted(session, theta, rounds: int, spec: FaultSpec, *,
+                batch: int = 32, key: int = 0, drain: bool = True):
+    """Run ``rounds`` of issue -> fault-mangled delivery -> delayed fold.
+
+    ``session`` is a buffer-enabled ``OnlineBandit`` or a
+    ``guardrails.Guarded`` wrapping one; ``theta [n_users, d]`` defines
+    the Bernoulli environment.  Returns ``(session, FaultReport)`` with
+    the session in its final state (same type as passed in).
+    """
+    guarded = isinstance(session, guardrails_mod.Guarded)
+    inner = session.session if guarded else session
+    if inner.pending is None:
+        raise ValueError("run_faulted needs a buffer-enabled session "
+                         "(create with pending_capacity > 0)")
+    cfg = inner.policy.cfg
+    K, d = cfg.n_candidates, cfg.d
+    theta = jnp.asarray(theta)
+
+    rng = np.random.default_rng(spec.seed)
+    base = jax.random.PRNGKey(key)
+    queue: list[list] = []          # [due_round, decision_id, reward]
+    stalled_until = -1
+    tot = dict(interactions=0, reward=0.0, expected=0.0, best=0.0,
+               rand=0.0, delivered=0)
+    n_tx = 0
+
+    def deliver(now, fb_key):
+        nonlocal session, queue, n_tx
+        due = [e for e in queue if e[0] <= now]
+        queue = [e for e in queue if e[0] > now]
+        for c, lo in enumerate(range(0, len(due), batch)):
+            chunk = due[lo:lo + batch]
+            ids = np.full((batch,), -1, np.int32)
+            rs = np.zeros((batch,), np.float32)
+            ids[:len(chunk)] = [e[1] for e in chunk]
+            rs[:len(chunk)] = [e[2] for e in chunk]
+            k = jax.random.fold_in(fb_key, c)
+            if guarded:
+                session = session.observe_delayed(jnp.asarray(ids),
+                                                  jnp.asarray(rs), key=k)
+            else:
+                session = session_mod.observe_delayed(
+                    session, jnp.asarray(ids), jnp.asarray(rs), key=k)
+            n_tx += 1
+            tot["delivered"] += len(chunk)
+
+    t0 = time.perf_counter()
+    for i in range(rounds):
+        ku, kc, kr, kf = (jax.random.fold_in(base, 4 * i + j)
+                          for j in range(4))
+        users = jax.random.randint(ku, (batch,), 0, cfg.n_users)
+        ctx = (jax.random.normal(kc, (batch, K, d), jnp.float32)
+               / np.sqrt(d))
+        if guarded:
+            session, choices, ids = session.recommend(users, ctx)
+        else:
+            session, choices, ids = session_mod.recommend(session, users,
+                                                          ctx)
+        n_tx += 1
+        realized, expected, best, rand = bandit_env.step_rewards(
+            kr, theta[users], ctx, choices)
+
+        ids_np = np.asarray(ids)
+        r_np = np.asarray(realized, np.float32)
+        valid = ids_np >= 0
+        tot["interactions"] += int(valid.sum())
+        tot["reward"] += float(np.where(valid, r_np, 0).sum())
+        tot["expected"] += float(np.where(valid, np.asarray(expected), 0).sum())
+        tot["best"] += float(np.where(valid, np.asarray(best), 0).sum())
+        tot["rand"] += float(np.where(valid, np.asarray(rand), 0).sum())
+
+        # fault draws — NumPy stream, invisible to the JAX traffic draws
+        B = batch
+        flip = (i >= spec.flip_after) & (rng.random(B) < spec.p_flip)
+        r_del = np.where(flip, -r_np, r_np)
+        lost = rng.random(B) < spec.p_loss
+        delayed = rng.random(B) < spec.p_delay
+        lag = np.where(delayed, rng.integers(1, spec.max_delay + 1, B), 0)
+        dup = rng.random(B) < spec.p_dup
+        for b in np.nonzero(valid & ~lost)[0]:
+            queue.append([i + int(lag[b]), int(ids_np[b]), float(r_del[b])])
+            if dup[b]:
+                extra = int(rng.integers(0, spec.max_delay + 1))
+                queue.append([i + int(lag[b]) + extra, int(ids_np[b]),
+                              float(r_del[b])])
+
+        if spec.stall_every and (i + 1) % spec.stall_every == 0:
+            stalled_until = i + spec.stall_rounds
+        if i >= stalled_until:
+            deliver(i, kf)
+
+    if drain and queue:             # flush the tail after traffic stops
+        deliver(max(e[0] for e in queue),
+                jax.random.fold_in(base, 4 * rounds))
+    dt = time.perf_counter() - t0
+
+    inner = session.session if guarded else session
+    report = FaultReport(
+        rounds=rounds, interactions=tot["interactions"],
+        reward=tot["reward"], expected=tot["expected"], best=tot["best"],
+        rand_reward=tot["rand"], regret=tot["best"] - tot["expected"],
+        delivered=tot["delivered"], tx_per_s=n_tx / max(dt, 1e-9),
+        pending=session_mod.pending_stats(inner),
+        events=session.events if guarded else (),
+    )
+    return session, report

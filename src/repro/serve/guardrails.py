@@ -1,0 +1,265 @@
+"""Streaming serving guardrails with checkpoint auto-rollback.
+
+A production bandit can be poisoned silently: corrupted rewards bend the
+LinUCB statistics, a stalled shard serves a stale shortlist, a wedged
+feedback pipeline fills the pending ring — and (as CLUB's authors warn)
+bad statistics propagate through the cluster graph at the next stage-2.
+The guardrail layer watches cheap streaming signals, declares a breach
+when one crosses its configured bound, and ROLLS BACK to the last
+healthy :class:`~repro.train.checkpoint.CheckpointManager` snapshot —
+after which the session resumes bit-identical pre-breach behaviour
+(choices are a pure function of policy state + inputs).
+
+Monitors (all EMA-smoothed, host-side Python floats):
+
+  ctr          realized reward per interaction — floor `ctr_floor`,
+               armed after `warmup` interactions
+  recall       shortlist recall vs the direct-slate oracle
+               (:func:`shortlist_recall`; healthy two-stage serving
+               saturates at 1.0, so a drop means a stale/stalled shard
+               or corrupted retrieval state) — floor `recall_floor`
+  occupancy    pending-ring in-flight fraction — ceiling
+               `occupancy_ceiling` (a wedged feedback path fills the
+               ring; decisions start expiring/evicting)
+  latency      per-transaction wall-clock seconds — ceiling
+               `latency_ceiling_s`
+
+State machine:  HEALTHY --breach--> ROLLBACK (restore latest snapshot,
+pending ring cleared with the id counter kept monotone, monitors reset)
+--cooldown txs--> HEALTHY.  While healthy, a snapshot is taken every
+`snapshot_every` transactions; the snapshot cadence bounds how much
+healthy progress a rollback can lose — and, like any monitored system,
+how much *undetected* corruption can leak into a snapshot before the
+EMA crosses its floor (tune `ema`/`snapshot_every` jointly).
+
+Everything is functional: :class:`Guarded` methods return a new wrapper;
+`events` is an append-only tuple of ``("snapshot", tx, step)`` /
+``("rollback", tx, breaches, restored_step)`` records.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, NamedTuple
+
+import jax.numpy as jnp
+
+from . import session as session_mod
+
+
+class GuardrailConfig(NamedTuple):
+    """Bounds + smoothing for the streaming monitors.  The defaults
+    disarm every monitor (infinite bounds) — set only what you watch."""
+
+    ctr_floor: float = -math.inf
+    recall_floor: float = -math.inf
+    occupancy_ceiling: float = math.inf
+    latency_ceiling_s: float = math.inf
+    warmup: int = 64            # interactions before ctr/recall arm
+    ema: float = 0.9            # per-sample EMA decay
+    snapshot_every: int = 4     # healthy transactions between snapshots
+    cooldown: int = 2           # transactions disarmed after a rollback
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardrailState:
+    """EMA values + arming counters.  ``breaches`` names the monitors
+    that crossed their bound on the LAST admitted sample."""
+
+    ema_ctr: float | None = None
+    ema_recall: float | None = None
+    ema_occupancy: float | None = None
+    ema_latency_s: float | None = None
+    interactions: int = 0
+    cooldown_left: int = 0
+    breaches: tuple = ()
+    rollbacks: int = 0
+
+
+def _ema(old: float | None, new: float, decay: float) -> float:
+    return float(new) if old is None else decay * old + (1 - decay) * new
+
+
+def update(cfg: GuardrailConfig, gs: GuardrailState, *,
+           ctr: float | None = None, recall: float | None = None,
+           occupancy: float | None = None,
+           latency_s: float | None = None,
+           interactions: int = 0) -> GuardrailState:
+    """Fold one transaction's samples and re-evaluate every monitor.
+    Rate monitors (ctr/recall) arm after ``warmup`` interactions;
+    resource monitors (occupancy/latency) arm immediately; everything is
+    disarmed during a rollback cooldown."""
+    ema_ctr = gs.ema_ctr if ctr is None else _ema(gs.ema_ctr, ctr, cfg.ema)
+    ema_recall = (gs.ema_recall if recall is None
+                  else _ema(gs.ema_recall, recall, cfg.ema))
+    ema_occ = (gs.ema_occupancy if occupancy is None
+               else _ema(gs.ema_occupancy, occupancy, cfg.ema))
+    ema_lat = (gs.ema_latency_s if latency_s is None
+               else _ema(gs.ema_latency_s, latency_s, cfg.ema))
+    seen = gs.interactions + int(interactions)
+    cooldown_left = max(0, gs.cooldown_left - 1)
+
+    breaches = []
+    if cooldown_left == 0:
+        if seen >= cfg.warmup:
+            if ema_ctr is not None and ema_ctr < cfg.ctr_floor:
+                breaches.append("ctr_floor")
+            if ema_recall is not None and ema_recall < cfg.recall_floor:
+                breaches.append("recall_floor")
+        if ema_occ is not None and ema_occ > cfg.occupancy_ceiling:
+            breaches.append("occupancy_ceiling")
+        if ema_lat is not None and ema_lat > cfg.latency_ceiling_s:
+            breaches.append("latency_ceiling")
+    return dataclasses.replace(
+        gs, ema_ctr=ema_ctr, ema_recall=ema_recall, ema_occupancy=ema_occ,
+        ema_latency_s=ema_lat, interactions=seen,
+        cooldown_left=cooldown_left, breaches=tuple(breaches))
+
+
+def shortlist_recall(session, catalog, user_ids, served_items, *,
+                     k_short: int = 64) -> float:
+    """Fraction of valid users whose SERVED item sits in a freshly
+    computed direct oracle shortlist over the full catalog.
+
+    ``session`` must be the state the choice was made FROM (the
+    pre-transaction session — folding the feedback first moves the UCB
+    scores and the probe stops being an invariant).  Healthy two-stage
+    serving is exact, so this saturates at 1.0: any drop means the
+    serving path diverged from its own statistics (stale shortlist from
+    a stalled shard, corrupted retrieval state, catalog skew between
+    replicas).  Subsumes the old ``k_short`` recall-telemetry item.
+    Eager host call — run it on probe batches, not the hot path.
+    """
+    policy = session.policy
+    cfg = policy.cfg
+    rb = session_mod._retrieval_engine(session, k_short)
+    valid = (user_ids >= 0) & (user_ids < cfg.n_users)
+    idx = jnp.clip(user_ids, 0, cfg.n_users - 1)
+    w, minv_eff, occ = policy.gather_score(session.state, idx)
+    _, oracle_ids = rb.shortlist(w, minv_eff, occ, catalog.emb,
+                                 catalog.live, cfg.hyper.alpha)
+    hit = jnp.any(oracle_ids == served_items[:, None], axis=1)
+    n_valid = jnp.maximum(jnp.sum(valid.astype(jnp.int32)), 1)
+    return float(jnp.sum((hit & valid).astype(jnp.float32)) / n_valid)
+
+
+# ---------------------------------------------------------------------------
+# the guarded session wrapper
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Guarded:
+    """An `OnlineBandit` plus its monitors and rollback anchor.
+
+    Every serving call admits its samples; a breach restores the latest
+    snapshot from ``ckpt`` (and clears the pending ring) before the next
+    call runs.  Immutable like the session it wraps."""
+
+    session: Any
+    ckpt: Any
+    cfg: GuardrailConfig
+    gs: GuardrailState = GuardrailState()
+    tx: int = 0
+    last_snapshot: int = 0
+    events: tuple = ()
+
+    @classmethod
+    def create(cls, session, ckpt, cfg: GuardrailConfig) -> "Guarded":
+        """Wrap ``session``, anchoring snapshot 0 immediately so a
+        rollback target always exists."""
+        session.save(ckpt, 0)
+        return cls(session=session, ckpt=ckpt, cfg=cfg,
+                   events=(("snapshot", 0, 0),))
+
+    # -- admission ---------------------------------------------------------
+    def _admit(self, session, **sample) -> "Guarded":
+        gs = update(self.cfg, self.gs, **sample)
+        tx = self.tx + 1
+        if gs.breaches:
+            restored, step = session.restore(self.ckpt)
+            restored = session_mod.reset_pending(restored)
+            fresh = dataclasses.replace(
+                GuardrailState(), interactions=gs.interactions,
+                cooldown_left=self.cfg.cooldown,
+                rollbacks=gs.rollbacks + 1)
+            return dataclasses.replace(
+                self, session=restored, gs=fresh, tx=tx,
+                events=self.events
+                + (("rollback", tx, gs.breaches, step),))
+        g = dataclasses.replace(self, session=session, gs=gs, tx=tx)
+        # never snapshot during cooldown — a just-rolled-back session may
+        # have re-folded bad samples before the fresh EMA can trip again
+        if (gs.cooldown_left == 0
+                and tx - g.last_snapshot >= self.cfg.snapshot_every):
+            session.save(self.ckpt, tx)
+            g = dataclasses.replace(
+                g, last_snapshot=tx,
+                events=g.events + (("snapshot", tx, tx),))
+        return g
+
+    @property
+    def tripped(self) -> bool:
+        return bool(self.gs.breaches)
+
+    # -- guarded transactions ----------------------------------------------
+    def step(self, key, user_ids, contexts, reward_fn):
+        t0 = time.perf_counter()
+        sess, choices, m = session_mod.step(self.session, key, user_ids,
+                                            contexts, reward_fn)
+        dt = time.perf_counter() - t0
+        n = max(1, int(m.interactions))
+        g = self._admit(sess, ctr=float(m.reward) / n, latency_s=dt,
+                        occupancy=_occupancy(sess),
+                        interactions=int(m.interactions))
+        return g, choices, m
+
+    def step_catalog(self, key, user_ids, catalog, reward_fn, *,
+                     k_short: int = 64, probe_recall: bool = False):
+        t0 = time.perf_counter()
+        sess, items, m = session_mod.step_catalog(
+            self.session, key, user_ids, catalog, reward_fn,
+            k_short=k_short)
+        dt = time.perf_counter() - t0
+        n = max(1, int(m.interactions))
+        # probe against the PRE-transaction state — the invariant is
+        # "served item in the shortlist of the state it was chosen from"
+        recall = (shortlist_recall(self.session, catalog, user_ids, items,
+                                   k_short=k_short)
+                  if probe_recall else None)
+        g = self._admit(sess, ctr=float(m.reward) / n, latency_s=dt,
+                        occupancy=_occupancy(sess), recall=recall,
+                        interactions=int(m.interactions))
+        return g, items, m
+
+    def recommend(self, user_ids, contexts):
+        """Issue on a buffer-enabled session (monitors latency and ring
+        occupancy; CTR arrives with the delayed feedback)."""
+        t0 = time.perf_counter()
+        sess, choices, ids = session_mod.recommend(self.session, user_ids,
+                                                   contexts)
+        dt = time.perf_counter() - t0
+        g = self._admit(sess, latency_s=dt, occupancy=_occupancy(sess))
+        return g, choices, ids
+
+    def observe_delayed(self, decision_ids, rewards, key=None):
+        sess = session_mod.observe_delayed(self.session, decision_ids,
+                                           rewards, key=key)
+        delivered = jnp.sum((decision_ids >= 0).astype(jnp.int32))
+        n = max(1, int(delivered))
+        ctr = float(jnp.sum(jnp.where(decision_ids >= 0, rewards, 0.0))) / n
+        g = self._admit(sess, ctr=ctr, occupancy=_occupancy(sess),
+                        interactions=int(delivered))
+        return g
+
+    def observe_recall(self, recall: float) -> "Guarded":
+        """Feed an externally computed recall probe (e.g. a shadow
+        replica comparing served items against its own oracle)."""
+        return self._admit(self.session, recall=recall)
+
+
+def _occupancy(session) -> float | None:
+    if session.pending is None:
+        return None
+    return float(jnp.mean((session.pending.uid >= 0).astype(jnp.float32)))

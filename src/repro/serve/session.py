@@ -14,6 +14,20 @@ For real request/feedback splits the transaction decomposes into the two
 halves `recommend` (pure, no state change) and `observe` (feedback fold +
 refresh schedule).
 
+Fault-tolerant feedback (README "Fault tolerance & guardrails"): a
+session created with ``pending_capacity > 0`` carries a persistent
+device-resident ring of in-flight decisions (`serve.pending`).  On such
+a session `recommend`/`recommend_catalog` ISSUE: they return
+``(session, choices, decision_ids)`` (catalog:
+``(session, item_ids, decision_ids, slots, ctx)``), enqueuing one
+decision per valid request, and `observe_delayed(session, decision_ids,
+rewards)` folds feedback matched by decision id whenever it arrives —
+exact under out-of-order, duplicated, and lossy delivery, dropping on
+TTL with counted `expired`, all inside the jit transaction.  With zero
+delay the pair is bit-identical to the synchronous `step` (the buffer
+stores the exact psum-combined chosen context the fold needs), on
+single-host and sharded sessions alike (the buffer is replicated).
+
 Duplicate-user batches are EXACT.  A batch is decomposed by occurrence
 rank (item i's rank = how many earlier items carry the same user id) and
 folded rank-by-rank with `lax.fori_loop`: within one pass every live row
@@ -66,6 +80,7 @@ from ..core.backend import get_retrieval_backend
 from ..core.types import BanditHyper, Metrics
 from ..kernels.topk.ref import select_topk
 from ..runtime.collectives import NullCollectives, lax_collectives
+from . import pending as pending_mod
 from . import policies as pol
 
 _NULL = NullCollectives()
@@ -273,6 +288,45 @@ def _catalog_step_body(policy, rb, reward_fn, col, state, key, user_ids,
     return state, item, metrics
 
 
+# ---------------------------------------------------------------------------
+# the pending-decision feedback loop: issue now, fold when feedback lands
+# ---------------------------------------------------------------------------
+
+
+def _issue_body(policy, ttl, col, state, pend, user_ids, contexts):
+    """The request half on a buffer-enabled session: choose (identical
+    math to `_step_body`) and enqueue one pending decision per valid
+    request.  The policy state is read, never written."""
+    choice, x, (idx, own, valid, be) = _choose(policy, col, state,
+                                               user_ids, contexts)
+    pend, ids = pending_mod.issue(pend, user_ids, choice, x, valid, ttl)
+    return pend, choice, ids
+
+
+def _catalog_issue_body(policy, rb, ttl, col, state, pend, user_ids,
+                        catalog):
+    item, slot, ctx, x, (idx, own, valid, be) = _catalog_choose(
+        policy, rb, col, state, user_ids, catalog)
+    pend, ids = pending_mod.issue(pend, user_ids, item, x, valid, ttl)
+    return pend, item, ids, slot, ctx
+
+
+def _observe_delayed_body(policy, col, state, pend, key, decision_ids,
+                          rewards):
+    """Fold feedback matched by decision id: the matched slots supply the
+    exact (uid, chosen-context) pair the synchronous fold would have
+    used, so the delayed fold is bit-identical; unmatched entries
+    (expired / already folded / in-batch duplicates / id -1 padding)
+    surface as uid -1 and fold as padding."""
+    pend, uids, x = pending_mod.match(pend, decision_ids)
+    idx, own, valid, be = _request_masks(policy, col, state, uids)
+    state = _fold_feedback(policy, state, idx, own, valid, be, uids, x,
+                           rewards)
+    n_new = jnp.sum(valid.astype(jnp.int32))
+    state = _schedule_refresh(policy, col, state, n_new, key)
+    return state, pend
+
+
 def _refresh_body(policy, col, state, key):
     k_ref = jax.random.fold_in(key,
                                col.psum(jnp.sum(policy.occ_of(state))))
@@ -377,6 +431,58 @@ def _catalog_recommend_fn(policy, rb, mesh, axes):
                             out_specs=(P(), P(), P()))
 
 
+def _bind_pending_tx(policy, body, mesh, axes, n_plain, out_specs, *,
+                     catalog=False):
+    """Like ``_bind_tx`` for bodies over ``(state, pending, *args)`` —
+    the pending buffer is replicated; with ``catalog`` the LAST plain
+    arg is instead an item-sharded Catalog."""
+    if mesh is None:
+        return jax.jit(functools.partial(body, _NULL))
+    col = lax_collectives(mesh, axes)
+    bound = functools.partial(body, col)
+    plain = [P() for _ in range(n_plain)]
+    if catalog:
+        plain[-1] = catalog_mod.specs(axes)
+    in_specs = ((policy.state_specs(axes), pending_mod.specs())
+                + tuple(plain))
+
+    def wrap(state, *args):
+        mapped = shard_map(
+            bound, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False,
+        )
+        return mapped(state, *args)
+
+    return jax.jit(wrap)
+
+
+@functools.lru_cache(maxsize=64)
+def _issue_fn(policy, ttl, mesh, axes):
+    body = functools.partial(_issue_body, policy, ttl)
+    return _bind_pending_tx(policy, body, mesh, axes, n_plain=2,
+                            out_specs=(pending_mod.specs(), P(), P()))
+
+
+@functools.lru_cache(maxsize=64)
+def _catalog_issue_fn(policy, rb, ttl, mesh, axes):
+    body = functools.partial(_catalog_issue_body, policy, rb, ttl)
+    return _bind_pending_tx(
+        policy, body, mesh, axes, n_plain=2,
+        out_specs=(pending_mod.specs(), P(), P(), P(), P()),
+        catalog=True)
+
+
+@functools.lru_cache(maxsize=64)
+def _observe_delayed_fn(policy, mesh, axes):
+    def body(col, state, pend, key, decision_ids, rewards):
+        return _observe_delayed_body(policy, col, state, pend, key,
+                                     decision_ids, rewards)
+    out = (policy.state_specs(axes) if mesh is not None else None,
+           pending_mod.specs())
+    return _bind_pending_tx(policy, body, mesh, axes, n_plain=3,
+                            out_specs=out)
+
+
 @functools.lru_cache(maxsize=64)
 def _force_refresh_fn(policy, mesh, axes):
     def body(col, state, key):
@@ -399,28 +505,40 @@ class OnlineBandit:
     state: Any
     mesh: Any = None
     axes: tuple = ()
+    pending: Any = None     # PendingBuffer, or None = synchronous-only
+    ttl: int = 0            # pending TTL in issue transactions (static)
 
     # -- construction ------------------------------------------------------
     @classmethod
     def create(cls, n_users: int, d: int, hyper: BanditHyper, *,
                policy: str = "distclub", refresh_every: int = 0,
                backend: str | None = None, interpret: bool | None = None,
-               block_users: int = 256) -> "OnlineBandit":
+               block_users: int = 256, pending_capacity: int = 0,
+               pending_ttl: int = 64) -> "OnlineBandit":
         """Single-host session.  `refresh_every` is the interaction budget
         between refreshes (stage-2 / gossip); <= 0 disables scheduling
-        (use `serve.refresh` to fire one manually)."""
+        (use `serve.refresh` to fire one manually).  `pending_capacity`
+        > 0 enables the fault-tolerant feedback loop: `recommend`
+        issues + enqueues and `observe_delayed` folds feedback by
+        decision id; `pending_ttl` is how many SUBSEQUENT recommend
+        transactions a decision survives before its feedback is dropped
+        as expired."""
         cfg = pol.make_cfg(n_users, d, hyper, refresh_every=refresh_every,
                            backend=backend, interpret=interpret,
                            block_users=block_users)
         p = pol.get_policy(policy, cfg)
-        return cls(policy=p, state=p.init())
+        pend = (pending_mod.init(pending_capacity, d)
+                if pending_capacity > 0 else None)
+        return cls(policy=p, state=p.init(), pending=pend,
+                   ttl=int(pending_ttl))
 
     @classmethod
     def sharded(cls, mesh, n_users: int, d: int, hyper: BanditHyper, *,
                 axes: tuple[str, ...] | None = None,
                 policy: str = "distclub", refresh_every: int = 0,
                 backend: str | None = None, interpret: bool | None = None,
-                block_users: int = 256) -> "OnlineBandit":
+                block_users: int = 256, pending_capacity: int = 0,
+                pending_ttl: int = 64) -> "OnlineBandit":
         """Serving replica set: per-user state sharded over `mesh` (users
         on the flattened `axes`), request batches replicated, refresh on
         the mesh collectives — the identical stage-2 code path as
@@ -440,7 +558,10 @@ class OnlineBandit:
                 f"the {shards}-way mesh must evenly divide n_users={n_users}")
         state = jax.device_put(
             p.init(), named_shardings(mesh, p.state_specs(axes)))
-        return cls(policy=p, state=state, mesh=mesh, axes=axes)
+        pend = (pending_mod.init(pending_capacity, d)
+                if pending_capacity > 0 else None)
+        return cls(policy=p, state=state, mesh=mesh, axes=axes,
+                   pending=pend, ttl=int(pending_ttl))
 
     @classmethod
     def from_offline(cls, state, hyper: BanditHyper, *,
@@ -498,6 +619,12 @@ class OnlineBandit:
     def observe(self, user_ids, contexts, choices, rewards, key=None):
         return observe(self, user_ids, contexts, choices, rewards, key=key)
 
+    def observe_delayed(self, decision_ids, rewards, key=None):
+        return observe_delayed(self, decision_ids, rewards, key=key)
+
+    def reset_pending(self):
+        return reset_pending(self)
+
     def refresh(self, key=None):
         return refresh(self, key=key)
 
@@ -518,10 +645,32 @@ def step(session: OnlineBandit, key, user_ids, contexts,
     return dataclasses.replace(session, state=state), choices, metrics
 
 
+def _pending_guard(session: OnlineBandit, B: int):
+    cap = session.pending.uid.shape[0]
+    if B > cap:
+        raise ValueError(
+            f"pending capacity {cap} < batch width {B}: a batch of "
+            "consecutive decision ids must land on distinct ring slots — "
+            "create the session with pending_capacity >= the largest "
+            "request batch")
+
+
 def recommend(session: OnlineBandit, user_ids, contexts):
-    """The request half: choices `[B]` for a batch, no state change."""
-    fn = _recommend_fn(session.policy, session.mesh, session.axes)
-    return fn(session.state, user_ids, contexts)
+    """The request half: choices `[B]` for a batch.
+
+    On a synchronous session (no pending buffer) this is pure — returns
+    just `choices [B]`.  On a buffer-enabled session it ISSUES: returns
+    `(session, choices [B], decision_ids [B])`, enqueuing one pending
+    decision per valid request (padding requests get decision id -1);
+    feed the ids to :func:`observe_delayed` when feedback arrives."""
+    if session.pending is None:
+        fn = _recommend_fn(session.policy, session.mesh, session.axes)
+        return fn(session.state, user_ids, contexts)
+    _pending_guard(session, user_ids.shape[0])
+    fn = _issue_fn(session.policy, session.ttl, session.mesh, session.axes)
+    pend, choices, ids = fn(session.state, session.pending, user_ids,
+                            contexts)
+    return dataclasses.replace(session, pending=pend), choices, ids
 
 
 def observe(session: OnlineBandit, user_ids, contexts, choices, rewards,
@@ -571,14 +720,72 @@ def step_catalog(session: OnlineBandit, key, user_ids, catalog,
 
 def recommend_catalog(session: OnlineBandit, user_ids, catalog, *,
                       k_short: int = 64):
-    """The request half against a catalog: no state change.  Returns
+    """The request half against a catalog.
+
+    On a synchronous session: no state change; returns
     ``(item_ids [B], slots [B], contexts [B, k_short, d])`` — feed
     ``(user_ids, contexts, slots, rewards)`` to :func:`observe` to fold
-    the feedback, exactly as with a caller-supplied slate."""
+    the feedback, exactly as with a caller-supplied slate.
+
+    On a buffer-enabled session it ISSUES: returns
+    ``(session, item_ids [B], decision_ids [B], slots [B],
+    contexts [B, k_short, d])`` — the buffer already holds the chosen
+    context each decision needs, so only ``(decision_ids, rewards)`` go
+    to :func:`observe_delayed`; slots/contexts are returned for reward
+    models that score the served slate."""
     rb = _retrieval_engine(session, k_short)
-    fn = _catalog_recommend_fn(session.policy, rb, session.mesh,
-                               session.axes)
-    return fn(session.state, user_ids, catalog)
+    if session.pending is None:
+        fn = _catalog_recommend_fn(session.policy, rb, session.mesh,
+                                   session.axes)
+        return fn(session.state, user_ids, catalog)
+    _pending_guard(session, user_ids.shape[0])
+    fn = _catalog_issue_fn(session.policy, rb, session.ttl, session.mesh,
+                           session.axes)
+    pend, items, ids, slots, ctx = fn(session.state, session.pending,
+                                      user_ids, catalog)
+    return (dataclasses.replace(session, pending=pend), items, ids, slots,
+            ctx)
+
+
+def observe_delayed(session: OnlineBandit, decision_ids, rewards,
+                    key=None):
+    """Fold a batch of delayed feedback matched by decision id.
+
+    ``decision_ids [B] i32`` (id -1 = padding), ``rewards [B]`` realized
+    rewards aligned with the ids.  Matching is exact under out-of-order
+    and duplicate delivery: a folded decision's slot is freed, so
+    re-delivery counts ``unmatched`` and never double-folds; feedback for
+    TTL-expired decisions is dropped.  Runs the same refresh schedule as
+    :func:`observe` (``key`` drives the dccb gossip draw).  Returns the
+    updated session; read counters via :func:`pending_stats`."""
+    if session.pending is None:
+        raise ValueError(
+            "observe_delayed needs a buffer-enabled session — create it "
+            "with pending_capacity > 0")
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    fn = _observe_delayed_fn(session.policy, session.mesh, session.axes)
+    state, pend = fn(session.state, session.pending, key, decision_ids,
+                     rewards)
+    return dataclasses.replace(session, state=state, pending=pend)
+
+
+def reset_pending(session: OnlineBandit) -> OnlineBandit:
+    """Free every pending slot but keep the id counter monotone — used
+    after a guardrail rollback so stale in-flight feedback can never
+    alias a post-rollback decision."""
+    if session.pending is None:
+        return session
+    return dataclasses.replace(session,
+                               pending=pending_mod.clear(session.pending))
+
+
+def pending_stats(session: OnlineBandit) -> dict[str, float]:
+    """Host-side pending-buffer counters (occupancy, matched, unmatched,
+    expired, dropped, ...); empty dict on a synchronous session."""
+    if session.pending is None:
+        return {}
+    return pending_mod.stats(session.pending)
 
 
 def refresh(session: OnlineBandit, key=None):

@@ -10,6 +10,11 @@ Design (DESIGN.md §6):
     a crashed writer never corrupts the latest checkpoint (atomicity).
   * ``keep`` most-recent checkpoints are retained; ``latest_step`` scans
     the directory, so a restarted job just calls ``restore_latest``.
+  * ``restore_latest`` is corruption-tolerant: a checkpoint that fails to
+    load (truncated npz, malformed or wrong-magic manifest, missing keys
+    — e.g. torn by a crash mid-copy on a non-atomic filesystem) is
+    skipped with a warning and the next-newest good one is restored; it
+    only raises if NO checkpoint in the directory loads.
 
 This is deliberately dependency-free (no orbax in the container) but
 API-compatible in spirit: save(state, step) / restore(step, like, mesh).
@@ -20,11 +25,14 @@ import json
 import os
 import pathlib
 import shutil
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+_MAGIC = "repro-ckpt-v1"
 
 
 def _flatten(tree) -> dict[str, Any]:
@@ -68,6 +76,7 @@ class CheckpointManager:
             for i, v in enumerate(host.values())
         })
         manifest = {
+            "magic": _MAGIC,
             "step": step,
             "keys": list(host.keys()),
             "shapes": [list(v.shape) for v in host.values()],
@@ -94,6 +103,9 @@ class CheckpointManager:
 
         d = self._step_dir(step)
         manifest = json.loads((d / "manifest.json").read_text())
+        magic = manifest.get("magic", _MAGIC)   # pre-magic saves pass
+        if magic != _MAGIC:
+            raise ValueError(f"bad checkpoint magic {magic!r} in {d}")
         with np.load(d / "arrays.npz") as z:
             arrays = []
             for i, dt in enumerate(manifest["dtypes"]):
@@ -121,7 +133,21 @@ class CheckpointManager:
         return state
 
     def restore_latest(self, like, shardings=None):
-        step = self.latest_step()
-        if step is None:
+        """Restore the newest LOADABLE checkpoint, skipping corrupted or
+        partial ones (truncated arrays, bad magic, missing keys) — a torn
+        write must cost at most one snapshot of progress, never the whole
+        directory.  Raises only when every candidate fails."""
+        steps = self.steps()
+        if not steps:
             return None, None
-        return self.restore(step, like, shardings), step
+        errors = []
+        for step in reversed(steps):
+            try:
+                return self.restore(step, like, shardings), step
+            except Exception as e:  # corrupt entry: skip to next-newest
+                errors.append((step, e))
+                warnings.warn(
+                    f"skipping corrupted checkpoint step {step}: {e!r}")
+        raise RuntimeError(
+            f"no loadable checkpoint in {self.dir}: "
+            + "; ".join(f"step {s}: {e!r}" for s, e in errors))

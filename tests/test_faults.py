@@ -1,0 +1,505 @@
+"""Fault-tolerant feedback loop: pending buffer, delayed folding,
+guardrail auto-rollback, and the seeded fault-injection harness.
+
+Acceptance criteria covered here:
+  * delay-0 split (`recommend` -> realized rewards -> `observe_delayed`)
+    is BIT-identical to the synchronous `step` — single-host and on an
+    8-device mesh (subprocess);
+  * out-of-order, duplicate, and padded delivery fold exactly once, with
+    the right matched/unmatched counters;
+  * TTL expiry and capacity backpressure are counted, never corrupting;
+  * the catalog-scale issue path (`recommend_catalog` on a buffer
+    session) has the same delay-0 parity vs `step_catalog`;
+  * the seeded fault suite (30% delayed, 10% lost, 5% duplicated)
+    completes with bounded regret degradation vs its clean control;
+  * a sign-flip-corrupted run under guardrails trips the CTR floor,
+    auto-rolls back, and replays recorded healthy inputs bit-identically;
+  * `CheckpointManager.restore_latest` skips truncated / bad-magic
+    checkpoints to the newest good one.
+"""
+import json
+import pathlib
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import serve
+from repro.core import env
+from repro.core.types import BanditHyper
+from repro.serve import faults, guardrails
+from repro.train.checkpoint import CheckpointManager
+
+from test_distributed import _run_with_devices
+
+N, D, K, B = 32, 8, 10, 16
+HYPER = BanditHyper(sigma=4, max_rounds=1, gamma=1.5, n_candidates=K)
+
+
+def _session(policy="linucb", capacity=64, ttl=8, refresh_every=None):
+    return serve.OnlineBandit.create(
+        N, D, HYPER, policy=policy,
+        refresh_every=N if refresh_every is None else refresh_every,
+        pending_capacity=capacity, pending_ttl=ttl)
+
+
+@pytest.fixture(scope="module")
+def world():
+    e, _ = env.make_synthetic_env(jax.random.PRNGKey(0), N, D, 4, K)
+    return e
+
+
+def _uids(i, n=B):
+    return jax.random.randint(jax.random.PRNGKey(1000 + i), (n,), 0, N)
+
+
+def _ctx(i, n=B):
+    c = jax.random.normal(jax.random.PRNGKey(2000 + i), (n, K, D))
+    return c / jnp.sqrt(jnp.float32(D))
+
+
+def _reward_fn(theta):
+    def reward_fn(key, uids, ctx, choice):
+        return env.step_rewards(key, theta[uids], ctx, choice)
+    return reward_fn
+
+
+def _assert_states_equal(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# delay-0 bit-parity with the synchronous transaction
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["linucb", "distclub"])
+def test_delay0_split_is_bit_identical_to_step(world, policy):
+    """recommend -> observe_delayed with immediate delivery lands on the
+    exact bytes the fused `step` produces: the ring stores the same
+    psum-combined chosen context the synchronous fold consumes, and the
+    refresh schedule sees the same key."""
+    reward_fn = _reward_fn(world.theta)
+    sync = serve.OnlineBandit.create(N, D, HYPER, policy=policy,
+                                     refresh_every=N)
+    split = _session(policy=policy)
+    for i in range(6):
+        key = jax.random.PRNGKey(i)
+        sync, ch_a, _ = serve.step(sync, key, _uids(i), _ctx(i), reward_fn)
+        split, ch_b, ids = serve.recommend(split, _uids(i), _ctx(i))
+        np.testing.assert_array_equal(np.asarray(ch_a), np.asarray(ch_b))
+        realized, _, _, _ = reward_fn(key, _uids(i), _ctx(i), ch_b)
+        split = serve.observe_delayed(split, ids, realized, key=key)
+    _assert_states_equal(sync.state, split.state)
+    st = serve.pending_stats(split)
+    assert st["in_flight"] == 0
+    assert st["matched"] == 6 * B and st["unmatched"] == 0
+
+
+def test_delay0_parity_sharded_8dev():
+    """Same parity on an 8-device users-sharded mesh: the buffer is
+    replicated (it consumes psum-combined choices), so every shard holds
+    byte-identical pending state and the delayed fold re-derives
+    ownership exactly like the synchronous path."""
+    out = _run_with_devices("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from repro import serve
+        from repro.core import env
+        from repro.core.types import BanditHyper
+
+        N, D, K, B = 64, 8, 10, 16
+        hyper = BanditHyper(sigma=4, max_rounds=1, gamma=1.5,
+                            n_candidates=K)
+        e, _ = env.make_synthetic_env(jax.random.PRNGKey(0), N, D, 4, K)
+        theta = e.theta
+
+        def reward_fn(key, uids, ctx, choice):
+            return env.step_rewards(key, theta[uids], ctx, choice)
+
+        mesh = jax.make_mesh((8,), ("users",))
+        sync = serve.OnlineBandit.sharded(mesh, N, D, hyper,
+                                          policy="distclub",
+                                          refresh_every=N)
+        split = serve.OnlineBandit.sharded(mesh, N, D, hyper,
+                                           policy="distclub",
+                                           refresh_every=N,
+                                           pending_capacity=64,
+                                           pending_ttl=8)
+        for i in range(5):
+            key = jax.random.PRNGKey(i)
+            uids = jax.random.randint(jax.random.PRNGKey(100 + i), (B,),
+                                      0, N)
+            ctx = jax.random.normal(jax.random.PRNGKey(200 + i),
+                                    (B, K, D)) / jnp.sqrt(jnp.float32(D))
+            sync, ch_a, _ = serve.step(sync, key, uids, ctx, reward_fn)
+            split, ch_b, ids = serve.recommend(split, uids, ctx)
+            np.testing.assert_array_equal(np.asarray(ch_a),
+                                          np.asarray(ch_b))
+            realized, _, _, _ = reward_fn(key, uids, ctx, ch_b)
+            split = serve.observe_delayed(split, ids, realized, key=key)
+        for a, b in zip(jax.tree_util.tree_leaves(sync.state),
+                        jax.tree_util.tree_leaves(split.state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        st = serve.pending_stats(split)
+        assert st["in_flight"] == 0 and st["matched"] == 5 * B, st
+        print("DELAYED-SHARD-PARITY-OK")
+    """)
+    assert "DELAYED-SHARD-PARITY-OK" in out
+
+
+def test_catalog_issue_delay0_parity(world):
+    """The catalog-scale issue path: recommend_catalog on a buffer
+    session + observe_delayed == step_catalog, bit for bit."""
+    n_items = 64
+    e, _ = env.make_catalog_env(jax.random.PRNGKey(3), N, D, 4, n_items,
+                                n_candidates=K)
+    cat = serve.make_catalog(env.catalog_embeddings(e))
+    reward_fn = _reward_fn(e.theta)
+    sync = serve.OnlineBandit.create(N, D, HYPER, policy="distclub",
+                                     refresh_every=N)
+    split = _session(policy="distclub")
+    for i in range(4):
+        key = jax.random.PRNGKey(i)
+        uids = _uids(i)
+        sync, it_a, _ = serve.step_catalog(sync, key, uids, cat,
+                                           reward_fn, k_short=8)
+        split, it_b, ids, slots, ctx = serve.recommend_catalog(
+            split, uids, cat, k_short=8)
+        np.testing.assert_array_equal(np.asarray(it_a), np.asarray(it_b))
+        realized, _, _, _ = reward_fn(key, uids, ctx, slots)
+        split = serve.observe_delayed(split, ids, realized, key=key)
+    _assert_states_equal(sync.state, split.state)
+
+
+# ---------------------------------------------------------------------------
+# exactness under hostile delivery
+# ---------------------------------------------------------------------------
+
+
+def test_out_of_order_duplicate_padded_delivery_exact(world):
+    """Shuffled cross-round delivery + re-delivery + in-batch duplicates
+    + id -1 padding folds every decision exactly once."""
+    reward_fn = _reward_fn(world.theta)
+    sess = _session(ttl=16)
+    backlog, round0 = [], None
+    for i in range(4):        # issue 4 rounds, fold nothing yet
+        key = jax.random.PRNGKey(i)
+        sess, ch, ids = serve.recommend(sess, _uids(i), _ctx(i))
+        realized, _, _, _ = reward_fn(key, _uids(i), _ctx(i), ch)
+        entries = list(zip(np.asarray(ids).tolist(),
+                           np.asarray(realized).tolist()))
+        backlog += entries
+        if i == 0:
+            round0 = entries
+    inorder = tangled = sess          # immutable: two futures, one past
+
+    for c in range(4):                # clean in-order delivery
+        ids = jnp.asarray([e[0] for e in backlog[c * B:(c + 1) * B]],
+                          dtype=jnp.int32)
+        rs = jnp.asarray([e[1] for e in backlog[c * B:(c + 1) * B]],
+                         dtype=jnp.float32)
+        inorder = serve.observe_delayed(inorder, ids, rs,
+                                        key=jax.random.PRNGKey(50 + c))
+
+    # shuffled cross-round order, chunks of B-1 so each batch has one
+    # padding slot — chunk 0's spare slot carries an in-batch duplicate
+    rng = np.random.default_rng(0)
+    fb = [backlog[j] for j in rng.permutation(len(backlog))]
+    chunks = [fb[k:k + (B - 1)] for k in range(0, len(fb), B - 1)]
+    for c, chunk in enumerate(chunks):
+        ids = np.full((B,), -1, np.int32)
+        rs = np.zeros((B,), np.float32)
+        ids[:len(chunk)] = [e[0] for e in chunk]
+        rs[:len(chunk)] = [e[1] for e in chunk]
+        if c == 0:            # in-batch duplicate in the padding slot
+            ids[B - 1], rs[B - 1] = ids[0], rs[0]
+        tangled = serve.observe_delayed(tangled, jnp.asarray(ids),
+                                        jnp.asarray(rs),
+                                        key=jax.random.PRNGKey(50 + c))
+    # full re-delivery of round 0: every entry must be a counted no-op
+    ids0 = jnp.asarray([e[0] for e in round0], dtype=jnp.int32)
+    rs0 = jnp.asarray([e[1] for e in round0], dtype=jnp.float32)
+    before = tangled.state
+    tangled = serve.observe_delayed(tangled, ids0, rs0,
+                                    key=jax.random.PRNGKey(99))
+    _assert_states_equal(before, tangled.state)
+
+    st = serve.pending_stats(tangled)
+    assert st["matched"] == 4 * B, st           # every decision: once
+    assert st["unmatched"] == 1 + B, st         # dup + full re-delivery
+    # same multiset of folds as the in-order delivery: integer counters
+    # exactly, float statistics to fold-order tolerance
+    np.testing.assert_array_equal(np.asarray(tangled.state.occ),
+                                  np.asarray(inorder.state.occ))
+    assert int(jnp.sum(tangled.state.occ)) == 4 * B
+    np.testing.assert_allclose(np.asarray(tangled.state.b),
+                               np.asarray(inorder.state.b), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(tangled.state.Minv),
+                               np.asarray(inorder.state.Minv), atol=1e-5)
+
+
+def test_ttl_expiry_counts_and_drops(world):
+    """A decision survives exactly `ttl` subsequent issue transactions;
+    feedback after that is unmatched, the slot freed, `expired` counted."""
+    sess = _session(ttl=2)
+    sess, _, ids0 = serve.recommend(sess, _uids(0), _ctx(0))
+    sess, _, _ = serve.recommend(sess, _uids(1), _ctx(1))   # clock 2
+    sess, _, _ = serve.recommend(sess, _uids(2), _ctx(2))   # clock 3
+    # round-0 deadline = 1 + 2 = 3: still matchable here
+    st = serve.pending_stats(sess)
+    assert st["expired"] == 0
+    sess, _, _ = serve.recommend(sess, _uids(3), _ctx(3))   # clock 4 -> gone
+    st = serve.pending_stats(sess)
+    assert st["expired"] == B, st
+    before = sess.state
+    sess = serve.observe_delayed(sess, ids0,
+                                 jnp.ones((B,), jnp.float32),
+                                 key=jax.random.PRNGKey(0))
+    st = serve.pending_stats(sess)
+    assert st["unmatched"] == B and st["matched"] == 0
+    _assert_states_equal(before, sess.state)   # late feedback: no fold
+
+
+def test_capacity_backpressure_evicts_and_counts(world):
+    """Issuing past capacity evicts the oldest resident decisions and
+    counts them `dropped` — the serving path never blocks."""
+    sess = _session(capacity=B, ttl=100)
+    sess, _, ids0 = serve.recommend(sess, _uids(0), _ctx(0))
+    sess, _, ids1 = serve.recommend(sess, _uids(1), _ctx(1))
+    st = serve.pending_stats(sess)
+    assert st["dropped"] == B and st["in_flight"] == B, st
+    # round-0 ids were evicted: unmatched; round-1 ids still fold
+    sess = serve.observe_delayed(sess, ids0, jnp.ones((B,), jnp.float32),
+                                 key=jax.random.PRNGKey(0))
+    st = serve.pending_stats(sess)
+    assert st["unmatched"] == B and st["matched"] == 0
+    sess = serve.observe_delayed(sess, ids1, jnp.ones((B,), jnp.float32),
+                                 key=jax.random.PRNGKey(1))
+    st = serve.pending_stats(sess)
+    assert st["matched"] == B
+
+
+def test_batch_wider_than_capacity_rejected(world):
+    sess = _session(capacity=8)
+    with pytest.raises(ValueError, match="capacity"):
+        serve.recommend(sess, _uids(0), _ctx(0))
+
+
+# ---------------------------------------------------------------------------
+# the seeded fault suite
+# ---------------------------------------------------------------------------
+
+
+def test_seeded_fault_suite_bounded_degradation(world):
+    """30% delayed / 10% lost / 5% duplicated: the session completes,
+    every non-lost decision folds exactly once, and regret degrades by a
+    bounded factor vs the clean control on identical traffic."""
+    spec = faults.FaultSpec(seed=7, p_delay=0.3, max_delay=4, p_loss=0.1,
+                            p_dup=0.05)
+    _, clean = faults.run_faulted(_session(capacity=256, ttl=16),
+                                  world.theta, 30, faults.FaultSpec(),
+                                  batch=B, key=11)
+    sess, rep = faults.run_faulted(_session(capacity=256, ttl=16),
+                                   world.theta, 30, spec, batch=B, key=11)
+    assert rep.interactions == clean.interactions == 30 * B
+    # bounded degradation: the asserted acceptance thresholds
+    assert rep.reward >= 0.8 * clean.reward, (rep.reward, clean.reward)
+    assert rep.regret <= 1.5 * clean.regret + 5.0, (rep.regret,
+                                                    clean.regret)
+    st = rep.pending
+    # conservation: every issued decision is exactly one of folded /
+    # still resident / TTL-expired / ring-evicted
+    lost = st["issued"] - st["matched"]
+    assert 0 < lost < 0.2 * st["issued"], st
+    assert st["in_flight"] + st["expired"] + st["dropped"] == lost, st
+    # duplicates were delivered and rejected
+    assert st["unmatched"] > 0, st
+
+
+def test_stall_backlog_floods_then_drains(world):
+    """A simulated shard stall: no delivery for `stall_rounds`, then the
+    backlog floods in — everything still folds exactly once."""
+    spec = faults.FaultSpec(seed=3, stall_every=5, stall_rounds=2)
+    _, rep = faults.run_faulted(_session(capacity=256, ttl=16),
+                                world.theta, 20, spec, batch=B, key=5)
+    st = rep.pending
+    assert st["matched"] == st["issued"] == 20 * B, st
+    assert st["unmatched"] == 0 and st["expired"] == 0, st
+
+
+# ---------------------------------------------------------------------------
+# guardrails: breach -> rollback -> bit-identical resume
+# ---------------------------------------------------------------------------
+
+
+def test_guardrail_trips_on_sign_flip_and_resumes_bit_identical(
+        world, tmp_path):
+    """Reward sign-flip corruption drives the CTR EMA through the floor;
+    the wrapper rolls back to the healthy snapshot and replaying the
+    recorded healthy inputs yields bit-identical choices and state."""
+    reward_fn = _reward_fn(world.theta)
+    cfg = guardrails.GuardrailConfig(ctr_floor=0.05, warmup=2 * B,
+                                     ema=0.5, snapshot_every=1000,
+                                     cooldown=2)
+    g = guardrails.Guarded.create(
+        _session(), CheckpointManager(tmp_path / "guard", keep=4), cfg)
+
+    healthy = []
+    for i in range(6):
+        key = jax.random.PRNGKey(i)
+        g, ch, ids = g.recommend(_uids(i), _ctx(i))
+        realized, _, _, _ = reward_fn(key, _uids(i), _ctx(i), ch)
+        g = g.observe_delayed(ids, realized, key=key)
+        healthy.append((i, key, np.asarray(ch)))
+    assert not g.tripped and g.gs.rollbacks == 0
+
+    for i in range(6, 40):
+        key = jax.random.PRNGKey(i)
+        g, ch, ids = g.recommend(_uids(i), _ctx(i))
+        realized, _, _, _ = reward_fn(key, _uids(i), _ctx(i), ch)
+        g = g.observe_delayed(ids, -realized, key=key)   # corrupted
+        if g.gs.rollbacks:
+            break
+    assert g.gs.rollbacks == 1, g.events
+    ev = [e for e in g.events if e[0] == "rollback"]
+    assert ev and ev[0][2] == ("ctr_floor",) and ev[0][3] == 0
+
+    # the ring was cleared but the id counter stayed monotone: stale
+    # feedback can never alias a post-rollback decision
+    st = serve.pending_stats(g.session)
+    assert st["in_flight"] == 0 and st["issued"] > 0
+
+    # replay the recorded healthy inputs: bit-identical choices + state
+    ref = _session()
+    for i, key, ch_rec in healthy:
+        g, ch_g, ids_g = g.recommend(_uids(i), _ctx(i))
+        ref, ch_r, ids_r = serve.recommend(ref, _uids(i), _ctx(i))
+        np.testing.assert_array_equal(np.asarray(ch_g), ch_rec)
+        np.testing.assert_array_equal(np.asarray(ch_g), np.asarray(ch_r))
+        realized, _, _, _ = reward_fn(key, _uids(i), _ctx(i), ch_r)
+        g = g.observe_delayed(ids_g, realized, key=key)
+        ref = serve.observe_delayed(ref, ids_r, realized, key=key)
+    _assert_states_equal(g.session.state, ref.state)
+
+
+def test_guarded_fault_run_rolls_back_under_corruption(world, tmp_path):
+    """End-to-end: the harness's sign-flip scenario through the guarded
+    wrapper ends in rollback events, not a silently poisoned session."""
+    spec = faults.FaultSpec(seed=1, p_flip=1.0, flip_after=8)
+    cfg = guardrails.GuardrailConfig(ctr_floor=0.2, warmup=2 * B,
+                                     ema=0.7, snapshot_every=6,
+                                     cooldown=2)
+    g = guardrails.Guarded.create(
+        _session(capacity=256, ttl=16),
+        CheckpointManager(tmp_path / "gfr", keep=4), cfg)
+    g, rep = faults.run_faulted(g, world.theta, 30, spec, batch=B, key=2)
+    rolls = [e for e in rep.events if e[0] == "rollback"]
+    assert rolls, rep.events
+    assert all(e[2] == ("ctr_floor",) for e in rolls)
+    assert g.gs.rollbacks == len(rolls)
+
+
+def test_occupancy_guardrail_trips_on_wedged_feedback(world, tmp_path):
+    """Feedback stops arriving; the ring fills; the occupancy ceiling
+    trips without waiting for the CTR to move."""
+    cfg = guardrails.GuardrailConfig(occupancy_ceiling=0.5, ema=0.5,
+                                     snapshot_every=1000, cooldown=2)
+    g = guardrails.Guarded.create(
+        _session(capacity=64, ttl=1000),
+        CheckpointManager(tmp_path / "occ", keep=2), cfg)
+    for i in range(8):                       # 8 * 16 issues, 0 delivered
+        g, _, _ = g.recommend(_uids(i), _ctx(i))
+        if g.gs.rollbacks:
+            break
+    assert g.gs.rollbacks == 1
+    assert [e for e in g.events if e[0] == "rollback"][0][2] == (
+        "occupancy_ceiling",)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint corruption recovery
+# ---------------------------------------------------------------------------
+
+
+def test_restore_latest_skips_truncated_and_bad_magic(tmp_path):
+    ck = CheckpointManager(tmp_path / "ck", keep=5)
+    state = {"a": jnp.arange(4.0), "b": jnp.ones((2, 3))}
+    for s in (1, 2, 3):
+        ck.save(jax.tree_util.tree_map(lambda x: x + s, state), s)
+    d3 = ck._step_dir(3)
+    (d3 / "arrays.npz").write_bytes(
+        (d3 / "arrays.npz").read_bytes()[:16])          # truncated
+    d2 = ck._step_dir(2)
+    m = json.loads((d2 / "manifest.json").read_text())
+    m["magic"] = "not-a-checkpoint"
+    (d2 / "manifest.json").write_text(json.dumps(m))    # bad magic
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        restored, step = ck.restore_latest(state)
+    assert step == 1
+    assert len(w) == 2
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.arange(4.0) + 1)
+    # all three corrupt -> a clear error naming every failure
+    d1 = ck._step_dir(1)
+    (d1 / "manifest.json").write_text("{not json")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with pytest.raises(RuntimeError, match="no loadable checkpoint"):
+            ck.restore_latest(state)
+
+
+def test_session_restore_survives_torn_latest(world, tmp_path):
+    """A session whose newest snapshot was torn mid-write resumes from
+    the previous one instead of crashing."""
+    reward_fn = _reward_fn(world.theta)
+    sess = serve.OnlineBandit.create(N, D, HYPER, policy="linucb",
+                                     refresh_every=N)
+    ck = CheckpointManager(tmp_path / "sess", keep=3)
+    for i in range(3):
+        sess, _, _ = serve.step(sess, jax.random.PRNGKey(i), _uids(i),
+                                _ctx(i), reward_fn)
+        sess.save(ck, i)
+    good = sess          # state at step 2 == last good snapshot... step 2
+    d = ck._step_dir(2)
+    (d / "arrays.npz").write_bytes(b"\x00" * 8)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        restored, step = serve.OnlineBandit.create(
+            N, D, HYPER, policy="linucb", refresh_every=N).restore(ck)
+    assert step == 1
+    # resuming from step 1 and re-running round 2 reproduces step 2
+    redo, _, _ = serve.step(restored, jax.random.PRNGKey(2), _uids(2),
+                            _ctx(2), reward_fn)
+    _assert_states_equal(redo.state, good.state)
+
+
+# ---------------------------------------------------------------------------
+# bench-gate hygiene: missing baseline is a clear failure
+# ---------------------------------------------------------------------------
+
+
+def test_check_regression_missing_baseline_clear_message(tmp_path):
+    import subprocess
+    import sys
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    cur = tmp_path / "cur"
+    base = tmp_path / "base"
+    cur.mkdir()
+    base.mkdir()
+    (cur / "BENCH_thing.json").write_text(json.dumps(
+        {"rows": [{"name": "r", "some_ratio": 1.0}]}))
+    out = subprocess.run(
+        [sys.executable, str(repo / "benchmarks" / "check_regression.py"),
+         "--current", str(cur), "--baseline", str(base)],
+        capture_output=True, text=True)
+    assert out.returncode == 1
+    blob = out.stdout + out.stderr
+    assert "no baseline" in blob and "BENCH_thing.json" in blob
+    assert "Traceback" not in blob

@@ -145,12 +145,15 @@ def test_catalog_add_retire_roundtrip():
     cat = catalog_mod.random_catalog(jax.random.PRNGKey(0), 6, D,
                                      capacity=10)
     assert int(cat.n_live()) == 6
-    cat = catalog_mod.retire_items(cat, jnp.array([1, 4, -1], jnp.int32))
+    cat, n_ret = catalog_mod.retire_items(cat,
+                                          jnp.array([1, 4, -1], jnp.int32))
     assert int(cat.n_live()) == 4
+    assert int(n_ret) == 2
     fresh = jnp.ones((3, D), jnp.float32)
-    cat, slots = catalog_mod.add_items(cat, fresh)
+    cat, slots, n_add = catalog_mod.add_items(cat, fresh)
     # lowest dead slots first: the two just-retired + the first spare
     np.testing.assert_array_equal(np.asarray(slots), [1, 4, 6])
+    assert int(n_add) == 3
     assert int(cat.n_live()) == 7
     np.testing.assert_array_equal(np.asarray(cat.emb[slots]),
                                   np.asarray(fresh))
@@ -209,7 +212,7 @@ def test_step_catalog_folds_feedback_and_learns():
     n_users, n_items = 32, 128
     e, cat = _catalog_world(n_users, n_items)
     retired = jnp.array([5, 50, 77], jnp.int32)
-    cat = serve.retire_items(cat, retired)
+    cat, _ = serve.retire_items(cat, retired)
     reward_fn = _theta_reward_fn(e.theta)
     uids = jnp.arange(n_users, dtype=jnp.int32)
     # a FIXED catalog needs real exploration pressure (fresh-slate tests
@@ -279,7 +282,7 @@ def test_item_sharded_8dev_matches_single_host():
         e, _ = env.make_catalog_env(jax.random.PRNGKey(0), N_USERS, D, 4,
                                     N_ITEMS, n_candidates=10)
         cat = serve.make_catalog(env.catalog_embeddings(e))
-        cat = serve.retire_items(cat, jnp.array([3, 17, 200], jnp.int32))
+        cat, _ = serve.retire_items(cat, jnp.array([3, 17, 200], jnp.int32))
         theta = e.theta
 
         def reward_fn(key, uids, ctx, choice):
@@ -324,7 +327,7 @@ def test_catalog_session_checkpoint_roundtrip(tmp_path):
     recommendations (catalog liveness churn included)."""
     n_users, n_items = 16, 64
     e, cat = _catalog_world(n_users, n_items)
-    cat = serve.retire_items(cat, jnp.array([9, 30], jnp.int32))
+    cat, _ = serve.retire_items(cat, jnp.array([9, 30], jnp.int32))
     reward_fn = _theta_reward_fn(e.theta)
     uids = jnp.arange(n_users, dtype=jnp.int32)
     sess = serve.OnlineBandit.create(n_users, D, HYPER, policy="distclub",
@@ -404,3 +407,128 @@ def test_catalog_env_drift_redraws_regions():
     np.testing.assert_allclose(np.asarray(a),
                                np.asarray(env.catalog_embeddings(e)[ids]),
                                atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# churn edge cases + degenerate serving batches (PR-6 regressions)
+# ---------------------------------------------------------------------------
+
+
+def test_add_items_partial_fill_beyond_capacity():
+    """Adding past free capacity places what fits (ascending dead slots,
+    input order) and returns slot -1 for the overflow — live embeddings
+    are never overwritten."""
+    cat = catalog_mod.random_catalog(jax.random.PRNGKey(1), 6, D,
+                                     capacity=8)
+    before = np.asarray(cat.emb[:6]).copy()
+    fresh = jnp.arange(5 * D, dtype=jnp.float32).reshape(5, D)
+    cat2, slots, n_add = catalog_mod.add_items(cat, fresh)
+    np.testing.assert_array_equal(np.asarray(slots), [6, 7, -1, -1, -1])
+    assert int(n_add) == 2
+    assert int(cat2.n_live()) == 8
+    np.testing.assert_array_equal(np.asarray(cat2.emb[:6]), before)
+    np.testing.assert_array_equal(np.asarray(cat2.emb[6:]),
+                                  np.asarray(fresh[:2]))
+    # a full catalog accepts nothing, even a batch wider than capacity
+    cat3, slots3, n3 = catalog_mod.add_items(
+        cat2, jnp.ones((12, D), jnp.float32))
+    assert int(n3) == 0
+    assert np.all(np.asarray(slots3) == -1)
+    np.testing.assert_array_equal(np.asarray(cat3.emb),
+                                  np.asarray(cat2.emb))
+
+
+def test_retire_items_dead_dup_out_of_range_are_noops():
+    """Retiring dead slots, duplicates, negatives, and out-of-range ids
+    is a counted no-op — only real live->dead transitions count."""
+    cat = catalog_mod.random_catalog(jax.random.PRNGKey(2), 4, D,
+                                     capacity=6)
+    cat, n1 = catalog_mod.retire_items(
+        cat, jnp.array([2, 2, 5, -3, 99], jnp.int32))
+    assert int(n1) == 1                 # only slot 2 was live
+    assert int(cat.n_live()) == 3
+    cat, n2 = catalog_mod.retire_items(cat, jnp.array([2, 5], jnp.int32))
+    assert int(n2) == 0                 # both already dead
+    assert int(cat.n_live()) == 3
+    # retire-then-readd lands back on the freed slot
+    cat, slots, n3 = catalog_mod.add_items(cat,
+                                           jnp.ones((1, D), jnp.float32))
+    assert int(n3) == 1 and np.asarray(slots).tolist() == [2]
+
+
+def _degenerate_world(n_users=16, n_items=64):
+    e, _ = env.make_catalog_env(jax.random.PRNGKey(4), n_users, D, 4,
+                                n_items, n_candidates=HYPER.n_candidates)
+    cat = serve.make_catalog(env.catalog_embeddings(e))
+
+    def reward_fn(key, uids, ctx, choice):
+        return env.step_rewards(key, e.theta[uids], ctx, choice)
+    return e, cat, reward_fn
+
+
+_DEGENERATE_REWARD_FNS = {}
+
+
+def _degenerate_cached(n_users=16, n_items=64):
+    # reward_fn identity keys the compiled transaction; cache per shape
+    key = (n_users, n_items)
+    if key not in _DEGENERATE_REWARD_FNS:
+        _DEGENERATE_REWARD_FNS[key] = _degenerate_world(n_users, n_items)
+    return _DEGENERATE_REWARD_FNS[key]
+
+
+def test_step_catalog_all_padded_batch_is_noop():
+    """Every uid < 0: no items served (-1), zero interactions, state
+    byte-identical — the degenerate batch a sharded pipeline's tail
+    produces."""
+    _, cat, reward_fn = _degenerate_cached()
+    sess = serve.OnlineBandit.create(16, D, HYPER, policy="distclub",
+                                     refresh_every=64)
+    uids = jnp.full((8,), -1, jnp.int32)
+    sess2, items, m = serve.step_catalog(sess, jax.random.PRNGKey(0),
+                                         uids, cat, reward_fn, k_short=8)
+    assert np.all(np.asarray(items) == -1)
+    assert int(m.interactions) == 0
+    assert float(m.reward) == 0.0
+    for a, b in zip(jax.tree_util.tree_leaves(sess.state),
+                    jax.tree_util.tree_leaves(sess2.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_step_catalog_underfull_shortlist_tiny_live_count():
+    """k_short > live items: the shortlist pads with the user's top
+    entry, served items stay within the live set, feedback folds."""
+    _, cat, reward_fn = _degenerate_cached()
+    keep = jnp.array([7, 21], jnp.int32)
+    dead = jnp.array([i for i in range(64) if i not in (7, 21)],
+                     jnp.int32)
+    cat, n_ret = serve.retire_items(cat, dead)
+    assert int(n_ret) == 62 and int(cat.n_live()) == 2
+    sess = serve.OnlineBandit.create(16, D, HYPER, policy="distclub",
+                                     refresh_every=64)
+    uids = jnp.arange(8, dtype=jnp.int32)
+    for i in range(3):
+        sess, items, m = serve.step_catalog(sess, jax.random.PRNGKey(i),
+                                            uids, cat, reward_fn,
+                                            k_short=8)
+        assert set(np.asarray(items).tolist()) <= set(
+            np.asarray(keep).tolist()), items
+        assert int(m.interactions) == 8
+    assert int(jnp.sum(sess.state.occ)) == 24
+
+
+def test_step_catalog_duplicate_uids_interleaved_with_padding():
+    """[u, -1, u, -1, v]: both occurrences of u fold (occurrence-rank
+    passes), padding contributes nothing."""
+    _, cat, reward_fn = _degenerate_cached()
+    sess = serve.OnlineBandit.create(16, D, HYPER, policy="distclub",
+                                     refresh_every=1000)
+    uids = jnp.array([3, -1, 3, -1, 5], jnp.int32)
+    sess2, items, m = serve.step_catalog(sess, jax.random.PRNGKey(0),
+                                         uids, cat, reward_fn, k_short=8)
+    assert int(m.interactions) == 3
+    assert int(sess2.state.occ[3]) == 2
+    assert int(sess2.state.occ[5]) == 1
+    it = np.asarray(items)
+    assert it[1] == -1 and it[3] == -1
+    assert it[0] >= 0 and it[2] >= 0 and it[4] >= 0
