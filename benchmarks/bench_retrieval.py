@@ -115,9 +115,9 @@ def bench_shape(N, dense_ok, repeats=2):
     rb = get_retrieval_backend(D, KSHORT, "reference")
     f_stream = jax.jit(lambda w, M, o, e, lv: rb.shortlist(
         w, M, o, e, lv, 0.3))
-    ids = f_stream(w, Minv, occ, cat.emb, cat.live)[1]
+    ids = f_stream(w, Minv, occ, cat.serving.emb, cat.serving.live)[1]
     jax.block_until_ready(ids)
-    secs, _ = timed(f_stream, w, Minv, occ, cat.emb, cat.live,
+    secs, _ = timed(f_stream, w, Minv, occ, cat.serving.emb, cat.serving.live,
                     repeats=repeats)
 
     rec = {
@@ -138,8 +138,8 @@ def bench_shape(N, dense_ok, repeats=2):
     if dense_ok:
         f_dense = jax.jit(lambda w, M, o, e: _dense_topk(
             w, M, o, e, 0.3, KSHORT))
-        jax.block_until_ready(f_dense(w, Minv, occ, cat.emb))
-        dsecs, _ = timed(f_dense, w, Minv, occ, cat.emb, repeats=repeats)
+        jax.block_until_ready(f_dense(w, Minv, occ, cat.serving.emb))
+        dsecs, _ = timed(f_dense, w, Minv, occ, cat.serving.emb, repeats=repeats)
         rec["dense_us"] = 1e6 * dsecs
     else:
         rec["dense_skipped"] = (
@@ -157,9 +157,9 @@ def _reference_1m_row(repeats=1):
     w, Minv, occ, cat = _inputs(n, D, REFERENCE_1M)
     rb = get_retrieval_backend(D, KSHORT, "reference")
     f = jax.jit(lambda w, M, o, e, lv: rb.shortlist(w, M, o, e, lv, 0.3))
-    out = f(w, Minv, occ, cat.emb, cat.live)
+    out = f(w, Minv, occ, cat.serving.emb, cat.serving.live)
     jax.block_until_ready(out)
-    secs, _ = timed(f, w, Minv, occ, cat.emb, cat.live, repeats=repeats)
+    secs, _ = timed(f, w, Minv, occ, cat.serving.emb, cat.serving.live, repeats=repeats)
     emit(f"retrieval_topk_N{REFERENCE_1M}_B{n}_reference", 1e6 * secs,
          "catalog=2**20")
     return {"N_items": REFERENCE_1M, "batch": n, "d": D, "K_short": KSHORT,
@@ -173,12 +173,12 @@ def _interpret_parity(n=16, d=16, N=512, k=8):
     import numpy as np
 
     w, Minv, occ, cat = _inputs(n, d, N, seed=3)
-    live = cat.live.at[jnp.arange(0, N, 7)].set(0.0)
+    live = cat.serving.live.at[jnp.arange(0, N, 7)].set(0.0)
     r_ref = get_retrieval_backend(d, k, "reference")
     r_pal = get_retrieval_backend(d, k, "pallas", block_users=8,
                                   block_items=128, interpret=True)
-    s1, i1 = r_ref.shortlist(w, Minv, occ, cat.emb, live, 0.3)
-    s2, i2 = r_pal.shortlist(w, Minv, occ, cat.emb, live, 0.3)
+    s1, i1 = r_ref.shortlist(w, Minv, occ, cat.serving.emb, live, 0.3)
+    s2, i2 = r_pal.shortlist(w, Minv, occ, cat.serving.emb, live, 0.3)
     return {
         "ids_identical": bool((np.asarray(i1) == np.asarray(i2)).all()),
         "scores_max_abs_err": float(jnp.max(jnp.abs(s1 - s2))),

@@ -3,8 +3,8 @@
 Prints ``name,us_per_call,derived`` CSV; writes results/*.json consumed by
 EXPERIMENTS.md plus BENCH_interact.json / BENCH_graph.json /
 BENCH_drift.json / BENCH_serve.json / BENCH_retrieval.json /
-BENCH_faults.json at the repo root (the engine perf trajectories,
-tracked per PR).
+BENCH_faults.json / BENCH_churn.json at the repo root (the engine perf
+trajectories, tracked per PR).
 
 ``--quick`` runs the fused-interaction microbenchmark at reduced
 shapes/repeats, the stage-2 graph bench (full n sweep — its acceptance
@@ -12,9 +12,10 @@ gates live at n=16k/64k — with trimmed repeats), the non-stationary
 drift scenario through the unified engine (single-host + 8-device
 sharded), the online-serving transaction bench, the catalog-scale
 retrieval bench (streaming top-K incl. the 2**20-item reference row +
-8-device item-sharded transaction), and the seeded fault-injection
-bench (delayed/lossy feedback vs its clean control); a few minutes on
-one CPU core, and
+8-device item-sharded transaction), the seeded fault-injection
+bench (delayed/lossy feedback vs its clean control), and the catalog
+churn bench (double-buffered swaps under live traffic vs the churn-free
+control); a few minutes on one CPU core, and
 still emits every BENCH_*.json, so CI can track the hot-path trends
 cheaply and gate the modeled metrics (``benchmarks.check_regression``).
 
@@ -41,7 +42,7 @@ def _bench_list(quick: bool):
         return call
 
     names = ["bench_interact", "bench_graph", "bench_drift", "bench_serve",
-             "bench_retrieval", "bench_faults"]
+             "bench_retrieval", "bench_faults", "bench_churn"]
     benches = [(n, runner(n, quick=quick)) for n in names]
     if not quick:
         benches += [(n, runner(n)) for n in
@@ -53,8 +54,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="engine benches only (interact/graph/drift/serve/"
-                         "retrieval/faults), reduced shapes/repeats, a few "
-                         "minutes on one CPU core")
+                         "retrieval/faults/churn), reduced shapes/repeats, "
+                         "a few minutes on one CPU core")
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")

@@ -221,6 +221,36 @@ def catalog_embeddings(env: CatalogEnv, phase: int = 0) -> jnp.ndarray:
     return e / jnp.linalg.norm(e, axis=-1, keepdims=True)
 
 
+def sample_churn_items(env: CatalogEnv, key: jax.Array, m: int,
+                       region: int | None = None, phase: int = 0,
+                       noise_scale: float = 0.05
+                       ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Draw ``m`` FRESH items consistent with the planted region
+    structure — the churn-scenario generator: trending arrivals land in
+    existing regions, so the retrieval engine's item-side structure
+    stays learnable through churn.  ``region`` pins every arrival to one
+    region (the flash-crowd scenario); None scatters them uniformly.
+    Returns ``(emb [m, d] unit rows, regions [m] i32)``."""
+    k_r, k_n = jax.random.split(key)
+    if region is None:
+        regions = jax.random.randint(k_r, (m,), 0,
+                                     env.region_centroids.shape[1])
+    else:
+        regions = jnp.full((m,), region, jnp.int32)
+    e = (env.region_centroids[phase, regions]
+         + noise_scale * jax.random.normal(k_n, (m, env.d)))
+    return e / jnp.linalg.norm(e, axis=-1, keepdims=True), regions
+
+
+def region_item_ids(env: CatalogEnv, region: int):
+    """Host-side ids of the ORIGINAL catalog items planted in
+    ``region`` — the mass-retirement scenario retires a whole region at
+    once (variable length, so host numpy, not a traced op)."""
+    import numpy as np
+    return np.nonzero(np.asarray(env.item_region) == region)[0].astype(
+        np.int32)
+
+
 def catalog_phase(env: CatalogEnv, occ: jnp.ndarray) -> jnp.ndarray:
     """Per-user drift phase from the per-user interaction count."""
     if env.drift_period <= 0:

@@ -9,6 +9,17 @@ prints the degradation attributable to the faults.  ``--guard`` wraps
 the session in ``serve.guardrails.Guarded`` (CTR floor vs the clean
 run's rate) so a ``--flip``-corrupted run ends in an auto-rollback
 instead of a poisoned session; guardrail events are printed.
+
+``--scenario churn`` serves against a live double-buffered catalog
+instead of caller slates and layers CHURN faults on top of the delivery
+faults: sustained stage/publish cycles (``--churn-every/-add/-retire``),
+swap stalls (``--swap-stall``), torn swaps (``--torn``), a hot-region
+flash crowd (``--flash-crowd-at/-size``) and a mass retirement
+(``--mass-retire-at``).  The control run is the same traffic with zero
+churn; the report adds the quarantine (``stale``) accounting and the
+published epoch count.  ``--guard`` then also tracks the catalog, so a
+``--churn-ceiling`` breach rolls back the (state, catalog, epoch)
+triple as one unit.
 """
 from __future__ import annotations
 
@@ -19,7 +30,7 @@ import jax
 
 from ..core import env as bandit_env
 from ..core.types import BanditHyper
-from ..serve import OnlineBandit, faults, guardrails
+from ..serve import OnlineBandit, faults, guardrails, make_catalog
 from ..train.checkpoint import CheckpointManager
 
 
@@ -33,6 +44,11 @@ def make_session(args):
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="feedback",
+                    choices=["feedback", "churn"],
+                    help="feedback: slate serving under delivery faults; "
+                         "churn: catalog serving under live churn + "
+                         "delivery faults")
     ap.add_argument("--policy", default="distclub",
                     choices=["distclub", "dccb", "club", "linucb"])
     ap.add_argument("--rounds", type=int, default=60)
@@ -54,38 +70,93 @@ def main():
     ap.add_argument("--stall-every", type=int, default=0)
     ap.add_argument("--stall-rounds", type=int, default=2)
     ap.add_argument("--guard", action="store_true",
-                    help="wrap in guardrails (CTR floor + auto-rollback)")
+                    help="wrap in guardrails (CTR floor + auto-rollback; "
+                         "with --scenario churn the catalog rolls back "
+                         "epoch-consistently too)")
     ap.add_argument("--ctr-floor", type=float, default=0.25)
+    # -- churn scenario knobs --
+    ap.add_argument("--items", type=int, default=512,
+                    help="[churn] initial catalog items")
+    ap.add_argument("--item-capacity", type=int, default=768,
+                    help="[churn] catalog slot capacity")
+    ap.add_argument("--k-short", type=int, default=32)
+    ap.add_argument("--churn-every", type=int, default=4,
+                    help="[churn] stage+publish cadence in rounds")
+    ap.add_argument("--churn-add", type=int, default=16)
+    ap.add_argument("--churn-retire", type=int, default=16)
+    ap.add_argument("--swap-stall", type=int, default=0,
+                    help="[churn] publishes land this many rounds late")
+    ap.add_argument("--torn", type=float, default=0.0,
+                    help="[churn] P(a publish is torn/partial)")
+    ap.add_argument("--flash-crowd-at", type=int, default=-1)
+    ap.add_argument("--flash-crowd-size", type=int, default=0)
+    ap.add_argument("--mass-retire-at", type=int, default=-1)
+    ap.add_argument("--churn-ceiling", type=float, default=0.5,
+                    help="[churn, --guard] capacity fraction per publish")
     args = ap.parse_args()
 
-    env, _ = bandit_env.make_synthetic_env(
-        jax.random.PRNGKey(1), n_users=args.users, d=args.d,
-        n_clusters=max(2, args.users // 16), n_candidates=args.k)
     spec = faults.FaultSpec(
         seed=args.seed, p_delay=args.delay, max_delay=args.max_delay,
         p_loss=args.loss, p_dup=args.dup, p_flip=args.flip,
         flip_after=args.flip_after, stall_every=args.stall_every,
-        stall_rounds=args.stall_rounds)
+        stall_rounds=args.stall_rounds,
+        churn_every=args.churn_every if args.scenario == "churn" else 0,
+        churn_add=args.churn_add, churn_retire=args.churn_retire,
+        swap_stall_rounds=args.swap_stall, p_torn=args.torn,
+        flash_crowd_at=args.flash_crowd_at,
+        flash_crowd_size=args.flash_crowd_size,
+        mass_retire_at=args.mass_retire_at)
 
-    _, clean = faults.run_faulted(make_session(args), env.theta,
-                                  args.rounds, faults.FaultSpec(),
-                                  batch=args.batch, key=args.seed)
-
-    session = make_session(args)
-    if args.guard:
-        cfg = guardrails.GuardrailConfig(
-            ctr_floor=args.ctr_floor, warmup=2 * args.batch,
-            ema=0.7, snapshot_every=8, cooldown=2)
-        session = guardrails.Guarded.create(
-            session, CheckpointManager(tempfile.mkdtemp(), keep=4), cfg)
-    session, rep = faults.run_faulted(session, env.theta, args.rounds,
-                                      spec, batch=args.batch,
-                                      key=args.seed)
+    if args.scenario == "churn":
+        env, _ = bandit_env.make_catalog_env(
+            jax.random.PRNGKey(1), n_users=args.users, d=args.d,
+            n_clusters=max(2, args.users // 16), n_items=args.items,
+            n_candidates=args.k)
+        cat = make_catalog(bandit_env.catalog_embeddings(env),
+                           capacity=args.item_capacity)
+        _, clean = faults.run_faulted_catalog(
+            make_session(args), env, args.rounds,
+            faults.FaultSpec(seed=args.seed), catalog=cat,
+            k_short=args.k_short, batch=args.batch, key=args.seed)
+        session = make_session(args)
+        if args.guard:
+            cfg = guardrails.GuardrailConfig(
+                ctr_floor=args.ctr_floor, churn_ceiling=args.churn_ceiling,
+                warmup=2 * args.batch, ema=0.7, snapshot_every=8,
+                cooldown=2)
+            session = guardrails.Guarded.create(
+                session, CheckpointManager(tempfile.mkdtemp(), keep=4),
+                cfg, catalog=cat)
+            session, rep = faults.run_faulted_catalog(
+                session, env, args.rounds, spec, k_short=args.k_short,
+                batch=args.batch, key=args.seed)
+        else:
+            session, rep = faults.run_faulted_catalog(
+                session, env, args.rounds, spec, catalog=cat,
+                k_short=args.k_short, batch=args.batch, key=args.seed)
+    else:
+        env, _ = bandit_env.make_synthetic_env(
+            jax.random.PRNGKey(1), n_users=args.users, d=args.d,
+            n_clusters=max(2, args.users // 16), n_candidates=args.k)
+        _, clean = faults.run_faulted(make_session(args), env.theta,
+                                      args.rounds, faults.FaultSpec(),
+                                      batch=args.batch, key=args.seed)
+        session = make_session(args)
+        if args.guard:
+            cfg = guardrails.GuardrailConfig(
+                ctr_floor=args.ctr_floor, warmup=2 * args.batch,
+                ema=0.7, snapshot_every=8, cooldown=2)
+            session = guardrails.Guarded.create(
+                session, CheckpointManager(tempfile.mkdtemp(), keep=4),
+                cfg)
+        session, rep = faults.run_faulted(session, env.theta, args.rounds,
+                                          spec, batch=args.batch,
+                                          key=args.seed)
 
     n = max(1, rep.interactions)
-    print(f"[{args.policy}] {rep.rounds} rounds x {args.batch} "
-          f"({rep.interactions} decisions, {rep.delivered} deliveries, "
-          f"{rep.tx_per_s:.0f} tx/s)")
+    print(f"[{args.policy}/{args.scenario}] {rep.rounds} rounds x "
+          f"{args.batch} ({rep.interactions} decisions, {rep.delivered} "
+          f"deliveries, {rep.tx_per_s:.0f} tx/s)")
     print(f"  clean  : reward {clean.reward:8.1f}  regret {clean.regret:8.1f}"
           f"  ({clean.reward / max(1, clean.interactions):.3f}/decision)")
     print(f"  faulted: reward {rep.reward:8.1f}  regret {rep.regret:8.1f}"
@@ -93,6 +164,12 @@ def main():
     print(f"  regret degradation: "
           f"{rep.regret / max(clean.regret, 1e-9):.2f}x clean")
     print(f"  pending: {rep.pending}")
+    if args.scenario == "churn":
+        print(f"  churn: {rep.publishes} epochs published, "
+              f"+{rep.items_added}/-{rep.items_retired} items, "
+              f"{rep.pending['stale']} feedback quarantined, "
+              f"tx ratio {rep.tx_per_s / max(clean.tx_per_s, 1e-9):.2f}x "
+              "clean")
     for e in rep.events:
         print(f"  guard event: {e}")
 

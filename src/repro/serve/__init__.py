@@ -47,9 +47,10 @@ fault-injection harness that drives the whole stack
 The old ``serve.bandit_service`` NamedTuple API is deprecated; a shim
 remains (README "Online serving API" has the migration notes).
 """
-from ..core.catalog import (Catalog, add_items, make_catalog,
-                            random_catalog, retire_items)
-from .faults import FaultReport, FaultSpec, run_faulted
+from ..core.catalog import (Bank, Catalog, add_items, make_catalog,
+                            publish, random_catalog, retire_items,
+                            staged_churn, torn_publish)
+from .faults import FaultReport, FaultSpec, run_faulted, run_faulted_catalog
 from .guardrails import (Guarded, GuardrailConfig, GuardrailState,
                          shortlist_recall)
 from .pending import PendingBuffer
@@ -63,13 +64,15 @@ from .session import (OnlineBandit, embed_candidates, observe,
                       step_catalog)
 
 __all__ = [
-    "Catalog", "POLICIES", "ClusteredPolicy", "ClusteredState",
+    "Bank", "Catalog", "POLICIES", "ClusteredPolicy", "ClusteredState",
     "DCCBPolicy", "DCCBServeState", "FaultReport", "FaultSpec",
     "Guarded", "GuardrailConfig", "GuardrailState", "LinUCBPolicy",
     "LinUCBServeState", "OnlineBandit", "PendingBuffer", "ServeCfg",
     "add_items", "embed_candidates", "from_distclub_state", "get_policy",
     "make_catalog", "make_cfg", "observe", "observe_delayed",
-    "pending_stats", "random_catalog", "recommend", "recommend_catalog",
-    "refresh", "reset_pending", "retire_items", "run_faulted",
-    "shortlist_recall", "step", "step_catalog", "to_distclub_state",
+    "pending_stats", "publish", "random_catalog", "recommend",
+    "recommend_catalog", "refresh", "reset_pending", "retire_items",
+    "run_faulted", "run_faulted_catalog", "shortlist_recall",
+    "staged_churn", "step", "step_catalog", "to_distclub_state",
+    "torn_publish",
 ]

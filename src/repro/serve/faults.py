@@ -15,11 +15,34 @@ breaks on:
                         stalls: nothing is delivered for `stall_rounds`
                         rounds, then the backlog floods in
 
+Catalog CHURN faults (:func:`run_faulted_catalog`, serving against a
+double-buffered ``core.catalog.Catalog`` with the epoch/quarantine
+machinery live):
+
+  churn_every / churn_add / churn_retire
+                        sustained churn: every k-th round stage
+                        `churn_add` fresh items (drawn from the env's
+                        region structure) + `churn_retire` random live
+                        retirements, then publish a new epoch
+  swap_stall_rounds     every publish lands late by this many rounds
+                        (the swap-stall fault: staged churn accumulates
+                        while serving continues on the old epoch)
+  p_torn                P(a publish is torn): only a random half of the
+                        staged slots land before the flip —
+                        ``core.catalog.torn_publish``
+  flash_crowd_at / flash_crowd_size
+                        one burst of `size` arrivals in a single hot
+                        region at the given round
+  mass_retire_at        retire EVERY item of the hot region at the
+                        given round (under load)
+
 Two random streams, deliberately separate: JAX keys (folded per round
 from ``key``) drive users/contexts/realized rewards, a NumPy
-``default_rng(spec.seed)`` drives the fault draws — so a faulted run and
-its clean control (``FaultSpec()``) see IDENTICAL traffic and coupled
-reward draws, and any metric gap is attributable to the faults alone.
+``default_rng(spec.seed)`` drives the fault draws (churn item CONTENT
+comes from a third, spec-seeded JAX key so the env math stays in jax) —
+so a faulted run and its clean control (``FaultSpec()``) see IDENTICAL
+traffic and coupled reward draws, and any metric gap is attributable to
+the faults alone.
 
 Issue-time regret accounting: ``expected``/``best``/``rand`` are scored
 when the decision is made (what the user experienced), while the
@@ -45,8 +68,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import catalog as catalog_mod
 from ..core import env as bandit_env
 from . import guardrails as guardrails_mod
+from . import pending as pending_mod
 from . import session as session_mod
 
 
@@ -60,6 +85,15 @@ class FaultSpec(NamedTuple):
     flip_after: int = 0
     stall_every: int = 0
     stall_rounds: int = 2
+    # -- catalog churn faults (run_faulted_catalog only) --
+    churn_every: int = 0        # publish cadence in rounds; 0 = no churn
+    churn_add: int = 0          # fresh items staged per churn event
+    churn_retire: int = 0       # random live retirements per churn event
+    swap_stall_rounds: int = 0  # publishes land this many rounds late
+    p_torn: float = 0.0         # P(publish is torn/partial)
+    flash_crowd_at: int = -1    # round of a hot-region arrival burst
+    flash_crowd_size: int = 0
+    mass_retire_at: int = -1    # round the hot region retires wholesale
 
 
 class FaultReport(NamedTuple):
@@ -72,8 +106,11 @@ class FaultReport(NamedTuple):
     regret: float           # best - expected, summed
     delivered: int          # feedback entries handed to observe_delayed
     tx_per_s: float         # recommend + observe transactions per second
-    pending: dict           # final pending-buffer counters
+    pending: dict           # final pending-buffer counters (incl. stale)
     events: tuple           # guardrail events ((,) for a bare session)
+    publishes: int = 0      # catalog epochs published (churn runs)
+    items_added: int = 0    # items staged in across the run
+    items_retired: int = 0  # items staged out across the run
 
 
 def run_faulted(session, theta, rounds: int, spec: FaultSpec, *,
@@ -180,5 +217,220 @@ def run_faulted(session, theta, rounds: int, spec: FaultSpec, *,
         delivered=tot["delivered"], tx_per_s=n_tx / max(dt, 1e-9),
         pending=session_mod.pending_stats(inner),
         events=session.events if guarded else (),
+    )
+    return session, report
+
+
+def run_faulted_catalog(session, env, rounds: int, spec: FaultSpec, *,
+                        catalog=None, k_short: int = 16, batch: int = 32,
+                        key: int = 0, drain: bool = True,
+                        assert_conservation: bool = False):
+    """Catalog serving under LIVE CHURN plus the delivery faults.
+
+    ``session`` is a buffer-enabled ``OnlineBandit`` (pass ``catalog``)
+    or a ``guardrails.Guarded`` created WITH a tracked catalog (so churn
+    flows through its epoch-consistent snapshot/rollback path).  ``env``
+    is a ``core.env.CatalogEnv`` — fresh churn items are drawn from its
+    planted region structure, the flash crowd targets its hottest
+    region, and rewards score the SERVED shortlist contexts, so churned
+    items need no id-keyed reward table.  Delivery folds through
+    ``observe_delayed(..., catalog=current)``: feedback for churned
+    items is quarantined (``stale``), and with ``assert_conservation``
+    the identity issued == matched + in_flight + expired + dropped +
+    stale is checked after every delivery transaction.
+
+    Returns ``(session, FaultReport)`` — ``report.pending["stale"]`` is
+    the quarantine count, ``report.publishes`` the epochs flipped.
+    """
+    guarded = isinstance(session, guardrails_mod.Guarded)
+    if guarded:
+        if session.catalog is None:
+            raise ValueError("run_faulted_catalog needs the Guarded "
+                             "wrapper to track the catalog — create it "
+                             "with Guarded.create(..., catalog=cat)")
+        catalog = session.catalog
+    elif catalog is None:
+        raise ValueError("run_faulted_catalog needs a catalog")
+    inner = session.session if guarded else session
+    if inner.pending is None:
+        raise ValueError("run_faulted_catalog needs a buffer-enabled "
+                         "session (create with pending_capacity > 0)")
+    cfg = inner.policy.cfg
+    theta = jnp.asarray(env.theta)
+    n_regions = env.region_centroids.shape[1]
+    region_count = np.bincount(np.asarray(env.item_region),
+                               minlength=n_regions)
+    hot = int(region_count.argmax())
+
+    rng = np.random.default_rng(spec.seed)
+    base = jax.random.PRNGKey(key)
+    churn_base = jax.random.PRNGKey(spec.seed + 0x5EED)
+    queue: list[list] = []          # [due_round, decision_id, reward]
+    publish_due: list[int] = []     # rounds at which a publish lands
+    stalled_until = -1
+    tot = dict(interactions=0, reward=0.0, expected=0.0, best=0.0,
+               rand=0.0, delivered=0)
+    n_tx = 0
+    n_pub = 0
+    n_added = 0
+    n_retired = 0
+
+    def current_cat():
+        return session.catalog if guarded else catalog
+
+    def check_conservation():
+        p = (session.session if guarded else session).pending
+        gap = pending_mod.conservation_gap(p)
+        if gap != 0:
+            raise AssertionError(
+                f"conservation identity violated: gap {gap} with "
+                f"{pending_mod.stats(p)}")
+
+    def stage(add=None, retire=None):
+        nonlocal session, catalog, n_added, n_retired
+        if guarded:
+            session, _ = session.stage_churn(add=add, retire=retire)
+        else:
+            if retire is not None:
+                catalog, _ = catalog_mod.retire_items(catalog, retire)
+            if add is not None:
+                catalog, _, _ = catalog_mod.add_items(catalog, add)
+        if retire is not None:
+            n_retired += int(retire.shape[0])
+        if add is not None:
+            n_added += int(add.shape[0])
+
+    def do_publish():
+        nonlocal session, catalog, n_pub
+        cat = current_cat()
+        torn = rng.random() < spec.p_torn
+        keep = (jnp.asarray(rng.random(cat.capacity) < 0.5)
+                if torn else None)
+        if guarded:
+            session = session.publish(keep_mask=keep)
+        elif keep is None:
+            catalog = catalog_mod.publish(catalog)
+        else:
+            catalog = catalog_mod.torn_publish(catalog, keep)
+        n_pub += 1
+
+    def deliver(now, fb_key):
+        nonlocal session, queue, n_tx
+        due = [e for e in queue if e[0] <= now]
+        queue = [e for e in queue if e[0] > now]
+        for c, lo in enumerate(range(0, len(due), batch)):
+            chunk = due[lo:lo + batch]
+            ids = np.full((batch,), -1, np.int32)
+            rs = np.zeros((batch,), np.float32)
+            ids[:len(chunk)] = [e[1] for e in chunk]
+            rs[:len(chunk)] = [e[2] for e in chunk]
+            k = jax.random.fold_in(fb_key, c)
+            if guarded:
+                session = session.observe_delayed(jnp.asarray(ids),
+                                                  jnp.asarray(rs), key=k)
+            else:
+                session = session_mod.observe_delayed(
+                    session, jnp.asarray(ids), jnp.asarray(rs), key=k,
+                    catalog=current_cat())
+            n_tx += 1
+            tot["delivered"] += len(chunk)
+            if assert_conservation:
+                check_conservation()
+
+    t0 = time.perf_counter()
+    for i in range(rounds):
+        ku, kr, kf = (jax.random.fold_in(base, 4 * i + j)
+                      for j in range(3))
+        users = jax.random.randint(ku, (batch,), 0, cfg.n_users)
+        if guarded:
+            session, items, ids, slots, ctx = session.recommend_catalog(
+                users, k_short=k_short)
+        else:
+            session, items, ids, slots, ctx = session_mod.recommend_catalog(
+                session, users, current_cat(), k_short=k_short)
+        n_tx += 1
+        realized, expected, best, rand = bandit_env.step_rewards(
+            kr, theta[users], ctx, slots)
+
+        ids_np = np.asarray(ids)
+        r_np = np.asarray(realized, np.float32)
+        valid = ids_np >= 0
+        tot["interactions"] += int(valid.sum())
+        tot["reward"] += float(np.where(valid, r_np, 0).sum())
+        tot["expected"] += float(np.where(valid, np.asarray(expected),
+                                          0).sum())
+        tot["best"] += float(np.where(valid, np.asarray(best), 0).sum())
+        tot["rand"] += float(np.where(valid, np.asarray(rand), 0).sum())
+
+        # delivery fault draws — NumPy stream, invisible to JAX traffic
+        B = batch
+        flip = (i >= spec.flip_after) & (rng.random(B) < spec.p_flip)
+        r_del = np.where(flip, -r_np, r_np)
+        lost = rng.random(B) < spec.p_loss
+        delayed = rng.random(B) < spec.p_delay
+        lag = np.where(delayed, rng.integers(1, spec.max_delay + 1, B), 0)
+        dup = rng.random(B) < spec.p_dup
+        for b in np.nonzero(valid & ~lost)[0]:
+            queue.append([i + int(lag[b]), int(ids_np[b]),
+                          float(r_del[b])])
+            if dup[b]:
+                extra = int(rng.integers(0, spec.max_delay + 1))
+                queue.append([i + int(lag[b]) + extra, int(ids_np[b]),
+                              float(r_del[b])])
+
+        # churn events — staged into the shadow bank, published later
+        staged = False
+        if i == spec.flash_crowd_at and spec.flash_crowd_size > 0:
+            k_fc = jax.random.fold_in(churn_base, 2 * i)
+            emb, _ = bandit_env.sample_churn_items(
+                env, k_fc, spec.flash_crowd_size, region=hot)
+            stage(add=emb)
+            staged = True
+        if i == spec.mass_retire_at:
+            stage(retire=jnp.asarray(
+                bandit_env.region_item_ids(env, hot)))
+            staged = True
+        if spec.churn_every and (i + 1) % spec.churn_every == 0:
+            if spec.churn_retire > 0:
+                live_ids = np.nonzero(
+                    np.asarray(current_cat().serving.live) > 0)[0]
+                m = min(spec.churn_retire, len(live_ids))
+                if m > 0:
+                    stage(retire=jnp.asarray(rng.choice(
+                        live_ids, size=m, replace=False).astype(np.int32)))
+            if spec.churn_add > 0:
+                k_ch = jax.random.fold_in(churn_base, 2 * i + 1)
+                emb, _ = bandit_env.sample_churn_items(env, k_ch,
+                                                       spec.churn_add)
+                stage(add=emb)
+            staged = True
+        if staged:
+            publish_due.append(i + spec.swap_stall_rounds)
+        while publish_due and publish_due[0] <= i:
+            publish_due.pop(0)
+            do_publish()
+
+        if spec.stall_every and (i + 1) % spec.stall_every == 0:
+            stalled_until = i + spec.stall_rounds
+        if i >= stalled_until:
+            deliver(i, kf)
+
+    while publish_due:                  # land stalled swaps before drain
+        publish_due.pop(0)
+        do_publish()
+    if drain and queue:
+        deliver(max(e[0] for e in queue),
+                jax.random.fold_in(base, 4 * rounds))
+    dt = time.perf_counter() - t0
+
+    inner = session.session if guarded else session
+    report = FaultReport(
+        rounds=rounds, interactions=tot["interactions"],
+        reward=tot["reward"], expected=tot["expected"], best=tot["best"],
+        rand_reward=tot["rand"], regret=tot["best"] - tot["expected"],
+        delivered=tot["delivered"], tx_per_s=n_tx / max(dt, 1e-9),
+        pending=session_mod.pending_stats(inner),
+        events=session.events if guarded else (),
+        publishes=n_pub, items_added=n_added, items_retired=n_retired,
     )
     return session, report

@@ -23,6 +23,13 @@ Monitors (all EMA-smoothed, host-side Python floats):
                ring; decisions start expiring/evicting)
   latency      per-transaction wall-clock seconds — ceiling
                `latency_ceiling_s`
+  churn        fraction of catalog capacity changed per publish —
+               ceiling `churn_ceiling` (a runaway ingest pipeline or a
+               bad mass retirement swaps out the catalog faster than
+               in-flight decisions can tolerate); unlike the others the
+               BREACH tests the raw per-publish sample — a single
+               oversized swap is the hazard, so it must not hide under
+               EMA smoothing — while ``ema_churn`` stays as telemetry
 
 State machine:  HEALTHY --breach--> ROLLBACK (restore latest snapshot,
 pending ring cleared with the id counter kept monotone, monitors reset)
@@ -31,6 +38,13 @@ pending ring cleared with the id counter kept monotone, monitors reset)
 healthy progress a rollback can lose — and, like any monitored system,
 how much *undetected* corruption can leak into a snapshot before the
 EMA crosses its floor (tune `ema`/`snapshot_every` jointly).
+
+Epoch-consistent rollback: a wrapper created with ``catalog=`` TRACKS
+the serving catalog — every snapshot captures the (state, catalog,
+epoch) triple (the epoch lives inside the catalog) and a rollback
+restores all of it, so the restored statistics never resume against a
+catalog they have not seen.  Catalog churn flows through the wrapper's
+``stage_churn``/``publish``, which also feed the churn monitor.
 
 Everything is functional: :class:`Guarded` methods return a new wrapper;
 `events` is an append-only tuple of ``("snapshot", tx, step)`` /
@@ -56,6 +70,7 @@ class GuardrailConfig(NamedTuple):
     recall_floor: float = -math.inf
     occupancy_ceiling: float = math.inf
     latency_ceiling_s: float = math.inf
+    churn_ceiling: float = math.inf   # capacity fraction per publish
     warmup: int = 64            # interactions before ctr/recall arm
     ema: float = 0.9            # per-sample EMA decay
     snapshot_every: int = 4     # healthy transactions between snapshots
@@ -71,6 +86,7 @@ class GuardrailState:
     ema_recall: float | None = None
     ema_occupancy: float | None = None
     ema_latency_s: float | None = None
+    ema_churn: float | None = None
     interactions: int = 0
     cooldown_left: int = 0
     breaches: tuple = ()
@@ -85,11 +101,12 @@ def update(cfg: GuardrailConfig, gs: GuardrailState, *,
            ctr: float | None = None, recall: float | None = None,
            occupancy: float | None = None,
            latency_s: float | None = None,
+           churn: float | None = None,
            interactions: int = 0) -> GuardrailState:
     """Fold one transaction's samples and re-evaluate every monitor.
     Rate monitors (ctr/recall) arm after ``warmup`` interactions;
-    resource monitors (occupancy/latency) arm immediately; everything is
-    disarmed during a rollback cooldown."""
+    resource monitors (occupancy/latency/churn) arm immediately;
+    everything is disarmed during a rollback cooldown."""
     ema_ctr = gs.ema_ctr if ctr is None else _ema(gs.ema_ctr, ctr, cfg.ema)
     ema_recall = (gs.ema_recall if recall is None
                   else _ema(gs.ema_recall, recall, cfg.ema))
@@ -97,6 +114,8 @@ def update(cfg: GuardrailConfig, gs: GuardrailState, *,
                else _ema(gs.ema_occupancy, occupancy, cfg.ema))
     ema_lat = (gs.ema_latency_s if latency_s is None
                else _ema(gs.ema_latency_s, latency_s, cfg.ema))
+    ema_churn = (gs.ema_churn if churn is None
+                 else _ema(gs.ema_churn, churn, cfg.ema))
     seen = gs.interactions + int(interactions)
     cooldown_left = max(0, gs.cooldown_left - 1)
 
@@ -111,9 +130,13 @@ def update(cfg: GuardrailConfig, gs: GuardrailState, *,
             breaches.append("occupancy_ceiling")
         if ema_lat is not None and ema_lat > cfg.latency_ceiling_s:
             breaches.append("latency_ceiling")
+        # churn breaches on the RAW per-publish sample: one oversized
+        # swap is the hazard, and an EMA would smooth it under the bar
+        if churn is not None and churn > cfg.churn_ceiling:
+            breaches.append("churn_ceiling")
     return dataclasses.replace(
         gs, ema_ctr=ema_ctr, ema_recall=ema_recall, ema_occupancy=ema_occ,
-        ema_latency_s=ema_lat, interactions=seen,
+        ema_latency_s=ema_lat, ema_churn=ema_churn, interactions=seen,
         cooldown_left=cooldown_left, breaches=tuple(breaches))
 
 
@@ -137,8 +160,9 @@ def shortlist_recall(session, catalog, user_ids, served_items, *,
     valid = (user_ids >= 0) & (user_ids < cfg.n_users)
     idx = jnp.clip(user_ids, 0, cfg.n_users - 1)
     w, minv_eff, occ = policy.gather_score(session.state, idx)
-    _, oracle_ids = rb.shortlist(w, minv_eff, occ, catalog.emb,
-                                 catalog.live, cfg.hyper.alpha)
+    bank = catalog.serving
+    _, oracle_ids = rb.shortlist(w, minv_eff, occ, bank.emb,
+                                 bank.live, cfg.hyper.alpha)
     hit = jnp.any(oracle_ids == served_items[:, None], axis=1)
     n_valid = jnp.maximum(jnp.sum(valid.astype(jnp.int32)), 1)
     return float(jnp.sum((hit & valid).astype(jnp.float32)) / n_valid)
@@ -155,7 +179,15 @@ class Guarded:
 
     Every serving call admits its samples; a breach restores the latest
     snapshot from ``ckpt`` (and clears the pending ring) before the next
-    call runs.  Immutable like the session it wraps."""
+    call runs.  Immutable like the session it wraps.
+
+    ``catalog`` (optional) makes the wrapper the catalog's owner for
+    EPOCH-CONSISTENT rollback: snapshots save the (state, catalog)
+    pair — the epoch travels inside the catalog — and a breach restores
+    both, so the rolled-back statistics resume against exactly the
+    catalog they were trained on.  Churn goes through ``stage_churn`` /
+    ``publish`` (which feeds the churn monitor); the catalog-serving
+    calls then default to the tracked catalog."""
 
     session: Any
     ckpt: Any
@@ -164,28 +196,62 @@ class Guarded:
     tx: int = 0
     last_snapshot: int = 0
     events: tuple = ()
+    catalog: Any = None
 
     @classmethod
-    def create(cls, session, ckpt, cfg: GuardrailConfig) -> "Guarded":
+    def create(cls, session, ckpt, cfg: GuardrailConfig,
+               catalog=None) -> "Guarded":
         """Wrap ``session``, anchoring snapshot 0 immediately so a
-        rollback target always exists."""
-        session.save(ckpt, 0)
-        return cls(session=session, ckpt=ckpt, cfg=cfg,
-                   events=(("snapshot", 0, 0),))
+        rollback target always exists.  Pass ``catalog`` to snapshot the
+        (state, catalog, epoch) triple and roll it back as one unit."""
+        g = cls(session=session, ckpt=ckpt, cfg=cfg, catalog=catalog)
+        g._save_snapshot(session, catalog, 0)
+        return dataclasses.replace(g, events=(("snapshot", 0, 0),))
+
+    # -- (state, catalog) snapshot plumbing --------------------------------
+    def _save_snapshot(self, session, catalog, step):
+        if catalog is None:
+            session.save(self.ckpt, step)
+        else:
+            self.ckpt.save({"state": session.state, "catalog": catalog},
+                           step)
+
+    def _snapshot_shardings(self, session, catalog):
+        if session.mesh is None:
+            return None
+        from ..core import catalog as catalog_mod
+        from ..distributed.distclub_shard import named_shardings
+        return {"state": session._shardings(),
+                "catalog": named_shardings(session.mesh,
+                                           catalog_mod.specs(session.axes))}
+
+    def _rollback(self, session, catalog):
+        """(session, catalog, step) restored from the latest loadable
+        snapshot — state-only, or the epoch-consistent pair."""
+        if catalog is None:
+            restored, step = session.restore(self.ckpt)
+            return restored, None, step
+        like = {"state": session.state, "catalog": catalog}
+        payload, step = self.ckpt.restore_latest(
+            like, self._snapshot_shardings(session, catalog))
+        if payload is None:     # empty directory: keep what we have
+            return session, catalog, None
+        return (dataclasses.replace(session, state=payload["state"]),
+                payload["catalog"], step)
 
     # -- admission ---------------------------------------------------------
     def _admit(self, session, **sample) -> "Guarded":
         gs = update(self.cfg, self.gs, **sample)
         tx = self.tx + 1
         if gs.breaches:
-            restored, step = session.restore(self.ckpt)
+            restored, cat, step = self._rollback(session, self.catalog)
             restored = session_mod.reset_pending(restored)
             fresh = dataclasses.replace(
                 GuardrailState(), interactions=gs.interactions,
                 cooldown_left=self.cfg.cooldown,
                 rollbacks=gs.rollbacks + 1)
             return dataclasses.replace(
-                self, session=restored, gs=fresh, tx=tx,
+                self, session=restored, catalog=cat, gs=fresh, tx=tx,
                 events=self.events
                 + (("rollback", tx, gs.breaches, step),))
         g = dataclasses.replace(self, session=session, gs=gs, tx=tx)
@@ -193,7 +259,7 @@ class Guarded:
         # have re-folded bad samples before the fresh EMA can trip again
         if (gs.cooldown_left == 0
                 and tx - g.last_snapshot >= self.cfg.snapshot_every):
-            session.save(self.ckpt, tx)
+            self._save_snapshot(session, g.catalog, tx)
             g = dataclasses.replace(
                 g, last_snapshot=tx,
                 events=g.events + (("snapshot", tx, tx),))
@@ -215,22 +281,32 @@ class Guarded:
                         interactions=int(m.interactions))
         return g, choices, m
 
-    def step_catalog(self, key, user_ids, catalog, reward_fn, *,
+    def _catalog_or_tracked(self, catalog):
+        cat = catalog if catalog is not None else self.catalog
+        if cat is None:
+            raise ValueError("no catalog: pass one explicitly or create "
+                             "the Guarded wrapper with catalog=")
+        return cat
+
+    def step_catalog(self, key, user_ids, catalog=None, reward_fn=None, *,
                      k_short: int = 64, probe_recall: bool = False):
+        cat = self._catalog_or_tracked(catalog)
         t0 = time.perf_counter()
         sess, items, m = session_mod.step_catalog(
-            self.session, key, user_ids, catalog, reward_fn,
+            self.session, key, user_ids, cat, reward_fn,
             k_short=k_short)
         dt = time.perf_counter() - t0
         n = max(1, int(m.interactions))
         # probe against the PRE-transaction state — the invariant is
         # "served item in the shortlist of the state it was chosen from"
-        recall = (shortlist_recall(self.session, catalog, user_ids, items,
+        recall = (shortlist_recall(self.session, cat, user_ids, items,
                                    k_short=k_short)
                   if probe_recall else None)
-        g = self._admit(sess, ctr=float(m.reward) / n, latency_s=dt,
-                        occupancy=_occupancy(sess), recall=recall,
-                        interactions=int(m.interactions))
+        g = self if self.catalog is None else dataclasses.replace(
+            self, catalog=cat)
+        g = g._admit(sess, ctr=float(m.reward) / n, latency_s=dt,
+                     occupancy=_occupancy(sess), recall=recall,
+                     interactions=int(m.interactions))
         return g, items, m
 
     def recommend(self, user_ids, contexts):
@@ -243,9 +319,27 @@ class Guarded:
         g = self._admit(sess, latency_s=dt, occupancy=_occupancy(sess))
         return g, choices, ids
 
+    def recommend_catalog(self, user_ids, catalog=None, *,
+                          k_short: int = 64):
+        """Issue against the (tracked) catalog on a buffer-enabled
+        session: returns ``(guarded, item_ids, decision_ids, slots,
+        ctx)``."""
+        cat = self._catalog_or_tracked(catalog)
+        t0 = time.perf_counter()
+        sess, items, ids, slots, ctx = session_mod.recommend_catalog(
+            self.session, user_ids, cat, k_short=k_short)
+        dt = time.perf_counter() - t0
+        g = self if self.catalog is None else dataclasses.replace(
+            self, catalog=cat)
+        g = g._admit(sess, latency_s=dt, occupancy=_occupancy(sess))
+        return g, items, ids, slots, ctx
+
     def observe_delayed(self, decision_ids, rewards, key=None):
+        """Delayed-feedback fold; with a tracked catalog the fold
+        quarantines churned-item feedback against the CURRENT epoch."""
         sess = session_mod.observe_delayed(self.session, decision_ids,
-                                           rewards, key=key)
+                                           rewards, key=key,
+                                           catalog=self.catalog)
         delivered = jnp.sum((decision_ids >= 0).astype(jnp.int32))
         n = max(1, int(delivered))
         ctr = float(jnp.sum(jnp.where(decision_ids >= 0, rewards, 0.0))) / n
@@ -257,6 +351,37 @@ class Guarded:
         """Feed an externally computed recall probe (e.g. a shadow
         replica comparing served items against its own oracle)."""
         return self._admit(self.session, recall=recall)
+
+    # -- guarded catalog churn ---------------------------------------------
+    def stage_churn(self, *, add=None, retire=None):
+        """Stage churn into the tracked catalog's shadow bank — serving
+        is untouched until :meth:`publish`.  ``retire`` [m] item ids,
+        ``add`` [m, d] embeddings.  Returns ``(guarded, slot_ids)``
+        (``slot_ids`` is None without ``add``)."""
+        from ..core import catalog as catalog_mod
+        cat = self._catalog_or_tracked(None)
+        slots = None
+        if retire is not None:
+            cat, _ = catalog_mod.retire_items(cat, retire)
+        if add is not None:
+            cat, slots, _ = catalog_mod.add_items(cat, add)
+        return dataclasses.replace(self, catalog=cat), slots
+
+    def publish(self, keep_mask=None) -> "Guarded":
+        """Atomically publish the staged catalog epoch and admit the
+        churn-rate sample (fraction of capacity changed) — a
+        ``churn_ceiling`` breach rolls BOTH state and catalog back to
+        the last snapshot.  ``keep_mask`` is fault injection only: a
+        torn publish via ``core.catalog.torn_publish``."""
+        from ..core import catalog as catalog_mod
+        cat = self._catalog_or_tracked(None)
+        churn = float(catalog_mod.staged_churn(cat)) / cat.capacity
+        if keep_mask is None:
+            cat = catalog_mod.publish(cat)
+        else:
+            cat = catalog_mod.torn_publish(cat, keep_mask)
+        g = dataclasses.replace(self, catalog=cat)
+        return g._admit(g.session, churn=churn)
 
 
 def _occupancy(session) -> float | None:

@@ -28,6 +28,17 @@ Layout and semantics
     of the same decision id finds no resident decision and is counted
     ``unmatched`` — never folded twice.  Duplicates INSIDE one feedback
     batch fold only their first occurrence.
+  * catalog churn: every decision records the catalog ``epoch`` it was
+    issued at.  When the serving layer passes a staleness mask to
+    :func:`match` (``serve.observe_delayed(..., catalog=...)``), matched
+    feedback whose item churned since issue — retired, slot re-claimed,
+    or more than ONE epoch behind the published catalog — is QUARANTINED:
+    the slot is freed and the entry counted ``stale``, never folded.
+
+Conservation identity (asserted by the churn fault suite): every issued
+decision resolves exactly once —
+
+    issued == matched + in_flight + expired + dropped + stale
 
 Every array is replicated on a sharded session (:func:`specs`): the
 enqueue consumes the psum-combined choice/context, so all shards hold
@@ -52,12 +63,15 @@ class PendingBuffer(NamedTuple):
     x: jnp.ndarray          # [C, d] f32 chosen context (the fold digest)
     decision: jnp.ndarray   # [C] i32 resident decision id (-1 = free)
     deadline: jnp.ndarray   # [C] i32 last clock at which feedback folds
+    epoch: jnp.ndarray      # [C] i32 catalog epoch the decision issued at
     next_id: jnp.ndarray    # [] i32 monotone decision-id counter
     clock: jnp.ndarray      # [] i32 issue-transaction counter
+    issued: jnp.ndarray     # [] i32 VALID decisions enqueued (no padding)
     expired: jnp.ndarray    # [] i32 decisions dropped on TTL
     dropped: jnp.ndarray    # [] i32 decisions evicted by backpressure
     matched: jnp.ndarray    # [] i32 feedback entries folded
     unmatched: jnp.ndarray  # [] i32 feedback with no resident decision
+    stale: jnp.ndarray      # [] i32 feedback quarantined (item churned)
 
     @property
     def capacity(self) -> int:
@@ -74,7 +88,9 @@ def init(capacity: int, d: int) -> PendingBuffer:
         x=jnp.zeros((capacity, d), jnp.float32),
         decision=jnp.full((capacity,), -1, jnp.int32),
         deadline=jnp.zeros((capacity,), jnp.int32),
-        next_id=z, clock=z, expired=z, dropped=z, matched=z, unmatched=z,
+        epoch=jnp.zeros((capacity,), jnp.int32),
+        next_id=z, clock=z, issued=z, expired=z, dropped=z, matched=z,
+        unmatched=z, stale=z,
     )
 
 
@@ -100,16 +116,21 @@ def in_flight(p: PendingBuffer) -> jnp.ndarray:
 
 
 def issue(p: PendingBuffer, uids: jnp.ndarray, choices: jnp.ndarray,
-          x: jnp.ndarray, valid: jnp.ndarray, ttl: int
+          x: jnp.ndarray, valid: jnp.ndarray, ttl: int,
+          epoch: jnp.ndarray | None = None
           ) -> tuple[PendingBuffer, jnp.ndarray]:
     """Tick the clock, expire overdue decisions, enqueue the batch.
 
     Returns ``(buffer, decision_ids [B] i32)`` — padding requests
     (``valid`` False) consume an id but are not enqueued and return -1.
-    ``ttl`` is static (part of the session's compiled-transaction key).
+    ``ttl`` is static (part of the session's compiled-transaction key);
+    ``epoch`` is the catalog epoch the batch was issued at (scalar i32;
+    None — the slate path — records 0).
     """
     B = uids.shape[0]
     C = p.uid.shape[0]
+    if epoch is None:
+        epoch = jnp.zeros((), jnp.int32)
     clock = p.clock + 1
     overdue = (p.uid >= 0) & (p.deadline < clock)
     p = p._replace(
@@ -128,12 +149,15 @@ def issue(p: PendingBuffer, uids: jnp.ndarray, choices: jnp.ndarray,
         x=p.x.at[tgt].set(x, mode="drop"),
         decision=p.decision.at[tgt].set(ids, mode="drop"),
         deadline=p.deadline.at[tgt].set(clock + ttl, mode="drop"),
+        epoch=p.epoch.at[tgt].set(epoch, mode="drop"),
         next_id=p.next_id + B,
+        issued=p.issued + jnp.sum(valid.astype(jnp.int32)),
         dropped=p.dropped + jnp.sum(evict.astype(jnp.int32)),
     ), jnp.where(valid, ids, -1)
 
 
-def match(p: PendingBuffer, ids: jnp.ndarray
+def match(p: PendingBuffer, ids: jnp.ndarray,
+          stale: jnp.ndarray | None = None
           ) -> tuple[PendingBuffer, jnp.ndarray, jnp.ndarray]:
     """Match a feedback batch by decision id and free the matched slots.
 
@@ -141,29 +165,51 @@ def match(p: PendingBuffer, ids: jnp.ndarray
     duplicate-safe fold — entries that matched nothing (lost to TTL,
     already folded, duplicated inside the batch, or id -1 padding) come
     back with uid -1, which the fold treats as padding.
+
+    ``stale [B]`` bool (from the serving layer's per-decision epoch/live
+    check) QUARANTINES: a matched-but-stale entry frees its slot and
+    counts ``stale`` instead of ``matched``, and surfaces as uid -1 so
+    the fold never sees churned-item feedback.
     """
     C = p.uid.shape[0]
+    if stale is None:
+        stale = jnp.zeros(ids.shape, bool)
     slot = jnp.mod(jnp.where(ids >= 0, ids, 0), C)
     resident = (ids >= 0) & (p.decision[slot] == ids)
     # in-batch dedup: only the FIRST occurrence of a decision id folds
     eq = (ids[:, None] == ids[None, :]) & (ids >= 0)[:, None]
     first = jnp.sum(jnp.tril(eq, k=-1), axis=1) == 0
     hit = resident & first
-    uids = jnp.where(hit, p.uid[slot], -1)
+    fold = hit & ~stale
+    quarantined = hit & stale
+    uids = jnp.where(fold, p.uid[slot], -1)
     x = p.x[slot]
-    tgt = jnp.where(hit, slot, C)
+    tgt = jnp.where(hit, slot, C)         # stale slots free too
     p = p._replace(
         uid=p.uid.at[tgt].set(-1, mode="drop"),
         decision=p.decision.at[tgt].set(-1, mode="drop"),
-        matched=p.matched + jnp.sum(hit.astype(jnp.int32)),
+        matched=p.matched + jnp.sum(fold.astype(jnp.int32)),
+        stale=p.stale + jnp.sum(quarantined.astype(jnp.int32)),
         unmatched=p.unmatched
         + jnp.sum(((ids >= 0) & ~hit).astype(jnp.int32)),
     )
     return p, uids, x
 
 
+def conservation_gap(p: PendingBuffer) -> int:
+    """issued - (matched + in_flight + expired + dropped + stale); zero
+    iff every issued decision is accounted for exactly once.  The churn
+    fault suite asserts this after every delivery."""
+    resolved = p.matched + in_flight(p) + p.expired + p.dropped + p.stale
+    return int(p.issued - resolved)
+
+
 def stats(p: PendingBuffer) -> dict[str, float]:
-    """Host-side counter snapshot (guardrails read ``occupancy``)."""
+    """Host-side counter snapshot (guardrails read ``occupancy``).
+    ``issued`` counts VALID enqueued decisions (padding consumes an id
+    but is never enqueued), so the conservation identity
+    ``issued == matched + in_flight + expired + dropped + stale`` holds
+    exactly on every buffer."""
     cap = p.capacity
     flight = int(in_flight(p))
     return {
@@ -171,9 +217,10 @@ def stats(p: PendingBuffer) -> dict[str, float]:
         "in_flight": flight,
         "occupancy": flight / cap,
         "clock": int(p.clock),
-        "issued": int(p.next_id),
+        "issued": int(p.issued),
         "matched": int(p.matched),
         "unmatched": int(p.unmatched),
         "expired": int(p.expired),
         "dropped": int(p.dropped),
+        "stale": int(p.stale),
     }

@@ -27,6 +27,11 @@ TTL with counted `expired`, all inside the jit transaction.  With zero
 delay the pair is bit-identical to the synchronous `step` (the buffer
 stores the exact psum-combined chosen context the fold needs), on
 single-host and sharded sessions alike (the buffer is replicated).
+Under live catalog churn (README "Live catalog churn") every catalog
+decision records its issue epoch, and `observe_delayed(...,
+catalog=current_catalog)` quarantines feedback whose item churned since
+issue — counted `stale`, extending the conservation identity to
+issued == matched + in_flight + expired + dropped + stale.
 
 Duplicate-user batches are EXACT.  A batch is decomposed by occurrence
 rank (item i's rank = how many earlier items carry the same user id) and
@@ -251,9 +256,10 @@ def _catalog_choose(policy, rb, col, state, user_ids, catalog):
     minv_eff = col.psum(jnp.where(own[:, None, None], minv_eff, 0.0))
     occ_rows = col.psum(jnp.where(own, occ_rows, 0))
 
-    n_local_items = catalog.live.shape[0]
+    bank = catalog.serving            # the ACTIVE double-buffer bank
+    n_local_items = bank.live.shape[0]
     row0_items = col.axis_index() * n_local_items
-    sc, ids = rb.shortlist(w, minv_eff, occ_rows, catalog.emb, catalog.live,
+    sc, ids = rb.shortlist(w, minv_eff, occ_rows, bank.emb, bank.live,
                            cfg.hyper.alpha, row0_items=row0_items)
     sc_all = col.all_gather(sc[None])           # [S, B, K_short]
     id_all = col.all_gather(ids[None])
@@ -268,7 +274,7 @@ def _catalog_choose(policy, rb, col, state, user_ids, catalog):
 
     loc = top_i - row0_items
     ok = (loc >= 0) & (loc < n_local_items)
-    rows = catalog.emb[jnp.clip(loc, 0, n_local_items - 1)]
+    rows = bank.emb[jnp.clip(loc, 0, n_local_items - 1)]
     ctx = col.psum(jnp.where(ok[..., None], rows, 0.0))   # [B, K_short, d]
 
     be_s = be.with_candidates(rb.K_short)
@@ -307,24 +313,58 @@ def _catalog_issue_body(policy, rb, ttl, col, state, pend, user_ids,
                         catalog):
     item, slot, ctx, x, (idx, own, valid, be) = _catalog_choose(
         policy, rb, col, state, user_ids, catalog)
-    pend, ids = pending_mod.issue(pend, user_ids, item, x, valid, ttl)
+    pend, ids = pending_mod.issue(pend, user_ids, item, x, valid, ttl,
+                                  epoch=catalog.epoch)
     return pend, item, ids, slot, ctx
 
 
 def _observe_delayed_body(policy, col, state, pend, key, decision_ids,
-                          rewards):
+                          rewards, stale=None):
     """Fold feedback matched by decision id: the matched slots supply the
     exact (uid, chosen-context) pair the synchronous fold would have
     used, so the delayed fold is bit-identical; unmatched entries
     (expired / already folded / in-batch duplicates / id -1 padding)
-    surface as uid -1 and fold as padding."""
-    pend, uids, x = pending_mod.match(pend, decision_ids)
+    surface as uid -1 and fold as padding, and ``stale``-masked entries
+    are quarantined by the match (freed + counted, never folded)."""
+    pend, uids, x = pending_mod.match(pend, decision_ids, stale=stale)
     idx, own, valid, be = _request_masks(policy, col, state, uids)
     state = _fold_feedback(policy, state, idx, own, valid, be, uids, x,
                            rewards)
     n_new = jnp.sum(valid.astype(jnp.int32))
     state = _schedule_refresh(policy, col, state, n_new, key)
     return state, pend
+
+
+def _stale_mask(col, pend, decision_ids, catalog):
+    """Per-delivery staleness against the CURRENT catalog: feedback for a
+    decision issued at epoch ``e`` folds iff the published epoch is at
+    most ``e + 1`` (the one-stale-epoch bound) AND its item is still
+    live in the active bank with ``born <= e`` (a retired-then-reclaimed
+    slot fails the born check even though it is live again).  Item
+    liveness is resolved per item shard and psum-combined, mirroring the
+    shortlist-row assembly.  Values at non-resident slots are garbage —
+    harmless, since ``match`` only applies the mask to hits."""
+    C = pend.uid.shape[0]
+    slot = jnp.mod(jnp.where(decision_ids >= 0, decision_ids, 0), C)
+    item = pend.choice[slot]
+    e_issue = pend.epoch[slot]
+    bank = catalog.serving
+    n_local = bank.live.shape[0]
+    row0 = col.axis_index() * n_local
+    loc = item - row0
+    in_range = (loc >= 0) & (loc < n_local)
+    li = jnp.clip(loc, 0, n_local - 1)
+    ok_here = in_range & (bank.live[li] > 0) & (bank.born[li] <= e_issue)
+    item_ok = col.psum(ok_here.astype(jnp.int32)) > 0
+    fresh = (catalog.epoch - e_issue) <= 1
+    return ~(item_ok & fresh)
+
+
+def _observe_delayed_catalog_body(policy, col, state, pend, key,
+                                  decision_ids, rewards, catalog):
+    stale = _stale_mask(col, pend, decision_ids, catalog)
+    return _observe_delayed_body(policy, col, state, pend, key,
+                                 decision_ids, rewards, stale=stale)
 
 
 def _refresh_body(policy, col, state, key):
@@ -484,6 +524,18 @@ def _observe_delayed_fn(policy, mesh, axes):
 
 
 @functools.lru_cache(maxsize=64)
+def _observe_delayed_catalog_fn(policy, mesh, axes):
+    def body(col, state, pend, key, decision_ids, rewards, catalog):
+        return _observe_delayed_catalog_body(policy, col, state, pend,
+                                             key, decision_ids, rewards,
+                                             catalog)
+    out = (policy.state_specs(axes) if mesh is not None else None,
+           pending_mod.specs())
+    return _bind_pending_tx(policy, body, mesh, axes, n_plain=4,
+                            out_specs=out, catalog=True)
+
+
+@functools.lru_cache(maxsize=64)
 def _force_refresh_fn(policy, mesh, axes):
     def body(col, state, key):
         return _refresh_body(policy, col, state, key)
@@ -619,8 +671,10 @@ class OnlineBandit:
     def observe(self, user_ids, contexts, choices, rewards, key=None):
         return observe(self, user_ids, contexts, choices, rewards, key=key)
 
-    def observe_delayed(self, decision_ids, rewards, key=None):
-        return observe_delayed(self, decision_ids, rewards, key=key)
+    def observe_delayed(self, decision_ids, rewards, key=None,
+                        catalog=None):
+        return observe_delayed(self, decision_ids, rewards, key=key,
+                               catalog=catalog)
 
     def reset_pending(self):
         return reset_pending(self)
@@ -748,7 +802,7 @@ def recommend_catalog(session: OnlineBandit, user_ids, catalog, *,
 
 
 def observe_delayed(session: OnlineBandit, decision_ids, rewards,
-                    key=None):
+                    key=None, catalog=None):
     """Fold a batch of delayed feedback matched by decision id.
 
     ``decision_ids [B] i32`` (id -1 = padding), ``rewards [B]`` realized
@@ -757,16 +811,33 @@ def observe_delayed(session: OnlineBandit, decision_ids, rewards,
     re-delivery counts ``unmatched`` and never double-folds; feedback for
     TTL-expired decisions is dropped.  Runs the same refresh schedule as
     :func:`observe` (``key`` drives the dccb gossip draw).  Returns the
-    updated session; read counters via :func:`pending_stats`."""
+    updated session; read counters via :func:`pending_stats`.
+
+    ``catalog`` — pass the CURRENT ``core.catalog.Catalog`` on a
+    catalog-serving session and churned-item feedback is QUARANTINED:
+    a matched decision folds only if its item survived in the active
+    bank (live, ``born`` no later than issue) and the published epoch is
+    at most one past its issue epoch; anything else frees the slot and
+    counts ``stale`` instead.  Without it, feedback folds regardless of
+    churn — correct for slate sessions, corrupt under catalog churn
+    (the bug the quarantine formalizes).  At zero churn both paths are
+    bit-identical."""
     if session.pending is None:
         raise ValueError(
             "observe_delayed needs a buffer-enabled session — create it "
             "with pending_capacity > 0")
     if key is None:
         key = jax.random.PRNGKey(0)
-    fn = _observe_delayed_fn(session.policy, session.mesh, session.axes)
-    state, pend = fn(session.state, session.pending, key, decision_ids,
-                     rewards)
+    if catalog is None:
+        fn = _observe_delayed_fn(session.policy, session.mesh,
+                                 session.axes)
+        state, pend = fn(session.state, session.pending, key,
+                         decision_ids, rewards)
+    else:
+        fn = _observe_delayed_catalog_fn(session.policy, session.mesh,
+                                         session.axes)
+        state, pend = fn(session.state, session.pending, key,
+                         decision_ids, rewards, catalog)
     return dataclasses.replace(session, state=state, pending=pend)
 
 

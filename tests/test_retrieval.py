@@ -147,16 +147,24 @@ def test_catalog_add_retire_roundtrip():
     assert int(cat.n_live()) == 6
     cat, n_ret = catalog_mod.retire_items(cat,
                                           jnp.array([1, 4, -1], jnp.int32))
-    assert int(cat.n_live()) == 4
     assert int(n_ret) == 2
+    # STAGED only: serving is untouched until the epoch flip
+    assert int(cat.n_live()) == 6 and int(cat.epoch) == 0
+    cat = catalog_mod.publish(cat)
+    assert int(cat.n_live()) == 4 and int(cat.epoch) == 1
     fresh = jnp.ones((3, D), jnp.float32)
     cat, slots, n_add = catalog_mod.add_items(cat, fresh)
     # lowest dead slots first: the two just-retired + the first spare
     np.testing.assert_array_equal(np.asarray(slots), [1, 4, 6])
     assert int(n_add) == 3
-    assert int(cat.n_live()) == 7
-    np.testing.assert_array_equal(np.asarray(cat.emb[slots]),
+    assert int(cat.n_live()) == 4           # still the published view
+    cat = catalog_mod.publish(cat)
+    assert int(cat.n_live()) == 7 and int(cat.epoch) == 2
+    np.testing.assert_array_equal(np.asarray(cat.serving.emb[slots]),
                                   np.asarray(fresh))
+    # arrivals are stamped with the epoch their publish created
+    np.testing.assert_array_equal(np.asarray(cat.serving.born[slots]),
+                                  [2, 2, 2])
 
 
 # ---------------------------------------------------------------------------
@@ -213,6 +221,7 @@ def test_step_catalog_folds_feedback_and_learns():
     e, cat = _catalog_world(n_users, n_items)
     retired = jnp.array([5, 50, 77], jnp.int32)
     cat, _ = serve.retire_items(cat, retired)
+    cat = serve.publish(cat)
     reward_fn = _theta_reward_fn(e.theta)
     uids = jnp.arange(n_users, dtype=jnp.int32)
     # a FIXED catalog needs real exploration pressure (fresh-slate tests
@@ -232,8 +241,8 @@ def test_step_catalog_folds_feedback_and_learns():
     assert not seen_items & set(np.asarray(retired).tolist())
     # uniform-random catalog baseline: mean expected reward of a live item
     p = 0.5 * (1.0 + e.theta @ env.catalog_embeddings(e).T)   # [n, N]
-    p_rand = jnp.sum(p * cat.live[None, :n_items], axis=1) / jnp.sum(
-        cat.live[:n_items])
+    p_rand = jnp.sum(p * cat.serving.live[None, :n_items],
+                     axis=1) / jnp.sum(cat.serving.live[:n_items])
     baseline = steps * float(jnp.sum(p_rand))
     assert tot_r > baseline * 1.1, (tot_r, baseline)
 
@@ -283,6 +292,7 @@ def test_item_sharded_8dev_matches_single_host():
                                     N_ITEMS, n_candidates=10)
         cat = serve.make_catalog(env.catalog_embeddings(e))
         cat, _ = serve.retire_items(cat, jnp.array([3, 17, 200], jnp.int32))
+        cat = serve.publish(cat)
         theta = e.theta
 
         def reward_fn(key, uids, ctx, choice):
@@ -328,6 +338,7 @@ def test_catalog_session_checkpoint_roundtrip(tmp_path):
     n_users, n_items = 16, 64
     e, cat = _catalog_world(n_users, n_items)
     cat, _ = serve.retire_items(cat, jnp.array([9, 30], jnp.int32))
+    cat = serve.publish(cat)
     reward_fn = _theta_reward_fn(e.theta)
     uids = jnp.arange(n_users, dtype=jnp.int32)
     sess = serve.OnlineBandit.create(n_users, D, HYPER, policy="distclub",
@@ -420,22 +431,24 @@ def test_add_items_partial_fill_beyond_capacity():
     are never overwritten."""
     cat = catalog_mod.random_catalog(jax.random.PRNGKey(1), 6, D,
                                      capacity=8)
-    before = np.asarray(cat.emb[:6]).copy()
+    before = np.asarray(cat.serving.emb[:6]).copy()
     fresh = jnp.arange(5 * D, dtype=jnp.float32).reshape(5, D)
     cat2, slots, n_add = catalog_mod.add_items(cat, fresh)
     np.testing.assert_array_equal(np.asarray(slots), [6, 7, -1, -1, -1])
     assert int(n_add) == 2
+    cat2 = catalog_mod.publish(cat2)
     assert int(cat2.n_live()) == 8
-    np.testing.assert_array_equal(np.asarray(cat2.emb[:6]), before)
-    np.testing.assert_array_equal(np.asarray(cat2.emb[6:]),
+    np.testing.assert_array_equal(np.asarray(cat2.serving.emb[:6]), before)
+    np.testing.assert_array_equal(np.asarray(cat2.serving.emb[6:]),
                                   np.asarray(fresh[:2]))
     # a full catalog accepts nothing, even a batch wider than capacity
     cat3, slots3, n3 = catalog_mod.add_items(
         cat2, jnp.ones((12, D), jnp.float32))
     assert int(n3) == 0
     assert np.all(np.asarray(slots3) == -1)
-    np.testing.assert_array_equal(np.asarray(cat3.emb),
-                                  np.asarray(cat2.emb))
+    np.testing.assert_array_equal(
+        np.asarray(catalog_mod.publish(cat3).serving.emb),
+        np.asarray(cat2.serving.emb))
 
 
 def test_retire_items_dead_dup_out_of_range_are_noops():
@@ -446,11 +459,13 @@ def test_retire_items_dead_dup_out_of_range_are_noops():
     cat, n1 = catalog_mod.retire_items(
         cat, jnp.array([2, 2, 5, -3, 99], jnp.int32))
     assert int(n1) == 1                 # only slot 2 was live
+    cat = catalog_mod.publish(cat)
     assert int(cat.n_live()) == 3
     cat, n2 = catalog_mod.retire_items(cat, jnp.array([2, 5], jnp.int32))
     assert int(n2) == 0                 # both already dead
-    assert int(cat.n_live()) == 3
-    # retire-then-readd lands back on the freed slot
+    assert int(catalog_mod.publish(cat).n_live()) == 3
+    # retire-then-readd stages back onto the freed slot (same shadow
+    # bank, so the staged retirement and the add compose)
     cat, slots, n3 = catalog_mod.add_items(cat,
                                            jnp.ones((1, D), jnp.float32))
     assert int(n3) == 1 and np.asarray(slots).tolist() == [2]
@@ -503,6 +518,7 @@ def test_step_catalog_underfull_shortlist_tiny_live_count():
     dead = jnp.array([i for i in range(64) if i not in (7, 21)],
                      jnp.int32)
     cat, n_ret = serve.retire_items(cat, dead)
+    cat = serve.publish(cat)
     assert int(n_ret) == 62 and int(cat.n_live()) == 2
     sess = serve.OnlineBandit.create(16, D, HYPER, policy="distclub",
                                      refresh_every=64)
