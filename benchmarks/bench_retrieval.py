@@ -29,6 +29,15 @@ runs the full two-stage ``step_catalog`` transaction with the modeled
 comm volume: ``O(B K_short S)`` merge words vs ``O(B N)`` for shipping
 dense scores.
 
+The ``pruned`` row exercises cluster-pruned retrieval (README
+"Cluster-pruned retrieval") on a region-structured catalog: item-side
+CLUB clusters + per-tile UCB upper bounds let the stream skip tiles
+whose bound cannot beat the running shortlist floor.  Pruning is EXACT
+(the row asserts the pruned shortlist bit-equal to unpruned), so the
+gated metric is pure savings: ``tiles_skipped_ratio`` (fraction of tile
+visits avoided, gate ≥ 0.5 at N=262144) and the modeled
+``hbm_cut_vs_unpruned_ratio``.
+
 Writes BENCH_retrieval.json at the repo root (tracked from PR 5 onward).
 """
 from __future__ import annotations
@@ -71,6 +80,16 @@ def hbm_words_streaming(N: int, d: int, k_short: int, block_users: int
                         ) -> float:
     """Streaming engine: catalog once per user block, shortlist out."""
     return N * d / block_users + d * d + d + 4 * k_short
+
+
+def hbm_words_pruned(N: int, d: int, k_short: int, block_users: int,
+                     tiles: int, skip_ratio: float) -> float:
+    """Cluster-pruned streaming: only ``(1 - skip_ratio)`` of the catalog
+    streams; adds the ``[T, d+3]`` cluster-bound table (read once per
+    user block) and the per-user ``[T]`` tile-bound row."""
+    return ((1.0 - skip_ratio) * N * d / block_users
+            + tiles * (d + 3) / block_users + tiles
+            + d * d + d + 4 * k_short)
 
 
 # ---- modeled sharded comm (f32 words per request batch) --------------------
@@ -165,6 +184,85 @@ def _reference_1m_row(repeats=1):
     return {"N_items": REFERENCE_1M, "batch": n, "d": D, "K_short": KSHORT,
             "backend": "reference", "completes_on_cpu": True,
             "streaming_us": 1e6 * secs}
+
+
+def _pruned_row(N=262144, tile_items=512, repeats=1):
+    """Cluster-pruned vs plain streaming on a region-structured catalog
+    (8 regions, tight item noise — the regime cluster pruning targets;
+    a structureless catalog degrades to ~0 skips, never to wrong
+    results).
+
+    The exactness check runs the SAME compiled kernel twice — real tile
+    bounds vs ``tb = +inf`` (skipping disabled) — and requires bit-equal
+    (score, id) shortlists.  That isolates the pruning logic: two
+    separately-compiled programs can differ in the last ulp from XLA
+    reduction reassociation, which flips near-ties and is not a property
+    of pruning (the serving path keeps both branches in one ``lax.cond``
+    program for the same reason; see tests/test_itemclub.py).  The
+    no-skip run doubles as the apples-to-apples unpruned wall-clock.
+    Raises if pruning is inexact or the skip ratio misses the 0.5
+    acceptance floor, so run.py's failure policy gates it."""
+    import numpy as np
+
+    from repro.core import env as env_mod
+    from repro.core import itemclub
+    from repro.kernels.topk.ops import topk_pruned
+    from repro.kernels.topk.ref import tile_bounds
+
+    e, _ = env_mod.make_catalog_env(jax.random.PRNGKey(0), BATCH, D, 8, N,
+                                    item_noise_scale=0.01)
+    cat = catalog_mod.make_catalog(env_mod.catalog_embeddings(e))
+    w = e.theta                      # unit-ish user params: realistic floors
+    Minv = jnp.broadcast_to(jnp.eye(D, dtype=jnp.float32), (BATCH, D, D))
+    occ = jax.random.randint(jax.random.PRNGKey(1), (BATCH,), 1, 100)
+
+    build_secs, cl = timed(itemclub.build_clusters, cat,
+                           tile_items=tile_items, n_anchors=512)
+
+    f = jax.jit(lambda w, M, o, c, tb: topk_pruned(
+        w, M, o, c.emb_sorted, c.live_sorted, c.perm, 0.3, KSHORT, tb,
+        use_pallas=False, row_block=4))
+    tb = tile_bounds(w, Minv, occ, 0.3, cl.tile_mu, cl.tile_r,
+                     cl.tile_xn, cl.tile_n)
+    tb_off = jnp.full_like(tb, jnp.inf)
+
+    jax.block_until_ready(f(w, Minv, occ, cl, tb))
+    p_secs, (sp, ip, skipped, total) = timed(f, w, Minv, occ, cl, tb,
+                                             repeats=repeats)
+    jax.block_until_ready(f(w, Minv, occ, cl, tb_off))
+    u_secs, (su, iu, _, _) = timed(f, w, Minv, occ, cl, tb_off,
+                                   repeats=repeats)
+
+    identical = bool(np.array_equal(np.asarray(iu), np.asarray(ip))
+                     and np.array_equal(np.asarray(su), np.asarray(sp)))
+    ratio = float(skipped) / float(total)
+    if not identical:
+        raise RuntimeError("pruned shortlist diverged from the no-skip "
+                           "run of the same kernel — the exactness "
+                           "invariant is broken")
+    if ratio < 0.5:
+        raise RuntimeError(
+            f"tiles_skipped_ratio {ratio:.3f} < 0.5 acceptance floor")
+
+    tiles = N // tile_items
+    bu = 128                    # engine user-block (matches shapes rows)
+    words_un = hbm_words_streaming(N, D, KSHORT, bu)
+    words_pr = hbm_words_pruned(N, D, KSHORT, bu, tiles, ratio)
+    rec = {
+        "N_items": N, "batch": BATCH, "d": D, "K_short": KSHORT,
+        "backend": "reference", "scenario": "regions8_noise0.01",
+        "tile_items": tile_items,
+        "tiles_skipped_ratio": ratio,
+        "pruned_ids_identical": identical,
+        "pruned_us": 1e6 * p_secs,
+        "unpruned_us": 1e6 * u_secs,
+        "cluster_build_us": 1e6 * build_secs,
+        "hbm_bytes_per_user_pruned": 4 * words_pr,
+        "hbm_cut_vs_unpruned_ratio": words_un / words_pr,
+    }
+    emit(f"retrieval_pruned_N{N}_B{BATCH}", rec["pruned_us"],
+         f"skip={ratio:.2f},unpruned_us={rec['unpruned_us']:.0f}")
+    return rec
 
 
 def _interpret_parity(n=16, d=16, N=512, k=8):
@@ -273,6 +371,9 @@ def main(quick: bool = False):
         "shapes": records,
         "reference_1M": _reference_1m_row(),
         "sharded_8dev": _sharded_row(),
+        # own top-level dict: its identity keys overlap shapes[0]'s, and
+        # check_regression paths must stay collision-free
+        "pruned": _pruned_row(repeats=1 if quick else 2),
         "interpret_parity": _interpret_parity(),
         # the headline gated scalar is shape-PINNED (the acceptance row),
         # not a min over the mode-dependent shape list — quick and full

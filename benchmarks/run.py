@@ -21,12 +21,16 @@ cheaply and gate the modeled metrics (``benchmarks.check_regression``).
 
 Failure policy: every sub-benchmark runs even if an earlier one fails,
 but any failure makes the harness exit non-zero and name the culprits —
-CI's quick-bench step is a real gate, not best-effort.
+CI's quick-bench step is a real gate, not best-effort.  Each
+sub-benchmark also runs under a wall-clock timeout (``--bench-timeout``,
+SIGALRM-based, so a hung jax compile or subprocess counts as a failure
+instead of wedging CI; no-op on platforms without SIGALRM).
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import signal
 import sys
 import traceback
 
@@ -50,19 +54,41 @@ def _bench_list(quick: bool):
     return benches
 
 
+def _call_with_timeout(fn, seconds: int):
+    """Run ``fn()`` under a SIGALRM deadline (main thread only; silently
+    unenforced where SIGALRM doesn't exist, e.g. Windows)."""
+    if seconds <= 0 or not hasattr(signal, "SIGALRM"):
+        return fn()
+
+    def _expired(signum, frame):
+        raise TimeoutError(f"benchmark exceeded --bench-timeout={seconds}s")
+
+    prev = signal.signal(signal.SIGALRM, _expired)
+    signal.alarm(seconds)
+    try:
+        return fn()
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, prev)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="engine benches only (interact/graph/drift/serve/"
                          "retrieval/faults/churn), reduced shapes/repeats, "
                          "a few minutes on one CPU core")
+    ap.add_argument("--bench-timeout", type=int, default=1800,
+                    help="per-sub-benchmark wall-clock limit in seconds "
+                         "(0 disables); a timeout is reported like any "
+                         "other bench failure")
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
     failures: list[str] = []
     for name, fn in _bench_list(args.quick):
         try:
-            fn()
+            _call_with_timeout(fn, args.bench_timeout)
         except Exception:
             traceback.print_exc()
             failures.append(name)

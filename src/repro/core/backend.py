@@ -45,7 +45,7 @@ from ..kernels.interact import ops as interact_ops
 from ..kernels.rank1 import ops as rank1_ops
 from ..kernels.rank1.ref import rank1_update_inv_ref
 from ..kernels.topk import ops as topk_ops
-from ..kernels.topk.ref import topk_ref
+from ..kernels.topk.ref import tile_bounds, topk_ref, topk_ref_pruned
 from . import clustering, linucb
 from .types import LinUCBState
 
@@ -334,6 +334,39 @@ class RetrievalBackend(NamedTuple):
                                  interpret=self.interpret)
         i = jnp.where(jnp.isfinite(s), i + row0_items, -1)
         return s, i
+
+    def shortlist_pruned(self, w, Minv, occ, items_sorted, live_sorted,
+                         ids_sorted, tile_mu, tile_r, tile_xn, tile_n,
+                         alpha):
+        """Cluster-pruned shortlist over a SORTED catalog slice
+        (``core.itemclub`` builds the layout): computes the per-(user,
+        tile) UCB upper bounds and streams only the tiles that can still
+        beat each user block's running shortlist floor.
+
+        Returns ``(scores [n, K_short], ids [n, K_short] i32 GLOBAL slot
+        ids, tiles_skipped [] i32, tile_visits_total [] i32)`` with the
+        shortlist BIT-EQUAL to :meth:`shortlist` over the unsorted slice
+        — ``ids_sorted`` carries the original slot ids (already global
+        on a sharded catalog: the cluster tables are replicated and each
+        shard takes its position range), so tie-breaks match exactly.
+        The caller is responsible for epoch freshness: these tables
+        describe the bank they were built from, and a stale table's
+        bounds are wrong — ``serve`` falls back to :meth:`shortlist`
+        when ``clusters.epoch != catalog.epoch``."""
+        tb = tile_bounds(w, Minv, occ, alpha, tile_mu, tile_r, tile_xn,
+                         tile_n)
+        if self.kind == "reference":
+            s, i, skipped, total = topk_ref_pruned(
+                w, Minv, occ, items_sorted, live_sorted, ids_sorted,
+                alpha, self.K_short, tb, row_block=self.row_block)
+        else:
+            s, i, skipped, total = topk_ops.topk_pruned(
+                w, Minv, occ, items_sorted, live_sorted, ids_sorted,
+                alpha, self.K_short, tb, use_pallas=True,
+                block_users=self.block_users, row_block=self.row_block,
+                interpret=self.interpret)
+        i = jnp.where(jnp.isfinite(s), i, -1)
+        return s, i, skipped, total
 
 
 def get_retrieval_backend(

@@ -15,8 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from ..pad import SUB, round_up, user_block
-from .ref import topk_ref
-from .topk import topk_pallas
+from .ref import topk_ref, topk_ref_pruned
+from .topk import topk_pallas, topk_pruned_pallas
 
 
 def topk(
@@ -68,3 +68,63 @@ def topk(
         block_users=bu, block_items=bt, interpret=interpret,
     )
     return scores[:n], ids[:n]
+
+
+def topk_pruned(
+    w: jnp.ndarray,        # [n, d]
+    Minv: jnp.ndarray,     # [n, d, d]
+    occ: jnp.ndarray,      # [n] i32
+    items: jnp.ndarray,    # [N, d] cluster-sorted catalog
+    live: jnp.ndarray,     # [N] f32/bool in sorted order
+    ids: jnp.ndarray,      # [N] i32 global slot ids of the sorted rows
+    alpha: float,
+    k_short: int,
+    tb: jnp.ndarray,       # [n, T] tile bounds; tile size = N // T
+    *,
+    use_pallas: bool | None = None,
+    block_users: int = 128,
+    row_block: int = 8,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Cluster-pruned top-K: (scores [n, k_short], ids [n, k_short],
+    tiles_skipped [], tile_visits_total []) — shortlist bit-equal to
+    :func:`topk`'s over the unsorted catalog (see ``ref.py``).
+
+    The item tile size is dictated by the bound table (``N // T``), not
+    a free block parameter: a tile is the pruning granule.  ``N`` must
+    be a tile multiple (``core.itemclub`` lays the sorted catalog out
+    that way); only users and the feature dim are padded here.  Padded
+    users carry ``tb = -inf`` so they always vote to skip."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    n, d = w.shape
+    N = items.shape[0]
+    T = tb.shape[1]
+    assert N % T == 0, (N, T)
+    if not use_pallas:
+        return topk_ref_pruned(w, Minv, occ, items, live, ids, alpha,
+                               k_short, tb, row_block=row_block)
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n_pad, bu = user_block(n, block_users)
+    d_pad = round_up(d, SUB)
+    bt = N // T
+
+    if (n, d) == (n_pad, d_pad):
+        wp, Mp, op, tbp = w, Minv, occ, tb
+        ip = items.astype(jnp.float32)
+    else:
+        wp = jnp.zeros((n_pad, d_pad), jnp.float32).at[:n, :d].set(w)
+        Mp = jnp.zeros((n_pad, d_pad, d_pad), jnp.float32
+                       ).at[:n, :d, :d].set(Minv)
+        op = jnp.zeros((n_pad,), occ.dtype).at[:n].set(occ)
+        tbp = jnp.full((n_pad, T), -jnp.inf, jnp.float32).at[:n].set(tb)
+        ip = jnp.zeros((N, d_pad), jnp.float32).at[:, :d].set(items)
+    scores, out_ids, sk = topk_pruned_pallas(
+        wp, Mp, op, ip, live.astype(jnp.float32), ids.astype(jnp.int32),
+        tbp, alpha, k_short,
+        block_users=bu, block_items=bt, interpret=interpret,
+    )
+    total = jnp.asarray(T * (n_pad // bu), jnp.int32)
+    return scores[:n], out_ids[:n], jnp.sum(sk).astype(jnp.int32), total

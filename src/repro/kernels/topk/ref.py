@@ -28,6 +28,20 @@ identical shortlist.
 The quadratic form is computed as ``vec(Minv) . vec(x x')`` — one
 ``[rows, d^2] x [d^2, tile]`` contraction — matching the Pallas kernel's
 MXU formulation bit for bit in interpret mode.
+
+Cluster-pruned variant (:func:`topk_ref_pruned`): the item stream is the
+cluster-SORTED catalog (``core.itemclub`` permutes slots so each tile
+holds one cluster's items) and every (user, tile) pair carries a
+precomputed upper bound ``tb`` (:func:`tile_bounds`).  A tile is skipped
+for a whole user row-block iff STRICTLY ``tb < floor`` for every user in
+the block, where ``floor`` is each user's running k-th shortlist score —
+any item in such a tile scores ``<= tb < floor``, i.e. strictly below k
+items already found, so it cannot enter the final shortlist even under
+(score, id) tie-breaks.  ``tb == floor`` must NOT skip (an equal-score
+item with a smaller id could still displace the floor entry), which is
+why the comparison is strict.  Because per-item score bits are
+tile-partition-invariant and :func:`select_topk` folds by value, the
+pruned shortlist is BIT-EQUAL to the unpruned one — ties, churn and all.
 """
 from __future__ import annotations
 
@@ -132,3 +146,161 @@ def topk_ref(
     out_s, out_i = jax.lax.map(block_fn, blocks)
     return (out_s.reshape(npad, k_short)[:n],
             out_i.reshape(npad, k_short)[:n])
+
+
+# ---------------------------------------------------------------------------
+# cluster-pruned streaming: per-tile UCB upper bounds + tile skipping
+# ---------------------------------------------------------------------------
+
+# absolute safety margin added to every tile bound: the bound math and the
+# per-item score use different f32 op orders, so without slack a rounding
+# wiggle of ~1e-6 could nudge a true bound below a real score and break
+# exactness.  1e-4 dwarfs any accumulation error at serving magnitudes
+# (scores are O(1)) while costing essentially no pruning.
+BOUND_SLACK = 1e-4
+
+
+@jax.jit
+def tile_bounds(
+    w: jnp.ndarray,        # [n, d] user score vectors
+    Minv: jnp.ndarray,     # [n, d, d] SPD
+    occ: jnp.ndarray,      # [n] i32
+    alpha: float | jnp.ndarray,
+    tile_mu: jnp.ndarray,  # [T, d] live-item tile centroids
+    tile_r: jnp.ndarray,   # [T] max live |x - mu| per tile
+    tile_xn: jnp.ndarray,  # [T] max live |x| per tile
+    tile_n: jnp.ndarray,   # [T] i32 live items per tile
+) -> jnp.ndarray:
+    """[n, T] f32 — a TRUE upper bound on every live item score per tile:
+
+        w.x                 <= w.mu + |w| r          (Cauchy-Schwarz)
+        |x|_Minv            <= min(|mu|_Minv + sqrt(lmax) r, sqrt(lmax) xn)
+                               (seminorm triangle ineq.; |v|_A <= sqrt(lmax)|v|)
+
+    so  tb = w.mu + |w| r + alpha sqrt(log1p(occ)) min(...) + BOUND_SLACK
+    dominates ``score[u, i]`` for every live ``i`` in the tile.  ``mu``
+    is just a reference point — the bound holds for the STORED centroid
+    whatever rounding produced it, as long as ``r >= max |x - mu|``.
+    Zero-live tiles bound to -inf (skippable as soon as any floor
+    exists).  The min keeps the bound tight both when a cluster is
+    compact (centroid term) and when Minv is diffuse (max-norm term)."""
+    n, d = w.shape
+    T = tile_mu.shape[0]
+    lmax = jnp.linalg.eigvalsh(Minv)[:, -1]            # [n] largest eig
+    sl = jnp.sqrt(jnp.maximum(lmax, 0.0))
+    est = w @ tile_mu.T + jnp.linalg.norm(w, axis=1)[:, None] * tile_r[None]
+    G = (tile_mu[:, None, :] * tile_mu[:, :, None]).reshape(T, d * d)
+    qmu = jnp.sqrt(jnp.maximum(Minv.reshape(n, d * d) @ G.T, 0.0))
+    conf = jnp.minimum(qmu + sl[:, None] * tile_r[None],
+                       sl[:, None] * tile_xn[None])
+    widen = jnp.sqrt(jnp.log1p(occ.astype(jnp.float32)))
+    tb = est + alpha * conf * widen[:, None] + BOUND_SLACK
+    return jnp.where(tile_n[None] > 0, tb, NEG_INF)
+
+
+@functools.partial(jax.jit, static_argnames=("k_short", "row_block"))
+def topk_ref_pruned(
+    w: jnp.ndarray,        # [n, d]
+    Minv: jnp.ndarray,     # [n, d, d]
+    occ: jnp.ndarray,      # [n] i32
+    items: jnp.ndarray,    # [N, d] cluster-SORTED catalog embeddings
+    live: jnp.ndarray,     # [N] f32/bool liveness in sorted order
+    ids: jnp.ndarray,      # [N] i32 GLOBAL slot id of each sorted row
+    alpha: float,
+    k_short: int,
+    tb: jnp.ndarray,       # [n, T] tile upper bounds (tile = N // T)
+    *,
+    row_block: int = 8,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(scores [n, k_short], ids [n, k_short] — BIT-EQUAL to the
+    unpruned shortlist over the unsorted catalog — plus
+    (tiles_skipped [], tile_visits_total []) i32 skip telemetry).
+
+    Selection buffers carry the ORIGINAL slot ids, so tie-breaks are by
+    slot id exactly as in the unpruned stream — the (score, id) multiset
+    is identical and :func:`select_topk` is value-based, hence
+    bit-equality.  Two orderings make skipping actually fire: users are
+    grouped into row blocks by their best-bound tile (per-user results
+    are independent, so permuting and un-permuting rows is exact), and
+    each block visits tiles in descending block-max bound order so the
+    shortlist floor is high before doubtful tiles are tested.  The skip
+    branch is a real ``lax.cond`` — a skipped tile's scoring work is
+    never executed, which is the wall-clock (and modeled-HBM) win."""
+    n, d = w.shape
+    N = items.shape[0]
+    T = tb.shape[1]
+    assert N % T == 0, (N, T)
+    ib = N // T
+    rb = min(row_block, n)
+    npad = _round_up(n, rb)
+
+    # group users whose best tile coincides: a row block only skips a
+    # tile when ALL of its users agree, so coherence is the lever
+    order = jnp.argsort(jnp.argmax(tb, axis=1), stable=True).astype(jnp.int32)
+    inv = jnp.argsort(order).astype(jnp.int32)
+    pad_u = npad - n
+    w_p = jnp.pad(w[order], ((0, pad_u), (0, 0)))
+    mf = jnp.pad(Minv.reshape(n, d * d)[order], ((0, pad_u), (0, 0)))
+    widen = jnp.pad(jnp.sqrt(jnp.log1p(occ.astype(jnp.float32)))[order],
+                    (0, pad_u))
+    # padded users bound every tile at -inf: they vote "skip" as soon as
+    # their (all-zero-statistics) floor leaves -inf, so they never keep a
+    # tile alive that the real users would prune
+    tb_p = jnp.pad(tb[order], ((0, pad_u), (0, 0)),
+                   constant_values=NEG_INF)
+    items_f = items.astype(jnp.float32)
+    live_f = live.astype(jnp.float32)
+    ids_i = ids.astype(jnp.int32)
+
+    def block_fn(blk):
+        w_b, mf_b, f_b, tb_b = blk        # [rb,d] [rb,d^2] [rb] [rb,T]
+        # likeliest tiles first: the floor saturates within the first
+        # visited tiles, then everything that cannot beat it skips
+        tile_order = jnp.argsort(-jnp.max(tb_b, axis=0)).astype(jnp.int32)
+
+        def tile_step(carry, j):
+            run_s, run_i, skipped = carry
+            t = tile_order[j]
+            floor = run_s[:, k_short - 1]
+            skip = jnp.all(tb_b[:, t] < floor)     # STRICT: ties rescore
+
+            def do_skip(c):
+                rs, ri, sk = c
+                return rs, ri, sk + 1
+
+            def do_score(c):
+                rs, ri, sk = c
+                x = jax.lax.dynamic_slice_in_dim(items_f, t * ib, ib)
+                lv = jax.lax.dynamic_slice_in_dim(live_f, t * ib, ib)
+                iv = jax.lax.dynamic_slice_in_dim(ids_i, t * ib, ib)
+                G = (x[:, None, :] * x[:, :, None]).reshape(ib, d * d)
+                est = w_b @ x.T
+                quad = mf_b @ G.T
+                s = est + alpha * jnp.sqrt(
+                    jnp.maximum(quad, 0.0)) * f_b[:, None]
+                s = jnp.where(lv[None, :] > 0, s, NEG_INF)
+                buf_s = jnp.concatenate([rs, s], axis=1)
+                buf_i = jnp.concatenate(
+                    [ri, jnp.broadcast_to(iv[None], (rb, ib))], axis=1)
+                out_s, out_i = select_topk(buf_s, buf_i, k_short)
+                return out_s, out_i, sk
+
+            return jax.lax.cond(skip, do_skip, do_score,
+                                (run_s, run_i, skipped)), None
+
+        init = (jnp.full((rb, k_short), NEG_INF, jnp.float32),
+                jnp.full((rb, k_short), -1, jnp.int32),
+                jnp.zeros((), jnp.int32))
+        (out_s, out_i, sk), _ = jax.lax.scan(
+            tile_step, init, jnp.arange(T, dtype=jnp.int32))
+        return out_s, out_i, sk
+
+    blocks = (w_p.reshape(npad // rb, rb, d),
+              mf.reshape(npad // rb, rb, d * d),
+              widen.reshape(npad // rb, rb),
+              tb_p.reshape(npad // rb, rb, T))
+    out_s, out_i, sk = jax.lax.map(block_fn, blocks)
+    total = jnp.asarray(T * (npad // rb), jnp.int32)
+    return (out_s.reshape(npad, k_short)[:n][inv],
+            out_i.reshape(npad, k_short)[:n][inv],
+            jnp.sum(sk).astype(jnp.int32), total)

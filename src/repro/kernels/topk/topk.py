@@ -42,6 +42,20 @@ from jax.experimental import pallas as pl
 
 from .ref import NEG_INF, select_topk
 
+# The pruned variant (`topk_pruned_pallas`) streams the cluster-SORTED
+# catalog with a [Bu, T] tile-bound table resident per user block: before
+# a tile's compute fires, the bound column is compared against the
+# running shortlist floor and `pl.when` predicates the whole
+# score+merge step off when no user in the block can be improved —
+# the tile's MXU work is skipped and a revisited [1, 1] counter block
+# accumulates how many tiles were.  Tiles arrive in natural order (the
+# reference path's bound-descending visit order needs data-dependent
+# index maps — `pltpu.PrefetchScalarGridSpec`, future TPU work), so the
+# skip ratio trails the reference oracle's; exactness does not: per-item
+# score bits and the value-based `select_topk` fold are identical, and
+# the selection buffers carry ORIGINAL slot ids, so ties break exactly
+# as in the unpruned stream.
+
 
 def _topk_kernel(w_ref, minv_ref, occ_ref, items_ref, live_ref, scal_ref,
                  sc_ref, id_ref, *, k_short: int):
@@ -130,3 +144,109 @@ def topk_pallas(
         ],
         interpret=interpret,
     )(w, Minv, occ, items, live, scal)
+
+
+def _topk_pruned_kernel(w_ref, minv_ref, occ_ref, items_ref, live_ref,
+                        ids_ref, tb_ref, scal_ref, sc_ref, id_ref, sk_ref,
+                        *, k_short: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _():
+        bu = w_ref.shape[0]
+        sc_ref[...] = jnp.full((bu, k_short), NEG_INF, jnp.float32)
+        id_ref[...] = jnp.full((bu, k_short), -1, jnp.int32)
+        sk_ref[...] = jnp.zeros((1, 1), jnp.int32)
+
+    floor = sc_ref[:, k_short - 1]
+    # STRICT <: a bound equal to the floor may hold an equal-score item
+    # with a smaller id, which would displace the floor entry
+    skip = jnp.all(tb_ref[:, t] < floor)
+    sk_ref[...] = sk_ref[...] + skip.astype(jnp.int32)
+
+    @pl.when(~skip)
+    def _():
+        w = w_ref[...]                     # [Bu, d]
+        minv = minv_ref[...]               # [Bu, d, d]
+        occ = occ_ref[...]                 # [Bu]
+        x = items_ref[...]                 # [Bt, d]
+        live = live_ref[...]               # [Bt]
+        alpha = scal_ref[0]
+        bu, d = w.shape
+        bt = x.shape[0]
+        est = jax.lax.dot_general(
+            w, x,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        G = (x[:, None, :] * x[:, :, None]).reshape(bt, d * d)
+        quad = jax.lax.dot_general(
+            minv.reshape(bu, d * d), G,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        widen = jnp.sqrt(jnp.log1p(occ.astype(jnp.float32)))
+        s = est + alpha * jnp.sqrt(jnp.maximum(quad, 0.0)) * widen[:, None]
+        s = jnp.where(live[None, :] > 0, s, NEG_INF)
+        ids = jnp.broadcast_to(ids_ref[...][None], (bu, bt))
+        buf_s = jnp.concatenate([sc_ref[...], s], axis=1)
+        buf_i = jnp.concatenate([id_ref[...], ids], axis=1)
+        out_s, out_i = select_topk(buf_s, buf_i, k_short)
+        sc_ref[...] = out_s
+        id_ref[...] = out_i
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k_short", "block_users", "block_items",
+                                    "interpret"))
+def topk_pruned_pallas(
+    w: jnp.ndarray,        # [n, d]        (n % block_users == 0)
+    Minv: jnp.ndarray,     # [n, d, d]
+    occ: jnp.ndarray,      # [n] i32
+    items: jnp.ndarray,    # [N, d] cluster-sorted (N % block_items == 0)
+    live: jnp.ndarray,     # [N] f32
+    ids: jnp.ndarray,      # [N] i32 global slot ids of the sorted rows
+    tb: jnp.ndarray,       # [n, T] tile bounds, T == N // block_items
+    alpha: float,
+    k_short: int,
+    *,
+    block_users: int = 128,
+    block_items: int = 512,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(scores [n, k_short], ids [n, k_short] i32,
+    skipped [n // block_users, 1] i32 — tiles skipped per user block)."""
+    n, d = w.shape
+    N = items.shape[0]
+    assert n % block_users == 0, (n, block_users)
+    assert N % block_items == 0, (N, block_items)
+    T = N // block_items
+    assert tb.shape == (n, T), (tb.shape, n, T)
+    grid = (n // block_users, T)
+    scal = jnp.array([alpha], jnp.float32)
+
+    return pl.pallas_call(
+        functools.partial(_topk_pruned_kernel, k_short=k_short),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_users, d), lambda i, t: (i, 0)),
+            pl.BlockSpec((block_users, d, d), lambda i, t: (i, 0, 0)),
+            pl.BlockSpec((block_users,), lambda i, t: (i,)),
+            pl.BlockSpec((block_items, d), lambda i, t: (t, 0)),
+            pl.BlockSpec((block_items,), lambda i, t: (t,)),
+            pl.BlockSpec((block_items,), lambda i, t: (t,)),
+            pl.BlockSpec((block_users, T), lambda i, t: (i, 0)),
+            pl.BlockSpec((1,), lambda i, t: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_users, k_short), lambda i, t: (i, 0)),
+            pl.BlockSpec((block_users, k_short), lambda i, t: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, t: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k_short), jnp.float32),
+            jax.ShapeDtypeStruct((n, k_short), jnp.int32),
+            jax.ShapeDtypeStruct((n // block_users, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(w, Minv, occ, items, live, ids, tb, scal)

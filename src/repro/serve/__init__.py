@@ -32,6 +32,17 @@ the shortlist, never materializing ``[B, N_items]`` scores::
         session, key, user_ids, cat, reward_fn, k_short=64)
     item_ids, slots, ctx = serve.recommend_catalog(session, user_ids, cat)
 
+Cluster-pruned retrieval (README "Cluster-pruned retrieval"): learn the
+catalog's item-side cluster structure online and let the top-K stream
+skip whole tiles — EXACTLY (served items bit-identical to unpruned)::
+
+    clusters = serve.build_clusters(cat, stats)      # stage-2 cadence
+    session, item_ids, metrics, rmet = serve.step_catalog(
+        session, key, user_ids, cat, reward_fn, clusters=clusters)
+    # rmet.skip_ratio() -> fraction of catalog tiles never streamed;
+    # after serve.publish the table is stale -> automatic unpruned
+    # fallback until serve.refresh_clusters rebuilds it
+
 Fault-tolerant feedback (README "Fault tolerance & guardrails"): create
 the session with ``pending_capacity > 0`` and the request half ISSUES —
 ``recommend`` returns ``(session, choices, decision_ids)``, enqueuing
@@ -50,6 +61,9 @@ remains (README "Online serving API" has the migration notes).
 from ..core.catalog import (Bank, Catalog, add_items, make_catalog,
                             publish, random_catalog, retire_items,
                             staged_churn, torn_publish)
+from ..core.itemclub import (ItemClusters, ItemStats, RetrievalMetrics,
+                             build_clusters, init_stats, observe_served,
+                             refresh_clusters, reset_new_slots)
 from .faults import FaultReport, FaultSpec, run_faulted, run_faulted_catalog
 from .guardrails import (Guarded, GuardrailConfig, GuardrailState,
                          shortlist_recall)
@@ -66,12 +80,15 @@ from .session import (OnlineBandit, embed_candidates, observe,
 __all__ = [
     "Bank", "Catalog", "POLICIES", "ClusteredPolicy", "ClusteredState",
     "DCCBPolicy", "DCCBServeState", "FaultReport", "FaultSpec",
-    "Guarded", "GuardrailConfig", "GuardrailState", "LinUCBPolicy",
-    "LinUCBServeState", "OnlineBandit", "PendingBuffer", "ServeCfg",
-    "add_items", "embed_candidates", "from_distclub_state", "get_policy",
+    "Guarded", "GuardrailConfig", "GuardrailState", "ItemClusters",
+    "ItemStats", "LinUCBPolicy", "LinUCBServeState", "OnlineBandit",
+    "PendingBuffer", "RetrievalMetrics", "ServeCfg",
+    "add_items", "build_clusters", "embed_candidates",
+    "from_distclub_state", "get_policy", "init_stats",
     "make_catalog", "make_cfg", "observe", "observe_delayed",
-    "pending_stats", "publish", "random_catalog", "recommend",
-    "recommend_catalog", "refresh", "reset_pending", "retire_items",
+    "observe_served", "pending_stats", "publish", "random_catalog",
+    "recommend", "recommend_catalog", "refresh", "refresh_clusters",
+    "reset_new_slots", "reset_pending", "retire_items",
     "run_faulted", "run_faulted_catalog", "shortlist_recall",
     "staged_churn", "step", "step_catalog", "to_distclub_state",
     "torn_publish",

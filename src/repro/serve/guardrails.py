@@ -87,6 +87,7 @@ class GuardrailState:
     ema_occupancy: float | None = None
     ema_latency_s: float | None = None
     ema_churn: float | None = None
+    ema_tiles_skipped: float | None = None
     interactions: int = 0
     cooldown_left: int = 0
     breaches: tuple = ()
@@ -102,11 +103,15 @@ def update(cfg: GuardrailConfig, gs: GuardrailState, *,
            occupancy: float | None = None,
            latency_s: float | None = None,
            churn: float | None = None,
+           tiles_skipped: float | None = None,
            interactions: int = 0) -> GuardrailState:
     """Fold one transaction's samples and re-evaluate every monitor.
     Rate monitors (ctr/recall) arm after ``warmup`` interactions;
     resource monitors (occupancy/latency/churn) arm immediately;
-    everything is disarmed during a rollback cooldown."""
+    everything is disarmed during a rollback cooldown.
+    ``tiles_skipped`` (pruned-retrieval skip ratio) is TELEMETRY only —
+    pruning is exact, so a low ratio costs latency, never correctness;
+    the latency ceiling is the monitor that bites when it collapses."""
     ema_ctr = gs.ema_ctr if ctr is None else _ema(gs.ema_ctr, ctr, cfg.ema)
     ema_recall = (gs.ema_recall if recall is None
                   else _ema(gs.ema_recall, recall, cfg.ema))
@@ -116,6 +121,8 @@ def update(cfg: GuardrailConfig, gs: GuardrailState, *,
                else _ema(gs.ema_latency_s, latency_s, cfg.ema))
     ema_churn = (gs.ema_churn if churn is None
                  else _ema(gs.ema_churn, churn, cfg.ema))
+    ema_tiles = (gs.ema_tiles_skipped if tiles_skipped is None
+                 else _ema(gs.ema_tiles_skipped, tiles_skipped, cfg.ema))
     seen = gs.interactions + int(interactions)
     cooldown_left = max(0, gs.cooldown_left - 1)
 
@@ -136,7 +143,8 @@ def update(cfg: GuardrailConfig, gs: GuardrailState, *,
             breaches.append("churn_ceiling")
     return dataclasses.replace(
         gs, ema_ctr=ema_ctr, ema_recall=ema_recall, ema_occupancy=ema_occ,
-        ema_latency_s=ema_lat, ema_churn=ema_churn, interactions=seen,
+        ema_latency_s=ema_lat, ema_churn=ema_churn,
+        ema_tiles_skipped=ema_tiles, interactions=seen,
         cooldown_left=cooldown_left, breaches=tuple(breaches))
 
 
@@ -289,12 +297,26 @@ class Guarded:
         return cat
 
     def step_catalog(self, key, user_ids, catalog=None, reward_fn=None, *,
-                     k_short: int = 64, probe_recall: bool = False):
+                     k_short: int = 64, probe_recall: bool = False,
+                     clusters=None):
+        """``clusters`` routes the transaction through cluster-pruned
+        retrieval (`serve.step_catalog`); the skip ratio feeds the
+        ``ema_tiles_skipped`` telemetry and the return gains the
+        ``RetrievalMetrics``.  ``probe_recall`` keeps comparing the
+        SERVED items against the fresh UNPRUNED oracle shortlist — on the
+        pruned path that is precisely the exactness invariant, so the
+        recall-floor monitor guards the pruning machinery itself."""
         cat = self._catalog_or_tracked(catalog)
         t0 = time.perf_counter()
-        sess, items, m = session_mod.step_catalog(
-            self.session, key, user_ids, cat, reward_fn,
-            k_short=k_short)
+        if clusters is None:
+            sess, items, m = session_mod.step_catalog(
+                self.session, key, user_ids, cat, reward_fn,
+                k_short=k_short)
+            rmet = None
+        else:
+            sess, items, m, rmet = session_mod.step_catalog(
+                self.session, key, user_ids, cat, reward_fn,
+                k_short=k_short, clusters=clusters)
         dt = time.perf_counter() - t0
         n = max(1, int(m.interactions))
         # probe against the PRE-transaction state — the invariant is
@@ -306,8 +328,12 @@ class Guarded:
             self, catalog=cat)
         g = g._admit(sess, ctr=float(m.reward) / n, latency_s=dt,
                      occupancy=_occupancy(sess), recall=recall,
+                     tiles_skipped=(None if rmet is None
+                                    else rmet.skip_ratio()),
                      interactions=int(m.interactions))
-        return g, items, m
+        if clusters is None:
+            return g, items, m
+        return g, items, m, rmet
 
     def recommend(self, user_ids, contexts):
         """Issue on a buffer-enabled session (monitors latency and ring
@@ -320,19 +346,31 @@ class Guarded:
         return g, choices, ids
 
     def recommend_catalog(self, user_ids, catalog=None, *,
-                          k_short: int = 64):
+                          k_short: int = 64, clusters=None):
         """Issue against the (tracked) catalog on a buffer-enabled
         session: returns ``(guarded, item_ids, decision_ids, slots,
-        ctx)``."""
+        ctx)`` — plus a trailing ``RetrievalMetrics`` when ``clusters``
+        routes it through pruned retrieval."""
         cat = self._catalog_or_tracked(catalog)
         t0 = time.perf_counter()
-        sess, items, ids, slots, ctx = session_mod.recommend_catalog(
-            self.session, user_ids, cat, k_short=k_short)
+        if clusters is None:
+            sess, items, ids, slots, ctx = session_mod.recommend_catalog(
+                self.session, user_ids, cat, k_short=k_short)
+            rmet = None
+        else:
+            (sess, items, ids, slots, ctx,
+             rmet) = session_mod.recommend_catalog(
+                self.session, user_ids, cat, k_short=k_short,
+                clusters=clusters)
         dt = time.perf_counter() - t0
         g = self if self.catalog is None else dataclasses.replace(
             self, catalog=cat)
-        g = g._admit(sess, latency_s=dt, occupancy=_occupancy(sess))
-        return g, items, ids, slots, ctx
+        g = g._admit(sess, latency_s=dt, occupancy=_occupancy(sess),
+                     tiles_skipped=(None if rmet is None
+                                    else rmet.skip_ratio()))
+        if clusters is None:
+            return g, items, ids, slots, ctx
+        return g, items, ids, slots, ctx, rmet
 
     def observe_delayed(self, decision_ids, rewards, key=None):
         """Delayed-feedback fold; with a tracked catalog the fold

@@ -81,6 +81,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from ..core import catalog as catalog_mod
+from ..core import itemclub as itemclub_mod
 from ..core.backend import get_retrieval_backend
 from ..core.types import BanditHyper, Metrics
 from ..kernels.topk.ref import select_topk
@@ -228,7 +229,8 @@ def _observe_body(policy, col, state, key, user_ids, contexts, choices,
 # ---------------------------------------------------------------------------
 
 
-def _catalog_choose(policy, rb, col, state, user_ids, catalog):
+def _catalog_choose(policy, rb, col, state, user_ids, catalog,
+                    clusters=None):
     """Two-stage choose against a persistent (item-sharded) catalog.
 
     Stage 1 (shortlist): the request users' statistics are psum-replicated
@@ -238,6 +240,19 @@ def _catalog_choose(policy, rb, col, state, user_ids, catalog):
     order the kernel itself selects in, so the merged list is bit-equal
     to a single-host shortlist over the whole catalog (comm:
     ``O(B K_short shards)`` words, never ``O(B N_items)``).
+
+    With ``clusters`` (a replicated ``core.itemclub.ItemClusters``) stage
+    1 runs CLUSTER-PRUNED: each shard streams its position range of the
+    cluster-sorted catalog and skips tiles whose UCB upper bound cannot
+    beat the running shortlist floor — EXACT (the shortlist is bit-equal
+    to the unpruned one; ``kernels/topk/ref.py``), and since the sorted
+    stream carries global slot ids, the per-shard merge is too.  The
+    churn-safety rule is enforced HERE, inside the jit transaction: if
+    the cluster table's epoch does not match the catalog's (a `publish`
+    landed after the last rebuild), the whole batch falls back to the
+    unpruned stream — stale bounds are never trusted.  The last returned
+    value is then a ``RetrievalMetrics`` (psum-combined tile skip counts
+    + whether pruning was active); None when no clusters were given.
 
     Stage 2 (choose): shortlist embeddings are assembled by a one-hot
     psum (each shard contributes the rows it owns) and ranked by the
@@ -259,8 +274,35 @@ def _catalog_choose(policy, rb, col, state, user_ids, catalog):
     bank = catalog.serving            # the ACTIVE double-buffer bank
     n_local_items = bank.live.shape[0]
     row0_items = col.axis_index() * n_local_items
-    sc, ids = rb.shortlist(w, minv_eff, occ_rows, bank.emb, bank.live,
-                           cfg.hyper.alpha, row0_items=row0_items)
+    if clusters is None:
+        sc, ids = rb.shortlist(w, minv_eff, occ_rows, bank.emb, bank.live,
+                               cfg.hyper.alpha, row0_items=row0_items)
+        rmet = None
+    else:
+        shard_tabs = itemclub_mod.shard_slice(clusters, col.axis_index(),
+                                              n_local_items)
+        fresh = clusters.epoch == catalog.epoch
+
+        def _pruned(_):
+            emb_s, live_s, ids_s, t_mu, t_r, t_xn, t_n = shard_tabs
+            return rb.shortlist_pruned(w, minv_eff, occ_rows, emb_s,
+                                       live_s, ids_s, t_mu, t_r, t_xn,
+                                       t_n, cfg.hyper.alpha)
+
+        def _unpruned(_):
+            s, i = rb.shortlist(w, minv_eff, occ_rows, bank.emb,
+                                bank.live, cfg.hyper.alpha,
+                                row0_items=row0_items)
+            z = jnp.zeros((), jnp.int32)
+            return s, i, z, z
+
+        sc, ids, skipped, total = jax.lax.cond(fresh, _pruned, _unpruned,
+                                               None)
+        rmet = itemclub_mod.RetrievalMetrics(
+            tiles_skipped=col.psum(skipped),
+            tiles_total=col.psum(total),
+            pruned_active=fresh.astype(jnp.int32),
+        )
     sc_all = col.all_gather(sc[None])           # [S, B, K_short]
     id_all = col.all_gather(ids[None])
     B = user_ids.shape[0]
@@ -281,17 +323,19 @@ def _catalog_choose(policy, rb, col, state, user_ids, catalog):
     x, slot = be_s.choose(w, minv_eff, ctx, occ_rows, cfg.hyper.alpha)
     item = jnp.take_along_axis(top_i, slot[:, None], axis=1)[:, 0]
     item = jnp.where(valid, item, -1)
-    return item, slot, ctx, x, (idx, own, valid, be)
+    return item, slot, ctx, x, (idx, own, valid, be), rmet
 
 
 def _catalog_step_body(policy, rb, reward_fn, col, state, key, user_ids,
-                       catalog):
-    item, slot, ctx, x, (idx, own, valid, be) = _catalog_choose(
-        policy, rb, col, state, user_ids, catalog)
+                       catalog, clusters=None):
+    item, slot, ctx, x, (idx, own, valid, be), rmet = _catalog_choose(
+        policy, rb, col, state, user_ids, catalog, clusters)
     rewards = _normalize_rewards(reward_fn(key, user_ids, ctx, slot))
     state, metrics = _apply_feedback(policy, col, state, key, idx, own,
                                      valid, be, user_ids, x, rewards)
-    return state, item, metrics
+    if clusters is None:
+        return state, item, metrics
+    return state, item, metrics, rmet
 
 
 # ---------------------------------------------------------------------------
@@ -310,12 +354,14 @@ def _issue_body(policy, ttl, col, state, pend, user_ids, contexts):
 
 
 def _catalog_issue_body(policy, rb, ttl, col, state, pend, user_ids,
-                        catalog):
-    item, slot, ctx, x, (idx, own, valid, be) = _catalog_choose(
-        policy, rb, col, state, user_ids, catalog)
+                        catalog, clusters=None):
+    item, slot, ctx, x, (idx, own, valid, be), rmet = _catalog_choose(
+        policy, rb, col, state, user_ids, catalog, clusters)
     pend, ids = pending_mod.issue(pend, user_ids, item, x, valid, ttl,
                                   epoch=catalog.epoch)
-    return pend, item, ids, slot, ctx
+    if clusters is None:
+        return pend, item, ids, slot, ctx
+    return pend, item, ids, slot, ctx, rmet
 
 
 def _observe_delayed_body(policy, col, state, pend, key, decision_ids,
@@ -430,17 +476,19 @@ def _observe_fn(policy, mesh, axes):
     return _bind_tx(policy, body, mesh, axes)
 
 
-def _bind_catalog_tx(policy, body, mesh, axes, n_plain, out_specs):
-    """Like ``_bind_tx`` but the LAST argument is a Catalog sharded on
-    the ITEM axis over the same mesh axes the user state shards on (the
-    ``n_plain`` args before it are replicated request inputs)."""
+def _bind_catalog_tx(policy, body, mesh, axes, n_plain, out_specs,
+                     tail_specs=()):
+    """Like ``_bind_tx`` but the trailing arguments after the ``n_plain``
+    replicated request inputs are a Catalog sharded on the ITEM axis over
+    the same mesh axes the user state shards on, then any ``tail_specs``
+    extras (e.g. a replicated ``ItemClusters`` on the pruned path)."""
     if mesh is None:
         return jax.jit(functools.partial(body, _NULL))
     col = lax_collectives(mesh, axes)
     bound = functools.partial(body, col)
     in_specs = ((policy.state_specs(axes),)
                 + tuple(P() for _ in range(n_plain))
-                + (catalog_mod.specs(axes),))
+                + (catalog_mod.specs(axes),) + tuple(tail_specs))
 
     def wrap(state, *args):
         mapped = shard_map(
@@ -452,30 +500,43 @@ def _bind_catalog_tx(policy, body, mesh, axes, n_plain, out_specs):
     return jax.jit(wrap)
 
 
+_RMET_SPECS = itemclub_mod.RetrievalMetrics(P(), P(), P())
+
+
 @functools.lru_cache(maxsize=64)
-def _catalog_step_fn(policy, rb, reward_fn, mesh, axes):
+def _catalog_step_fn(policy, rb, reward_fn, mesh, axes, pruned=False):
     body = functools.partial(_catalog_step_body, policy, rb, reward_fn)
     out = ((policy.state_specs(axes) if mesh is not None else None),
            P(), Metrics(P(), P(), P(), P()))
+    if pruned:
+        out = out + (_RMET_SPECS,)
     return _bind_catalog_tx(policy, body, mesh, axes, n_plain=2,
-                            out_specs=out)
+                            out_specs=out,
+                            tail_specs=((itemclub_mod.specs(),)
+                                        if pruned else ()))
 
 
 @functools.lru_cache(maxsize=64)
-def _catalog_recommend_fn(policy, rb, mesh, axes):
-    def body(col, state, user_ids, catalog):
-        item, slot, ctx, _, _ = _catalog_choose(policy, rb, col, state,
-                                                user_ids, catalog)
-        return item, slot, ctx
+def _catalog_recommend_fn(policy, rb, mesh, axes, pruned=False):
+    def body(col, state, user_ids, catalog, clusters=None):
+        item, slot, ctx, _, _, rmet = _catalog_choose(
+            policy, rb, col, state, user_ids, catalog, clusters)
+        if clusters is None:
+            return item, slot, ctx
+        return item, slot, ctx, rmet
+    out = (P(), P(), P()) + ((_RMET_SPECS,) if pruned else ())
     return _bind_catalog_tx(policy, body, mesh, axes, n_plain=1,
-                            out_specs=(P(), P(), P()))
+                            out_specs=out,
+                            tail_specs=((itemclub_mod.specs(),)
+                                        if pruned else ()))
 
 
 def _bind_pending_tx(policy, body, mesh, axes, n_plain, out_specs, *,
-                     catalog=False):
+                     catalog=False, tail_specs=()):
     """Like ``_bind_tx`` for bodies over ``(state, pending, *args)`` —
     the pending buffer is replicated; with ``catalog`` the LAST plain
-    arg is instead an item-sharded Catalog."""
+    arg is instead an item-sharded Catalog, and ``tail_specs`` extras
+    (replicated cluster tables) follow it."""
     if mesh is None:
         return jax.jit(functools.partial(body, _NULL))
     col = lax_collectives(mesh, axes)
@@ -484,7 +545,7 @@ def _bind_pending_tx(policy, body, mesh, axes, n_plain, out_specs, *,
     if catalog:
         plain[-1] = catalog_mod.specs(axes)
     in_specs = ((policy.state_specs(axes), pending_mod.specs())
-                + tuple(plain))
+                + tuple(plain) + tuple(tail_specs))
 
     def wrap(state, *args):
         mapped = shard_map(
@@ -504,12 +565,15 @@ def _issue_fn(policy, ttl, mesh, axes):
 
 
 @functools.lru_cache(maxsize=64)
-def _catalog_issue_fn(policy, rb, ttl, mesh, axes):
+def _catalog_issue_fn(policy, rb, ttl, mesh, axes, pruned=False):
     body = functools.partial(_catalog_issue_body, policy, rb, ttl)
+    out = (pending_mod.specs(), P(), P(), P(), P())
+    if pruned:
+        out = out + (_RMET_SPECS,)
     return _bind_pending_tx(
-        policy, body, mesh, axes, n_plain=2,
-        out_specs=(pending_mod.specs(), P(), P(), P(), P()),
-        catalog=True)
+        policy, body, mesh, axes, n_plain=2, out_specs=out,
+        catalog=True,
+        tail_specs=(itemclub_mod.specs(),) if pruned else ())
 
 
 @functools.lru_cache(maxsize=64)
@@ -661,12 +725,14 @@ class OnlineBandit:
         return recommend(self, user_ids, contexts)
 
     def step_catalog(self, key, user_ids, catalog, reward_fn, *,
-                     k_short: int = 64):
+                     k_short: int = 64, clusters=None):
         return step_catalog(self, key, user_ids, catalog, reward_fn,
-                            k_short=k_short)
+                            k_short=k_short, clusters=clusters)
 
-    def recommend_catalog(self, user_ids, catalog, *, k_short: int = 64):
-        return recommend_catalog(self, user_ids, catalog, k_short=k_short)
+    def recommend_catalog(self, user_ids, catalog, *, k_short: int = 64,
+                          clusters=None):
+        return recommend_catalog(self, user_ids, catalog, k_short=k_short,
+                                 clusters=clusters)
 
     def observe(self, user_ids, contexts, choices, rewards, key=None):
         return observe(self, user_ids, contexts, choices, rewards, key=key)
@@ -748,7 +814,7 @@ def _retrieval_engine(session: OnlineBandit, k_short: int):
 
 
 def step_catalog(session: OnlineBandit, key, user_ids, catalog,
-                 reward_fn: Callable, *, k_short: int = 64):
+                 reward_fn: Callable, *, k_short: int = 64, clusters=None):
     """One serving transaction against a persistent catalog.
 
     Like :func:`step`, but the slate is not supplied by the caller — it
@@ -764,16 +830,34 @@ def step_catalog(session: OnlineBandit, key, user_ids, catalog,
     contract as :func:`step` — so regret terms are relative to the
     shortlist's best.  Returns ``(session, item_ids [B], metrics)`` with
     GLOBAL catalog ids (-1 for padded requests).
+
+    ``clusters`` — a ``core.itemclub.ItemClusters`` built from this
+    catalog enables CLUSTER-PRUNED retrieval: item tiles whose UCB upper
+    bound cannot beat the running shortlist floor are skipped, with the
+    chosen items BIT-IDENTICAL to the unpruned path.  A stale table
+    (``clusters.epoch != catalog.epoch`` after a `publish`) falls back
+    to the unpruned stream inside the transaction — rebuild on the
+    stage-2 cadence with ``itemclub.refresh_clusters``.  The return
+    gains a trailing ``RetrievalMetrics`` (tile skip counts +
+    ``pruned_active``).  The cluster tables are replicated — pass them
+    as-is on a sharded session (``capacity % (tile_items * shards)``
+    must be 0).
     """
     rb = _retrieval_engine(session, k_short)
     fn = _catalog_step_fn(session.policy, rb, reward_fn, session.mesh,
-                          session.axes)
-    state, item_ids, metrics = fn(session.state, key, user_ids, catalog)
-    return dataclasses.replace(session, state=state), item_ids, metrics
+                          session.axes, clusters is not None)
+    if clusters is None:
+        state, item_ids, metrics = fn(session.state, key, user_ids,
+                                      catalog)
+        return dataclasses.replace(session, state=state), item_ids, metrics
+    state, item_ids, metrics, rmet = fn(session.state, key, user_ids,
+                                        catalog, clusters)
+    return (dataclasses.replace(session, state=state), item_ids, metrics,
+            rmet)
 
 
 def recommend_catalog(session: OnlineBandit, user_ids, catalog, *,
-                      k_short: int = 64):
+                      k_short: int = 64, clusters=None):
     """The request half against a catalog.
 
     On a synchronous session: no state change; returns
@@ -786,19 +870,30 @@ def recommend_catalog(session: OnlineBandit, user_ids, catalog, *,
     contexts [B, k_short, d])`` — the buffer already holds the chosen
     context each decision needs, so only ``(decision_ids, rewards)`` go
     to :func:`observe_delayed`; slots/contexts are returned for reward
-    models that score the served slate."""
+    models that score the served slate.
+
+    ``clusters`` enables cluster-pruned retrieval exactly as in
+    :func:`step_catalog` (same exactness + stale-epoch fallback) and
+    appends a ``RetrievalMetrics`` to either return shape."""
     rb = _retrieval_engine(session, k_short)
     if session.pending is None:
         fn = _catalog_recommend_fn(session.policy, rb, session.mesh,
-                                   session.axes)
-        return fn(session.state, user_ids, catalog)
+                                   session.axes, clusters is not None)
+        if clusters is None:
+            return fn(session.state, user_ids, catalog)
+        return fn(session.state, user_ids, catalog, clusters)
     _pending_guard(session, user_ids.shape[0])
     fn = _catalog_issue_fn(session.policy, rb, session.ttl, session.mesh,
-                           session.axes)
-    pend, items, ids, slots, ctx = fn(session.state, session.pending,
-                                      user_ids, catalog)
+                           session.axes, clusters is not None)
+    if clusters is None:
+        pend, items, ids, slots, ctx = fn(session.state, session.pending,
+                                          user_ids, catalog)
+        return (dataclasses.replace(session, pending=pend), items, ids,
+                slots, ctx)
+    pend, items, ids, slots, ctx, rmet = fn(
+        session.state, session.pending, user_ids, catalog, clusters)
     return (dataclasses.replace(session, pending=pend), items, ids, slots,
-            ctx)
+            ctx, rmet)
 
 
 def observe_delayed(session: OnlineBandit, decision_ids, rewards,
