@@ -1,0 +1,149 @@
+"""Online-experimentation benchmark: the routing layer's cost and the
+meta-selector's learning.
+
+Two scenarios, both fully seeded (JAX traffic keys + NumPy fault/selector
+streams), written to BENCH_experiment.json:
+
+  meta_selector      3 arms — one tuned (planted best) + two copycats
+                     with absurd exploration — under the Thompson-
+                     sampling meta-selector.  Gated:
+                     ``meta_vs_best_fixed_reward_ratio`` (selector's
+                     total realized reward vs the best FIXED single arm
+                     on the identical traffic stream — the price of
+                     having to learn which arm wins).  Recorded:
+                     ``share_best_final`` (fraction of traffic on the
+                     planted best by the end; the ≥0.6 acceptance bar is
+                     asserted in-run), per-arm shares, the sequential z.
+
+  routing_overhead   a 1-arm experiment vs the bare ``run_faulted`` loop
+                     on identical traffic — the full router (sticky
+                     assign, mask, merge, arm-encoded ids, accounting)
+                     against the plain session harness.  Gated:
+                     ``tx_vs_single_policy_ratio`` (experiment tx/s over
+                     single-session tx/s, best-of-repeats; the baseline
+                     is pinned so the CI floor sits at the 0.8x
+                     acceptance bar).
+
+Writes BENCH_experiment.json at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+
+from repro import serve
+from repro.core import env
+from repro.core.types import BanditHyper
+from repro.serve import experiments, faults
+
+from .common import emit
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+N_USERS, D, K, BATCH = 64, 8, 10, 16
+ROUNDS, CAPACITY, TTL = 60, 256, 16
+EPOCH_ROUNDS, FLOOR = 10, 0.05
+BEST_ALPHA, NOISY_ALPHA = 0.05, 50.0
+
+
+def _arm(alpha: float):
+    hyper = BanditHyper(alpha=alpha, sigma=4, max_rounds=1, gamma=1.5,
+                        n_candidates=K)
+    return serve.OnlineBandit.create(
+        N_USERS, D, hyper, policy="linucb", refresh_every=N_USERS,
+        pending_capacity=CAPACITY, pending_ttl=TTL)
+
+
+def _meta_selector_row(theta):
+    def fresh():
+        return experiments.create(
+            [_arm(BEST_ALPHA), _arm(NOISY_ALPHA), _arm(NOISY_ALPHA)],
+            names=("best", "noisy1", "noisy2"), salt=11,
+            selector=experiments.make_selector(
+                3, epoch_rounds=EPOCH_ROUNDS, floor=FLOOR))
+
+    exp, rep = experiments.run_experiment(fresh(), theta, ROUNDS,
+                                          batch=BATCH, key=5)
+    # the best FIXED arm on the identical stream: all traffic to `best`
+    solo = experiments.create([_arm(BEST_ALPHA)], names=("best",))
+    _, fixed = experiments.run_experiment(solo, theta, ROUNDS,
+                                          batch=BATCH, key=5)
+    share_best = rep.fractions[0]
+    assert rep.leader == "best", rep.leader
+    assert share_best >= 0.6, (
+        f"meta-selector routed only {share_best:.2f} to the planted best")
+    return {
+        "scenario": "meta_selector", "policy": "linucb",
+        "n_users": N_USERS, "batch": BATCH, "d": D, "K": K,
+        "rounds": ROUNDS, "epoch_rounds": EPOCH_ROUNDS, "floor": FLOOR,
+        "meta_vs_best_fixed_reward_ratio": round(
+            sum(rep.reward) / max(sum(fixed.reward), 1e-9), 3),
+        "share_best_final": round(share_best, 3),
+        "share_noisy1_final": round(rep.fractions[1], 3),
+        "share_noisy2_final": round(rep.fractions[2], 3),
+        "z_leading_pair": round(rep.z_leading_pair, 2),
+        "reward_per_decision_best": round(
+            rep.reward[0] / max(1, rep.interactions[0]), 3),
+        "epochs": len(rep.shares) - 1,
+    }
+
+
+def _routing_overhead_row(theta, repeats: int):
+    def single_tx():
+        sess, rep = faults.run_faulted(_arm(BEST_ALPHA), theta, ROUNDS,
+                                       faults.FaultSpec(), batch=BATCH,
+                                       key=11)
+        return rep.tx_per_s
+
+    def exp_tx():
+        e = experiments.create([_arm(BEST_ALPHA)])
+        _, rep = experiments.run_experiment(e, theta, ROUNDS, batch=BATCH,
+                                            key=11)
+        return rep.tx_per_s
+
+    single_tx()                         # warm the compile caches
+    exp_tx()
+    single = max(single_tx() for _ in range(repeats))
+    routed = max(exp_tx() for _ in range(repeats))
+    return {
+        "scenario": "routing_overhead", "policy": "linucb",
+        "n_users": N_USERS, "batch": BATCH, "d": D, "K": K,
+        "rounds": ROUNDS,
+        "tx_vs_single_policy_ratio": round(routed / max(single, 1e-9), 3),
+        "single_tx_per_s": round(single, 1),
+        "experiment_tx_per_s": round(routed, 1),
+    }
+
+
+def main(quick: bool = False):
+    e, _ = env.make_synthetic_env(jax.random.PRNGKey(0), N_USERS, D, 4, K)
+    rows = [
+        _meta_selector_row(e.theta),
+        _routing_overhead_row(e.theta, repeats=2 if quick else 4),
+    ]
+    for row in rows:
+        emit(f"experiment_{row['scenario']}", 0.0,
+             " ".join(f"{k}={v}" for k, v in row.items()
+                      if k.endswith("ratio") or k.startswith("share")))
+
+    payload = {
+        "mode": "quick" if quick else "full",
+        "jax_backend": jax.default_backend(),
+        "determinism_note": (
+            "meta_vs_best_fixed_reward_ratio and the shares are fully "
+            "seeded (JAX traffic keys + NumPy selector/fault streams) — "
+            "any drift is a real routing/selector change; "
+            "tx_vs_single_policy_ratio is wall clock of two identical-"
+            "shape loops (best of repeats), gated with its baseline "
+            "pinned so the CI floor is the 0.8x acceptance bar"),
+        "scenarios": rows,
+    }
+    (ROOT / "BENCH_experiment.json").write_text(
+        json.dumps(payload, indent=1))
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -3,8 +3,8 @@
 Prints ``name,us_per_call,derived`` CSV; writes results/*.json consumed by
 EXPERIMENTS.md plus BENCH_interact.json / BENCH_graph.json /
 BENCH_drift.json / BENCH_serve.json / BENCH_retrieval.json /
-BENCH_faults.json / BENCH_churn.json at the repo root (the engine perf
-trajectories, tracked per PR).
+BENCH_faults.json / BENCH_churn.json / BENCH_experiment.json at the
+repo root (the engine perf trajectories, tracked per PR).
 
 ``--quick`` runs the fused-interaction microbenchmark at reduced
 shapes/repeats, the stage-2 graph bench (full n sweep — its acceptance
@@ -13,9 +13,11 @@ drift scenario through the unified engine (single-host + 8-device
 sharded), the online-serving transaction bench, the catalog-scale
 retrieval bench (streaming top-K incl. the 2**20-item reference row +
 8-device item-sharded transaction), the seeded fault-injection
-bench (delayed/lossy feedback vs its clean control), and the catalog
+bench (delayed/lossy feedback vs its clean control), the catalog
 churn bench (double-buffered swaps under live traffic vs the churn-free
-control); a few minutes on one CPU core, and
+control), and the online-experimentation bench (Thompson-sampling
+meta-selector vs the best fixed arm + routing overhead vs a bare
+session); a few minutes on one CPU core, and
 still emits every BENCH_*.json, so CI can track the hot-path trends
 cheaply and gate the modeled metrics (``benchmarks.check_regression``).
 
@@ -46,7 +48,8 @@ def _bench_list(quick: bool):
         return call
 
     names = ["bench_interact", "bench_graph", "bench_drift", "bench_serve",
-             "bench_retrieval", "bench_faults", "bench_churn"]
+             "bench_retrieval", "bench_faults", "bench_churn",
+             "bench_experiment"]
     benches = [(n, runner(n, quick=quick)) for n in names]
     if not quick:
         benches += [(n, runner(n)) for n in

@@ -55,8 +55,23 @@ checkpoint auto-rollback on top; ``serve.faults`` is the seeded
 fault-injection harness that drives the whole stack
 (``python -m repro.launch.faultrun``).
 
-The old ``serve.bandit_service`` NamedTuple API is deprecated; a shim
-remains (README "Online serving API" has the migration notes).
+Online experimentation (README "Online experimentation"):
+``serve.experiments`` runs N arm sessions — any policy mix — behind one
+request stream with deterministic sticky uid-hash traffic splitting, an
+optional Thompson-sampling meta-selector re-weighting fractions at epoch
+boundaries, per-arm guardrail auto-disable, whole-experiment
+checkpoint/restore, and seeded A/B through the fault harness
+(``python -m repro.launch.abrun``)::
+
+    from repro.serve import experiments
+    exp = experiments.create([sess_a, sess_b, sess_c],
+                             selector=experiments.make_selector(3))
+    exp, choices, ids = experiments.recommend(exp, user_ids, contexts)
+    exp = experiments.observe_delayed(exp, ids, rewards)
+
+The old ``serve.bandit_service`` NamedTuple API was removed in PR 9
+(deprecated since PR 4); importing it raises with a pointer here
+(README "Online serving API" has the migration notes).
 """
 from ..core.catalog import (Bank, Catalog, add_items, make_catalog,
                             publish, random_catalog, retire_items,
@@ -64,9 +79,13 @@ from ..core.catalog import (Bank, Catalog, add_items, make_catalog,
 from ..core.itemclub import (ItemClusters, ItemStats, RetrievalMetrics,
                              build_clusters, init_stats, observe_served,
                              refresh_clusters, reset_new_slots)
-from .faults import FaultReport, FaultSpec, run_faulted, run_faulted_catalog
+from . import experiments
+from .experiments import (Experiment, ExperimentReport, TSSelector,
+                          assign_arms, make_selector, run_experiment)
+from .faults import (FaultReport, FaultSpec, TrafficStream, run_faulted,
+                     run_faulted_catalog)
 from .guardrails import (Guarded, GuardrailConfig, GuardrailState,
-                         shortlist_recall)
+                         post_rollback_state, shortlist_recall)
 from .pending import PendingBuffer
 from .policies import (POLICIES, ClusteredPolicy, ClusteredState,
                        DCCBPolicy, DCCBServeState, LinUCBPolicy,
@@ -79,17 +98,20 @@ from .session import (OnlineBandit, embed_candidates, observe,
 
 __all__ = [
     "Bank", "Catalog", "POLICIES", "ClusteredPolicy", "ClusteredState",
-    "DCCBPolicy", "DCCBServeState", "FaultReport", "FaultSpec",
+    "DCCBPolicy", "DCCBServeState", "Experiment", "ExperimentReport",
+    "FaultReport", "FaultSpec",
     "Guarded", "GuardrailConfig", "GuardrailState", "ItemClusters",
     "ItemStats", "LinUCBPolicy", "LinUCBServeState", "OnlineBandit",
-    "PendingBuffer", "RetrievalMetrics", "ServeCfg",
-    "add_items", "build_clusters", "embed_candidates",
-    "from_distclub_state", "get_policy", "init_stats",
-    "make_catalog", "make_cfg", "observe", "observe_delayed",
-    "observe_served", "pending_stats", "publish", "random_catalog",
+    "PendingBuffer", "RetrievalMetrics", "ServeCfg", "TSSelector",
+    "TrafficStream",
+    "add_items", "assign_arms", "build_clusters", "embed_candidates",
+    "experiments", "from_distclub_state", "get_policy", "init_stats",
+    "make_catalog", "make_cfg", "make_selector", "observe",
+    "observe_delayed", "observe_served", "pending_stats",
+    "post_rollback_state", "publish", "random_catalog",
     "recommend", "recommend_catalog", "refresh", "refresh_clusters",
     "reset_new_slots", "reset_pending", "retire_items",
-    "run_faulted", "run_faulted_catalog", "shortlist_recall",
-    "staged_churn", "step", "step_catalog", "to_distclub_state",
-    "torn_publish",
+    "run_experiment", "run_faulted", "run_faulted_catalog",
+    "shortlist_recall", "staged_churn", "step", "step_catalog",
+    "to_distclub_state", "torn_publish",
 ]

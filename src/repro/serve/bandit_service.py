@@ -1,117 +1,13 @@
-"""DEPRECATED migration shim over the `OnlineBandit` session API.
+"""REMOVED — the old ``BanditService`` deprecation shim (deprecated in
+PR 4) is retired.  Use ``repro.serve`` directly::
 
-The ``BanditService`` NamedTuple + free functions were replaced by
-``repro.serve``'s policy-pluggable sessions (README "Online serving
-API").  This shim keeps the old call sites running on top of the new
-engine-backed transaction; migrate to::
+    from repro import serve
+    session = serve.OnlineBandit.create(n_users, d, hyper)
+    session, choices, metrics = serve.step(session, key, uids, ctx, rfn)
 
-    session = serve.OnlineBandit.create(n, d, hyper, policy="distclub",
-                                        refresh_every=every)
-    session, choices, metrics = serve.step(session, key, users, ctx, rf)
-
-Semantic changes the shim inherits from the redesign (deliberate):
-
-  * duplicate-user batches are now EXACT (the old ``observe`` dropped all
-    but the last occurrence via ``.at[ids].set``);
-  * the cluster mean-occupancy the beta heuristic reads is the FROZEN
-    stage-2 snapshot (the engine semantics) — the old service advanced
-    ``clusters.seen`` live between refreshes;
-  * scoring/updates run through the fused ``InteractBackend``
-    (``REPRO_BACKEND`` dispatch) instead of raw ucb/rank1 ops, so the
-    ``use_pallas=`` arguments are ignored.
-
-``maybe_refresh`` keeps its host-synced check for compatibility; the new
-API schedules refresh inside the jitted transaction (``refresh_every``).
+See the README "Migration from ``serve.bandit_service``" notes.
 """
-from __future__ import annotations
-
-import warnings
-from typing import NamedTuple
-
-from ..core.types import BanditHyper, DistCLUBState
-from . import policies, session as _session
-
-embed_candidates = _session.embed_candidates
-
-
-# emit the deprecation exactly once per process: the shim sits in
-# request/feedback hot loops, so a per-call warning floods serving logs
-# (and per-call `warnings` bookkeeping isn't free).  Tests reset this
-# module-level guard to re-arm the warning.
-_warned = False
-
-
-def _deprecated(name: str):
-    global _warned
-    if _warned:
-        return
-    _warned = True
-    warnings.warn(
-        f"repro.serve.bandit_service.{name} is deprecated (first use; "
-        "further uses won't warn): migrate to the repro.serve session "
-        "API — serve.OnlineBandit.create / serve.step (README: Online "
-        "serving API / migration notes)",
-        DeprecationWarning, stacklevel=3,
-    )
-
-
-class BanditService(NamedTuple):
-    """Compatibility wrapper: an `OnlineBandit` session behind the old
-    record's attribute surface."""
-
-    session: _session.OnlineBandit
-
-    @property
-    def state(self) -> DistCLUBState:
-        """The old record, REBUILT on access (two [n, d, d] batched
-        inversions + the label-table segment sums) — the session no
-        longer carries the derived tables.  Hold the result in a local
-        when reading repeatedly; new code reads ``session.state``."""
-        cfg = self.session.policy.cfg
-        return policies.to_distclub_state(self.session.state, cfg.hyper,
-                                          cfg.d)
-
-    @property
-    def hyper(self) -> BanditHyper:
-        return self.session.policy.cfg.hyper
-
-    @property
-    def d(self) -> int:
-        return self.session.policy.cfg.d
-
-    @property
-    def interactions_since_refresh(self):
-        return self.session.state.since_refresh
-
-
-def create(n_users: int, d: int, hyper: BanditHyper) -> BanditService:
-    _deprecated("create")
-    return BanditService(session=_session.OnlineBandit.create(
-        n_users, d, hyper, policy="distclub", refresh_every=0))
-
-
-def recommend(svc: BanditService, user_ids, contexts, *,
-              use_pallas: bool | None = None):
-    """Pick one item per request.  user_ids [B], contexts [B, K, d] -> [B]."""
-    _deprecated("recommend")
-    del use_pallas                     # engine dispatch is session-level now
-    return _session.recommend(svc.session, user_ids, contexts)
-
-
-def observe(svc: BanditService, user_ids, contexts, choices, rewards, *,
-            use_pallas: bool | None = None) -> BanditService:
-    """Fold a feedback batch (duplicate-user batches are exact now)."""
-    _deprecated("observe")
-    del use_pallas
-    return BanditService(session=_session.observe(
-        svc.session, user_ids, contexts, choices, rewards))
-
-
-def maybe_refresh(svc: BanditService, every: int) -> BanditService:
-    """Stage-2 refresh when the budget elapsed.  Host-synced for
-    compatibility — new code passes ``refresh_every`` at session creation
-    and lets the jitted transaction schedule it."""
-    _deprecated("maybe_refresh")
-    if int(svc.session.state.since_refresh) < every:
-        return svc
-    return BanditService(session=_session.refresh(svc.session))
+raise ImportError(
+    "repro.serve.bandit_service was removed — use repro.serve "
+    "(OnlineBandit.create / step / recommend / observe_delayed); see the "
+    "README migration notes")

@@ -1,0 +1,899 @@
+"""Online experimentation: sticky traffic splitting over policy arms.
+
+An :class:`Experiment` runs N arms — each a ``serve.OnlineBandit`` with
+its OWN session state (any mix of distclub / dccb / club / linucb, or
+the same policy under different hypers) — behind one request stream:
+
+    arms = [serve.OnlineBandit.create(n, d, hyper, policy=p,
+                                      pending_capacity=256)
+            for p in ("distclub", "dccb", "linucb")]
+    exp = experiments.create(arms, fractions=(0.34, 0.33, 0.33),
+                             selector=experiments.make_selector(3),
+                             guard_cfg=GuardrailConfig(ctr_floor=0.3))
+    exp, choices, ids = experiments.recommend(exp, user_ids, contexts)
+    ...
+    exp = experiments.observe_delayed(exp, ids, rewards)
+
+Sticky assignment: each user id hashes (salted, lowbias32) to a point on
+the unit interval; arm a owns ``[cum_frac[a-1], cum_frac[a])``.  The
+hash never changes, so assignment is DETERMINISTIC and STABLE under
+fraction changes — shrinking an arm's share migrates exactly the users
+whose hash falls in the surrendered sub-interval, and nobody else; a
+user never silently migrates mid-experiment.  ``uid < 0`` padding maps
+to arm -1 and flows through every arm as padding, exactly as in a plain
+session.
+
+Routing: the batch is partitioned by masking — arm a sees the SAME
+full-width batch with non-assigned requests padded to uid -1 (the
+serving transactions' existing padding convention), runs its own
+unmodified compiled ``step`` / ``step_catalog`` / ``recommend`` /
+``observe_delayed`` transaction, and the per-arm choices are merged back
+in request order.  A single-arm experiment at fraction 1.0 is therefore
+BIT-IDENTICAL to the plain session — same transaction, same inputs,
+single-host and sharded (``tests/test_experiments.py``).
+
+Decision ids are arm-encoded: ``global = local * n_arms + arm``, so
+delayed feedback routes itself — ``observe_delayed`` decodes the arm and
+folds each sub-batch through that arm's own pending ring.  With one arm
+the encoding is the identity.
+
+Thompson-sampling meta-selector (per CineaMate's BANDIT_SELECTOR.md): a
+Beta(alpha, beta) posterior per (context bucket, arm) — success = click
+(reward > 0), failure otherwise; optional cold_start / regular /
+power_user buckets split by the user's lifetime interaction count.
+Traffic fractions move ONLY at epoch boundaries (every
+``epoch_rounds`` routing transactions): the win-probability of each arm
+is estimated by Monte-Carlo argmax over posterior draws, floored at
+``floor`` per enabled arm, renormalized.  Between boundaries assignment
+is frozen — stickiness is the product surface, the posterior is the
+learner.
+
+Per-arm guardrails: pass ``guard_cfg`` and every arm runs its own
+``serve.guardrails`` monitor chain (CTR floor, ring occupancy, latency).
+A breaching arm is AUTO-DISABLED: its traffic re-routes to the surviving
+arms (same hash, renormalized enabled fractions — survivors keep every
+user they already had), its state rolls back to its last healthy
+snapshot, and its pending ring is cleared; the experiment keeps serving.
+The last enabled arm is never disabled.
+
+Checkpoint/restore: :func:`save` / :func:`restore` round-trip arm states
++ pending rings + rollback snapshots + selector posteriors + the
+assignment salt/fractions through ``train.checkpoint.CheckpointManager``
+— a restored experiment resumes bit-identical routing and choices.
+
+:func:`run_experiment` drives the whole stack over the SAME seeded
+keyed traffic stream as ``serve.faults`` (one shared
+``faults.TrafficStream``) with the same delivery-fault machinery, and
+:func:`report` emits the :class:`ExperimentReport` — per-arm
+reward/regret/matched ratios, traffic shares over time, and the
+sequential z-statistic for the leading pair.  CLI:
+``python -m repro.launch.abrun``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import env as bandit_env
+from . import faults as faults_mod
+from . import guardrails as guardrails_mod
+from . import session as session_mod
+
+# ---------------------------------------------------------------------------
+# sticky assignment
+# ---------------------------------------------------------------------------
+
+
+def _hash01(user_ids: jnp.ndarray, salt) -> jnp.ndarray:
+    """Deterministic uid -> [0, 1) point (lowbias32 integer mix; the top
+    24 bits keep the value exact in f32).  Pure function of (uid, salt):
+    the experiment's entire routing stability rests on this never
+    depending on fractions, round, or arm count."""
+    x = user_ids.astype(jnp.uint32) ^ jnp.uint32(salt)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return (x >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+@jax.jit
+def _assign(user_ids, fractions, enabled, salt):
+    """arm[B] i32 (-1 = padding).  Primary assignment cuts the unit
+    interval at the cumulative fractions; requests landing on a disabled
+    arm fall through to the ENABLED-renormalized cut with the same hash
+    point, so survivors keep every user they already had."""
+    h = _hash01(user_ids, salt)
+    f = fractions.astype(jnp.float32)
+    cum = jnp.cumsum(f).at[-1].set(jnp.inf)      # last arm absorbs rounding
+    primary = jnp.searchsorted(cum, h, side="right").astype(jnp.int32)
+    f2 = jnp.where(enabled, f, 0.0)
+    f2 = f2 / jnp.maximum(jnp.sum(f2), 1e-9)
+    cum2 = jnp.cumsum(f2).at[-1].set(jnp.inf)
+    secondary = jnp.searchsorted(cum2, h, side="right").astype(jnp.int32)
+    arm = jnp.where(enabled[primary], primary, secondary)
+    return jnp.where(user_ids >= 0, arm, -1)
+
+
+def assign_arms(exp_or_uids, fractions=None, enabled=None, salt=0):
+    """Sticky arm per request: ``assign_arms(exp, user_ids)`` or the raw
+    form ``assign_arms(user_ids, fractions, enabled, salt)``."""
+    if isinstance(exp_or_uids, Experiment):
+        exp, uids = exp_or_uids, fractions
+        return _assign(jnp.asarray(uids),
+                       jnp.asarray(exp.fractions, jnp.float32),
+                       jnp.asarray(exp.enabled), jnp.uint32(exp.salt))
+    return _assign(jnp.asarray(exp_or_uids),
+                   jnp.asarray(fractions, jnp.float32),
+                   jnp.asarray(enabled), jnp.uint32(salt))
+
+
+# ---------------------------------------------------------------------------
+# the Thompson-sampling meta-selector
+# ---------------------------------------------------------------------------
+
+
+class TSSelector(NamedTuple):
+    """Beta posteriors per (context bucket, arm) + the re-weighting
+    policy.  ``bucket_edges`` splits users by lifetime interaction count
+    — ``(3, 21)`` gives the CineaMate cold_start (<3) / regular (3..20) /
+    power_user (>20) buckets; ``()`` is one pooled bucket."""
+
+    alpha: Any                  # np [n_buckets, n_arms]
+    beta: Any                   # np [n_buckets, n_arms]
+    floor: float = 0.05         # minimum enabled-arm traffic fraction
+    epoch_rounds: int = 50      # routing transactions between re-weights
+    bucket_edges: tuple = ()
+    samples: int = 512          # MC draws for the win-probability
+
+
+def make_selector(n_arms: int, *, floor: float = 0.05,
+                  epoch_rounds: int = 50, bucket_edges: tuple = (),
+                  samples: int = 512,
+                  prior: tuple = (1.0, 1.0)) -> TSSelector:
+    """Uniform Beta(1, 1) posteriors (CineaMate's prior) over
+    ``len(bucket_edges) + 1`` context buckets."""
+    nb = len(bucket_edges) + 1
+    return TSSelector(
+        alpha=np.full((nb, n_arms), float(prior[0])),
+        beta=np.full((nb, n_arms), float(prior[1])),
+        floor=float(floor), epoch_rounds=int(epoch_rounds),
+        bucket_edges=tuple(bucket_edges), samples=int(samples))
+
+
+def _buckets_of(sel: TSSelector, counts: np.ndarray) -> np.ndarray:
+    if not sel.bucket_edges:
+        return np.zeros_like(counts, dtype=np.int64)
+    return np.searchsorted(np.asarray(sel.bucket_edges), counts,
+                           side="right")
+
+
+def _posterior_update(sel: TSSelector, buckets, arms, rewards, valid):
+    """success = reward > 0 (a click), failure otherwise — corrupted
+    (sign-flipped) deliveries therefore count as failures, which is what
+    the serving system actually observed."""
+    a2, b2 = sel.alpha.copy(), sel.beta.copy()
+    succ = np.clip(np.asarray(rewards, np.float64), 0.0, 1.0)
+    m = np.asarray(valid, bool)
+    np.add.at(a2, (buckets[m], arms[m]), succ[m])
+    np.add.at(b2, (buckets[m], arms[m]), 1.0 - succ[m])
+    return sel._replace(alpha=a2, beta=b2)
+
+
+def _reweight(sel: TSSelector, enabled, salt: int, epoch: int) -> tuple:
+    """Epoch-boundary fractions: per bucket, P(arm is the argmax of one
+    posterior draw) by Monte Carlo; buckets pooled by observation count;
+    floored at ``sel.floor`` per enabled arm and renormalized.  Seeded by
+    (salt, epoch) so a restored experiment replays the same schedule."""
+    rng = np.random.default_rng([int(salt) & 0xFFFFFFFF, int(epoch),
+                                 0x7E57])
+    en = np.asarray(enabled, bool)
+    nb, A = sel.alpha.shape
+    wins = np.zeros(A)
+    weights = 0.0
+    for b in range(nb):
+        draws = rng.beta(sel.alpha[b], sel.beta[b], size=(sel.samples, A))
+        draws = np.where(en[None, :], draws, -np.inf)
+        share = (np.bincount(np.argmax(draws, axis=1), minlength=A)
+                 / sel.samples)
+        w = float(np.sum(sel.alpha[b] + sel.beta[b])) + 1e-9
+        wins += w * share
+        weights += w
+    p = wins / weights
+    p = np.where(en, np.maximum(p, sel.floor), 0.0)
+    p = p / p.sum()
+    return tuple(float(x) for x in p)
+
+
+# ---------------------------------------------------------------------------
+# the experiment container
+# ---------------------------------------------------------------------------
+
+
+def _zero_totals(n_arms: int) -> dict:
+    return {k: np.zeros(n_arms)
+            for k in ("reward", "expected", "best", "rand", "interactions",
+                      "delivered")}
+
+
+@dataclasses.dataclass(frozen=True)
+class Experiment:
+    """N arm sessions + routing state.  Immutable like the sessions it
+    wraps — every transaction returns a new Experiment."""
+
+    arms: tuple                 # OnlineBandit per arm
+    names: tuple
+    fractions: tuple            # configured/selector split over ALL arms
+    enabled: tuple              # per-arm bool; disabled = breached
+    salt: int
+    selector: Any = None        # TSSelector | None
+    guard_cfg: Any = None       # guardrails.GuardrailConfig | None
+    guards: tuple = ()          # guardrails.GuardrailState per arm
+    snapshots: tuple = ()       # per-arm rollback anchor (state pytree)
+    snapshot_every: int = 16    # routing txs between anchor refreshes
+    steps: int = 0              # routing transactions so far
+    epoch: int = 0              # selector epochs completed
+    shares: tuple = ()          # ((step, fractions), ...) over time
+    counts: Any = None          # np [n_users] lifetime interaction counts
+    totals: Any = None          # per-arm accounting (np [n_arms] each)
+    events: tuple = ()          # ("disable", step, name, breaches) etc.
+
+    @property
+    def n_arms(self) -> int:
+        return len(self.arms)
+
+
+def create(sessions, *, names=None, fractions=None, salt: int = 0,
+           selector: TSSelector | None = None, guard_cfg=None,
+           snapshot_every: int = 16) -> Experiment:
+    """Wrap ``sessions`` (each its own ``OnlineBandit``) as experiment
+    arms.  All arms must serve the same user/context universe
+    (equal ``n_users`` and ``d``).  ``fractions`` defaults to uniform."""
+    arms = tuple(sessions)
+    if not arms:
+        raise ValueError("an experiment needs at least one arm")
+    A = len(arms)
+    cfg0 = arms[0].policy.cfg
+    for s in arms[1:]:
+        c = s.policy.cfg
+        if (c.n_users, c.d) != (cfg0.n_users, cfg0.d):
+            raise ValueError("every arm must share (n_users, d): "
+                             f"{(c.n_users, c.d)} vs "
+                             f"{(cfg0.n_users, cfg0.d)}")
+    if names is None:
+        names = []
+        for i, s in enumerate(arms):
+            n = s.policy.name
+            names.append(n if n not in names else f"{n}#{i}")
+    names = tuple(names)
+    if fractions is None:
+        fractions = (1.0 / A,) * A
+    fractions = tuple(float(f) for f in fractions)
+    if len(fractions) != A or any(f < 0 for f in fractions):
+        raise ValueError(f"need {A} non-negative fractions")
+    tot = sum(fractions)
+    if tot <= 0:
+        raise ValueError("fractions sum to zero")
+    fractions = tuple(f / tot for f in fractions)
+    if selector is not None and selector.alpha.shape[1] != A:
+        raise ValueError(f"selector is over {selector.alpha.shape[1]} "
+                         f"arms, experiment has {A}")
+    return Experiment(
+        arms=arms, names=names, fractions=fractions, enabled=(True,) * A,
+        salt=int(salt), selector=selector, guard_cfg=guard_cfg,
+        guards=(guardrails_mod.GuardrailState(),) * A,
+        snapshots=tuple(s.state for s in arms),
+        snapshot_every=int(snapshot_every),
+        counts=np.zeros(cfg0.n_users, np.int64),
+        totals=_zero_totals(A), shares=((0, fractions),))
+
+
+# ---------------------------------------------------------------------------
+# per-arm guardrails: admit -> maybe disable
+# ---------------------------------------------------------------------------
+
+
+def _disable_arm(exp: Experiment, a: int, breaches) -> Experiment:
+    """Breached arm: roll its state back to its snapshot, clear its
+    pending ring, and re-route its traffic (the assignment's
+    enabled-fraction fallback).  The LAST enabled arm is never disabled
+    — the breach is recorded and its monitors reset instead."""
+    guards = list(exp.guards)
+    if sum(exp.enabled) <= 1:
+        guards[a] = guardrails_mod.post_rollback_state(exp.guard_cfg,
+                                                       guards[a])
+        return dataclasses.replace(
+            exp, guards=tuple(guards),
+            events=exp.events + (("breach-last-arm", exp.steps,
+                                  exp.names[a], breaches),))
+    arms = list(exp.arms)
+    sess = dataclasses.replace(arms[a], state=exp.snapshots[a])
+    arms[a] = session_mod.reset_pending(sess)
+    enabled = list(exp.enabled)
+    enabled[a] = False
+    guards[a] = guardrails_mod.post_rollback_state(exp.guard_cfg,
+                                                   guards[a])
+    return dataclasses.replace(
+        exp, arms=tuple(arms), enabled=tuple(enabled), guards=tuple(guards),
+        events=exp.events + (("disable", exp.steps, exp.names[a],
+                              breaches),))
+
+
+def _admit_arm(exp: Experiment, a: int, **sample) -> Experiment:
+    if exp.guard_cfg is None:
+        return exp
+    gs = guardrails_mod.update(exp.guard_cfg, exp.guards[a], **sample)
+    guards = list(exp.guards)
+    guards[a] = gs
+    exp = dataclasses.replace(exp, guards=tuple(guards))
+    if gs.breaches:
+        exp = _disable_arm(exp, a, gs.breaches)
+    return exp
+
+
+def _advance(exp: Experiment) -> Experiment:
+    """Post-routing bookkeeping: refresh healthy rollback anchors and,
+    at selector epoch boundaries, re-weight the traffic fractions."""
+    steps = exp.steps + 1
+    exp = dataclasses.replace(exp, steps=steps)
+    if (exp.guard_cfg is not None and exp.snapshot_every > 0
+            and steps % exp.snapshot_every == 0):
+        snaps = tuple(
+            arm.state if en and not gs.cooldown_left else snap
+            for arm, en, gs, snap in zip(exp.arms, exp.enabled, exp.guards,
+                                         exp.snapshots))
+        exp = dataclasses.replace(exp, snapshots=snaps)
+    sel = exp.selector
+    if sel is not None and steps % sel.epoch_rounds == 0:
+        fr = _reweight(sel, exp.enabled, exp.salt, exp.epoch)
+        exp = dataclasses.replace(
+            exp, fractions=fr, epoch=exp.epoch + 1,
+            shares=exp.shares + ((steps, fr),))
+    return exp
+
+
+def _note_counts(exp: Experiment, user_ids) -> Experiment:
+    uids = np.asarray(user_ids)
+    m = (uids >= 0) & (uids < exp.counts.shape[0])
+    c = exp.counts.copy()
+    np.add.at(c, uids[m], 1)
+    return dataclasses.replace(exp, counts=c)
+
+
+def _fold_totals(exp: Experiment, **per_arm) -> Experiment:
+    t = {k: v.copy() for k, v in exp.totals.items()}
+    for k, v in per_arm.items():
+        t[k] = t[k] + np.asarray(v)
+    return dataclasses.replace(exp, totals=t)
+
+
+# ---------------------------------------------------------------------------
+# the routing transactions
+# ---------------------------------------------------------------------------
+
+
+def step(exp: Experiment, key, user_ids, contexts, reward_fn):
+    """One routed synchronous transaction: partition the batch by sticky
+    arm, run each ENABLED arm's own compiled ``serve.step`` on the
+    masked batch (non-assigned requests = uid -1 padding), merge choices
+    in request order.  Returns ``(exp, choices [B], metrics)`` with
+    ``metrics`` a per-arm tuple of ``Metrics``."""
+    user_ids = jnp.asarray(user_ids)
+    arm_of = assign_arms(exp, user_ids)
+    arms = list(exp.arms)
+    choices = jnp.zeros(user_ids.shape, jnp.int32)
+    metrics = []
+    samples = []
+    for a in range(exp.n_arms):
+        if not exp.enabled[a]:
+            metrics.append(None)
+            samples.append(None)
+            continue
+        uids_a = jnp.where(arm_of == a, user_ids, -1)
+        t0 = time.perf_counter()
+        arms[a], ch, m = session_mod.step(arms[a], key, uids_a, contexts,
+                                          reward_fn)
+        dt = time.perf_counter() - t0
+        choices = jnp.where(arm_of == a, ch, choices)
+        metrics.append(m)
+        samples.append(dt)
+    exp = dataclasses.replace(exp, arms=tuple(arms))
+    exp = _note_counts(exp, jnp.where(arm_of >= 0, user_ids, -1))
+
+    per_arm = {k: np.zeros(exp.n_arms) for k in
+               ("reward", "expected", "best", "rand", "interactions")}
+    sel = exp.selector
+    for a, m in enumerate(metrics):
+        if m is None:
+            continue
+        n = int(m.interactions)
+        per_arm["reward"][a] = float(m.reward)
+        per_arm["interactions"][a] = n
+        if sel is not None and n > 0:
+            # aggregate fold: the sync path has no per-request rewards
+            # outside the jit, so successes pool into bucket 0
+            a2, b2 = sel.alpha.copy(), sel.beta.copy()
+            succ = min(max(float(m.reward), 0.0), float(n))
+            a2[0, a] += succ
+            b2[0, a] += n - succ
+            sel = sel._replace(alpha=a2, beta=b2)
+    exp = dataclasses.replace(exp, selector=sel)
+    exp = _fold_totals(exp, **per_arm)
+    if exp.guard_cfg is not None:
+        for a, m in enumerate(metrics):
+            if m is None:
+                continue
+            n = int(m.interactions)
+            exp = _admit_arm(
+                exp, a, ctr=(float(m.reward) / n if n > 0 else None),
+                latency_s=samples[a],
+                occupancy=guardrails_mod._occupancy(exp.arms[a]),
+                interactions=n)
+    return _advance(exp), choices, tuple(metrics)
+
+
+def step_catalog(exp: Experiment, key, user_ids, catalog, reward_fn, *,
+                 k_short: int = 64, clusters=None):
+    """Routed catalog transaction: same partition/merge as :func:`step`
+    over each arm's own ``serve.step_catalog``.  All arms serve the SAME
+    catalog (read-only inside the transaction).  Returns
+    ``(exp, item_ids [B], metrics)``; padded/unrouted rows get -1."""
+    user_ids = jnp.asarray(user_ids)
+    arm_of = assign_arms(exp, user_ids)
+    arms = list(exp.arms)
+    items = jnp.full(user_ids.shape, -1, jnp.int32)
+    metrics = []
+    samples = []
+    for a in range(exp.n_arms):
+        if not exp.enabled[a]:
+            metrics.append(None)
+            samples.append(None)
+            continue
+        uids_a = jnp.where(arm_of == a, user_ids, -1)
+        t0 = time.perf_counter()
+        out = session_mod.step_catalog(arms[a], key, uids_a, catalog,
+                                       reward_fn, k_short=k_short,
+                                       clusters=clusters)
+        arms[a], it, m = out[0], out[1], out[2]
+        dt = time.perf_counter() - t0
+        items = jnp.where(arm_of == a, it, items)
+        metrics.append(m)
+        samples.append(dt)
+    exp = dataclasses.replace(exp, arms=tuple(arms))
+    exp = _note_counts(exp, jnp.where(arm_of >= 0, user_ids, -1))
+    per_arm = {k: np.zeros(exp.n_arms) for k in ("reward", "interactions")}
+    sel = exp.selector
+    for a, m in enumerate(metrics):
+        if m is None:
+            continue
+        n = int(m.interactions)
+        per_arm["reward"][a] = float(m.reward)
+        per_arm["interactions"][a] = n
+        if sel is not None and n > 0:
+            a2, b2 = sel.alpha.copy(), sel.beta.copy()
+            succ = min(max(float(m.reward), 0.0), float(n))
+            a2[0, a] += succ
+            b2[0, a] += n - succ
+            sel = sel._replace(alpha=a2, beta=b2)
+    exp = dataclasses.replace(exp, selector=sel)
+    exp = _fold_totals(exp, **per_arm)
+    if exp.guard_cfg is not None:
+        for a, m in enumerate(metrics):
+            if m is None:
+                continue
+            n = int(m.interactions)
+            exp = _admit_arm(
+                exp, a, ctr=(float(m.reward) / n if n > 0 else None),
+                latency_s=samples[a],
+                occupancy=guardrails_mod._occupancy(exp.arms[a]),
+                interactions=n)
+    return _advance(exp), items, tuple(metrics)
+
+
+def recommend(exp: Experiment, user_ids, contexts):
+    """The routed request half on buffer-enabled arms: each enabled arm
+    ISSUES on its masked sub-batch through its own pending ring.
+    Returns ``(exp, choices [B], decision_ids [B])`` — ids are
+    arm-encoded (``local * n_arms + arm``; -1 padding/unrouted), feed
+    them back verbatim to :func:`observe_delayed`."""
+    for s in exp.arms:
+        if s.pending is None:
+            raise ValueError("experiment recommend needs buffer-enabled "
+                             "arms (create each with pending_capacity>0)")
+    user_ids = jnp.asarray(user_ids)
+    if exp.n_arms == 1 and exp.enabled[0]:
+        # degenerate experiment: the sole arm owns every request, the
+        # arm-encoding is the identity — skip the mask/merge entirely
+        # (this is also what makes tx_vs_single_policy_ratio ~1)
+        arms = list(exp.arms)
+        t0 = time.perf_counter()
+        arms[0], choices, ids = session_mod.recommend(arms[0], user_ids,
+                                                      contexts)
+        exp = dataclasses.replace(exp, arms=tuple(arms))
+        if exp.guard_cfg is not None:
+            exp = _admit_arm(
+                exp, 0, latency_s=time.perf_counter() - t0,
+                occupancy=guardrails_mod._occupancy(arms[0]))
+        return _advance(exp), choices, ids
+    arm_of = assign_arms(exp, user_ids)
+    A = exp.n_arms
+    arms = list(exp.arms)
+    choices = jnp.zeros(user_ids.shape, jnp.int32)
+    gids = jnp.full(user_ids.shape, -1, jnp.int32)
+    for a in range(A):
+        if not exp.enabled[a]:
+            continue
+        uids_a = jnp.where(arm_of == a, user_ids, -1)
+        t0 = time.perf_counter()
+        arms[a], ch, ids = session_mod.recommend(arms[a], uids_a, contexts)
+        dt = time.perf_counter() - t0
+        choices = jnp.where(arm_of == a, ch, choices)
+        gids = jnp.where((arm_of == a) & (ids >= 0), ids * A + a, gids)
+        if exp.guard_cfg is not None:   # guard samples cost a host sync
+            exp = _admit_arm(exp, a, latency_s=dt,
+                             occupancy=guardrails_mod._occupancy(arms[a]))
+    exp = dataclasses.replace(exp, arms=tuple(arms))
+    # lifetime counts advance in record_feedback (issue-time accounting)
+    return _advance(exp), choices, gids
+
+
+def observe_delayed(exp: Experiment, decision_ids, rewards, key=None):
+    """Routed delayed-feedback fold: decode the arm from each decision id
+    and fold the sub-batch through that arm's own
+    ``serve.observe_delayed`` transaction.  Feedback for a disabled
+    arm is dropped (its ring was cleared at disable time)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    gids = jnp.asarray(decision_ids)
+    A = exp.n_arms
+    if A == 1 and exp.enabled[0]:
+        arms = (session_mod.observe_delayed(exp.arms[0], gids, rewards,
+                                            key=key),)
+        n = int(np.asarray(gids >= 0).sum())
+        if exp.guard_cfg is not None and n > 0:
+            r = float(jnp.sum(jnp.where(gids >= 0, jnp.asarray(rewards),
+                                        0.0)))
+            exp = _admit_arm(
+                exp, 0, ctr=r / n,
+                occupancy=guardrails_mod._occupancy(arms[0]),
+                interactions=n)
+        exp = dataclasses.replace(exp, arms=arms)
+        return _fold_totals(exp, delivered=np.asarray([n], np.float64))
+    arm_of = jnp.where(gids >= 0, gids % A, -1)
+    local = jnp.where(gids >= 0, gids // A, -1)
+    arms = list(exp.arms)
+    delivered = np.zeros(A)
+    arm_np = np.asarray(arm_of)
+    for a in range(A):
+        if not exp.enabled[a]:
+            continue
+        if not bool((arm_np == a).any()):
+            continue
+        ids_a = jnp.where(arm_of == a, local, -1)
+        arms[a] = session_mod.observe_delayed(arms[a], ids_a, rewards,
+                                              key=key)
+        n = int((arm_np == a).sum())
+        delivered[a] = n
+        if exp.guard_cfg is not None:   # guard samples cost a host sync
+            r = float(jnp.sum(jnp.where(arm_of == a,
+                                        jnp.asarray(rewards), 0.0)))
+            exp = _admit_arm(
+                exp, a, ctr=r / max(1, n),
+                occupancy=guardrails_mod._occupancy(arms[a]),
+                interactions=n)
+    exp = dataclasses.replace(exp, arms=tuple(arms))
+    return _fold_totals(exp, delivered=delivered)
+
+
+def record_feedback(exp: Experiment, user_ids, arms, realized,
+                    expected=None, best=None, rand=None,
+                    learner_rewards=None) -> Experiment:
+    """Issue-time accounting for a routed batch: fold per-request rewards
+    into the per-arm totals and the selector posteriors (with TRUE
+    context buckets — the uid is known here).  ``learner_rewards`` is
+    what the system will actually deliver (possibly corrupted) and is
+    what the posterior sees; it defaults to ``realized``."""
+    arms = np.asarray(arms)
+    valid = arms >= 0
+    r = np.asarray(realized, np.float64)
+
+    def tot(x):
+        if x is None:
+            return None
+        return np.bincount(arms[valid],
+                           weights=np.asarray(x, np.float64)[valid],
+                           minlength=exp.n_arms)
+
+    per_arm = {"reward": tot(r),
+               "interactions": np.bincount(arms[valid],
+                                           minlength=exp.n_arms)}
+    for k, v in (("expected", expected), ("best", best), ("rand", rand)):
+        t = tot(v)
+        if t is not None:
+            per_arm[k] = t
+    exp = _fold_totals(exp, **per_arm)
+    uids = np.asarray(user_ids)
+    if exp.selector is not None:
+        lr = r if learner_rewards is None else np.asarray(learner_rewards,
+                                                          np.float64)
+        cnt = np.where((uids >= 0) & (uids < exp.counts.shape[0]),
+                       exp.counts[np.clip(uids, 0,
+                                          exp.counts.shape[0] - 1)], 0)
+        buckets = _buckets_of(exp.selector, cnt)
+        exp = dataclasses.replace(
+            exp, selector=_posterior_update(exp.selector, buckets, arms,
+                                            lr, valid))
+    # lifetime interaction counts (bucketing + drift envs) advance at
+    # issue-time accounting — uids are already host-side here, so this
+    # costs no extra device sync
+    return _note_counts(exp, np.where(valid, uids, -1))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / restore
+# ---------------------------------------------------------------------------
+
+
+def _ckpt_payload(exp: Experiment) -> dict:
+    arms = {}
+    for i, s in enumerate(exp.arms):
+        entry = {"state": s.state, "snap": exp.snapshots[i]}
+        if s.pending is not None:
+            entry["pending"] = s.pending
+        arms[f"arm{i}"] = entry
+    sel = ({} if exp.selector is None
+           else {"alpha": exp.selector.alpha, "beta": exp.selector.beta})
+    meta = {"fractions": np.asarray(exp.fractions, np.float64),
+            "enabled": np.asarray(exp.enabled, np.int32),
+            "salt": np.asarray(exp.salt, np.int64),
+            "steps": np.asarray(exp.steps, np.int64),
+            "epoch": np.asarray(exp.epoch, np.int64),
+            "counts": exp.counts,
+            "totals": dict(exp.totals)}
+    return {"arms": arms, "selector": sel, "meta": meta}
+
+
+def _ckpt_shardings(exp: Experiment):
+    if all(s.mesh is None for s in exp.arms):
+        return None
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    def repl(mesh):
+        return NamedSharding(mesh, P())
+
+    payload = _ckpt_payload(exp)
+    arms = {}
+    for i, s in enumerate(exp.arms):
+        st = (s._shardings() if s.mesh is not None
+              else jax.tree_util.tree_map(lambda _: None, s.state))
+        entry = {"state": st, "snap": st}
+        if s.pending is not None:
+            entry["pending"] = jax.tree_util.tree_map(
+                lambda _: repl(s.mesh) if s.mesh is not None else None,
+                s.pending)
+        arms[f"arm{i}"] = entry
+    rest = jax.tree_util.tree_map(lambda _: None,
+                                  {"selector": payload["selector"],
+                                   "meta": payload["meta"]})
+    return {"arms": arms, **rest}
+
+
+def save(exp: Experiment, ckpt, step: int):
+    """Snapshot the WHOLE experiment — arm states + pending rings +
+    rollback anchors + selector posteriors + assignment salt/fractions —
+    as one atomic checkpoint entry."""
+    return ckpt.save(_ckpt_payload(exp), step)
+
+
+def restore(exp: Experiment, ckpt, step: int | None = None):
+    """(experiment, step) restored from ``ckpt`` (latest when ``step`` is
+    None; ``(exp, None)`` on an empty directory).  Routing — salt,
+    fractions, enabled set, selector posteriors, epoch counters — and
+    every arm's state/pending resume exactly, so subsequent assignment
+    and choices are bit-identical to the uninterrupted run.  Guardrail
+    EMAs restart fresh (monitors re-warm; the rollback anchors are
+    restored)."""
+    like = _ckpt_payload(exp)
+    shardings = _ckpt_shardings(exp)
+    if step is None:
+        payload, step = ckpt.restore_latest(like, shardings)
+        if payload is None:
+            return exp, None
+    else:
+        payload = ckpt.restore(step, like, shardings)
+    arms = []
+    snaps = []
+    for i, s in enumerate(exp.arms):
+        entry = payload["arms"][f"arm{i}"]
+        kw = {"state": entry["state"]}
+        if s.pending is not None:
+            kw["pending"] = entry["pending"]
+        arms.append(dataclasses.replace(s, **kw))
+        snaps.append(entry["snap"])
+    sel = exp.selector
+    if sel is not None:
+        sel = sel._replace(alpha=np.asarray(payload["selector"]["alpha"]),
+                           beta=np.asarray(payload["selector"]["beta"]))
+    meta = payload["meta"]
+    fractions = tuple(float(f) for f in np.asarray(meta["fractions"]))
+    restored = dataclasses.replace(
+        exp, arms=tuple(arms), snapshots=tuple(snaps), selector=sel,
+        fractions=fractions,
+        enabled=tuple(bool(e) for e in np.asarray(meta["enabled"])),
+        salt=int(meta["salt"]), steps=int(meta["steps"]),
+        epoch=int(meta["epoch"]), counts=np.asarray(meta["counts"]),
+        totals={k: np.asarray(v) for k, v in meta["totals"].items()},
+        guards=(guardrails_mod.GuardrailState(),) * exp.n_arms,
+        shares=((int(meta["steps"]), fractions),))
+    return restored, step
+
+
+# ---------------------------------------------------------------------------
+# the report
+# ---------------------------------------------------------------------------
+
+
+class ExperimentReport(NamedTuple):
+    rounds: int
+    names: tuple
+    enabled: tuple
+    fractions: tuple            # final traffic split
+    reward: tuple               # per-arm realized reward (issue-time)
+    expected: tuple
+    best: tuple
+    rand_reward: tuple
+    regret: tuple               # per-arm best - expected
+    interactions: tuple
+    delivered: tuple
+    matched_ratio: tuple        # per-arm pending matched / issued
+    shares: tuple               # ((step, fractions), ...) over time
+    leader: str                 # highest reward-rate enabled arm
+    runner_up: str
+    z_leading_pair: float       # sequential two-proportion z, leader pair
+    tx_per_s: float
+    events: tuple
+
+
+def _z_stat(p1, n1, p2, n2) -> float:
+    if min(n1, n2) <= 0:
+        return 0.0
+    pool = (p1 * n1 + p2 * n2) / (n1 + n2)
+    var = pool * (1 - pool) * (1 / n1 + 1 / n2)
+    if var <= 0:
+        return 0.0
+    return float((p1 - p2) / np.sqrt(var))
+
+
+def report(exp: Experiment, *, rounds: int = 0,
+           tx_per_s: float = 0.0) -> ExperimentReport:
+    """Summarize the experiment so far.  The z-statistic compares the
+    reward-rates of the two leading enabled arms over the SAME seeded
+    traffic stream (a sequential look: |z| ~> 2-3 before trusting the
+    winner, the usual always-valid caveats apply)."""
+    t = exp.totals
+    A = exp.n_arms
+    n = np.maximum(t["interactions"], 1)
+    rate = np.where(t["interactions"] > 0, t["reward"] / n, -np.inf)
+    rate = np.where(np.asarray(exp.enabled, bool), rate, -np.inf)
+    order = np.argsort(-rate)
+    lead, run = int(order[0]), int(order[1]) if A > 1 else int(order[0])
+    z = 0.0
+    if A > 1 and np.isfinite(rate[run]):
+        z = _z_stat(rate[lead], t["interactions"][lead],
+                    rate[run], t["interactions"][run])
+    matched = []
+    for s in exp.arms:
+        st = session_mod.pending_stats(s)
+        matched.append(st["matched"] / max(1.0, st["issued"])
+                       if st else 0.0)
+
+    def tup(k):
+        return tuple(float(x) for x in t[k])
+
+    return ExperimentReport(
+        rounds=rounds or exp.steps, names=exp.names, enabled=exp.enabled,
+        fractions=exp.fractions, reward=tup("reward"),
+        expected=tup("expected"), best=tup("best"),
+        rand_reward=tup("rand"),
+        regret=tuple(float(b - e) for b, e in zip(t["best"],
+                                                  t["expected"])),
+        interactions=tuple(int(x) for x in t["interactions"]),
+        delivered=tuple(int(x) for x in t["delivered"]),
+        matched_ratio=tuple(matched), shares=exp.shares,
+        leader=exp.names[lead], runner_up=exp.names[run],
+        z_leading_pair=z, tx_per_s=tx_per_s, events=exp.events)
+
+
+# ---------------------------------------------------------------------------
+# the seeded A/B harness (same traffic + fault machinery as serve.faults)
+# ---------------------------------------------------------------------------
+
+
+def run_experiment(exp: Experiment, theta, rounds: int, *,
+                   spec: faults_mod.FaultSpec | None = None,
+                   batch: int = 32, key: int = 0, drain: bool = True):
+    """Drive the experiment over the SAME keyed traffic stream the fault
+    harness uses (``faults.TrafficStream`` — byte-identical users,
+    contexts, and reward keys to a ``run_faulted`` clean control with the
+    same ``key``), with the same seeded delivery-fault machinery
+    (delay/loss/dup/flip/stall) applied to the merged decision stream so
+    every arm experiences the identical environment.  ``theta`` is the
+    ``[n_users, d]`` preference matrix, or a callable
+    ``theta(counts) -> [n_users, d]`` for drifting environments (counts =
+    per-user lifetime interactions).  All arms must be buffer-enabled.
+    Returns ``(exp, ExperimentReport)``."""
+    spec = faults_mod.FaultSpec() if spec is None else spec
+    cfg = exp.arms[0].policy.cfg
+    stream = faults_mod.TrafficStream(key, batch, cfg.n_users,
+                                      K=cfg.n_candidates, d=cfg.d)
+    theta_fn = theta if callable(theta) else (lambda counts: theta)
+    A = exp.n_arms
+    rng = np.random.default_rng(spec.seed)
+    queue: list[list] = []          # [due_round, global_id, reward]
+    stalled_until = -1
+    n_tx = 0
+
+    def deliver(now, fb_key):
+        nonlocal exp, queue, n_tx
+        due = [e for e in queue if e[0] <= now]
+        queue = [e for e in queue if e[0] > now]
+        for c, lo in enumerate(range(0, len(due), batch)):
+            chunk = due[lo:lo + batch]
+            ids = np.full((batch,), -1, np.int32)
+            rs = np.zeros((batch,), np.float32)
+            ids[:len(chunk)] = [e[1] for e in chunk]
+            rs[:len(chunk)] = [e[2] for e in chunk]
+            exp = observe_delayed(exp, jnp.asarray(ids), jnp.asarray(rs),
+                                  key=jax.random.fold_in(fb_key, c))
+            n_tx += 1
+
+    t0 = time.perf_counter()
+    for i in range(rounds):
+        users, ctx, kr, kf = stream.slate_batch(i)
+        exp, choices, gids = recommend(exp, users, ctx)
+        n_tx += 1
+        th = jnp.asarray(theta_fn(exp.counts))
+        realized, expected, best, rand = bandit_env.step_rewards(
+            kr, th[users], ctx, choices)
+
+        gids_np = np.asarray(gids)
+        valid = gids_np >= 0
+        arms_np = np.where(valid, gids_np % A, -1)
+        r_np = np.asarray(realized, np.float32)
+
+        # delivery fault draws — same NumPy stream layout as run_faulted
+        B = batch
+        flip = (i >= spec.flip_after) & (rng.random(B) < spec.p_flip)
+        r_del = np.where(flip, -r_np, r_np)
+        lost = rng.random(B) < spec.p_loss
+        delayed = rng.random(B) < spec.p_delay
+        lag = np.where(delayed, rng.integers(1, spec.max_delay + 1, B), 0)
+        dup = rng.random(B) < spec.p_dup
+
+        exp = record_feedback(exp, np.asarray(users), arms_np, r_np,
+                              expected=np.asarray(expected),
+                              best=np.asarray(best),
+                              rand=np.asarray(rand),
+                              learner_rewards=r_del)
+        for b in np.nonzero(valid & ~lost)[0]:
+            queue.append([i + int(lag[b]), int(gids_np[b]),
+                          float(r_del[b])])
+            if dup[b]:
+                extra = int(rng.integers(0, spec.max_delay + 1))
+                queue.append([i + int(lag[b]) + extra, int(gids_np[b]),
+                              float(r_del[b])])
+
+        if spec.stall_every and (i + 1) % spec.stall_every == 0:
+            stalled_until = i + spec.stall_rounds
+        if i >= stalled_until:
+            deliver(i, kf)
+
+    if drain and queue:
+        deliver(max(e[0] for e in queue), stream.drain_key(rounds))
+    dt = time.perf_counter() - t0
+    return exp, report(exp, rounds=rounds, tx_per_s=n_tx / max(dt, 1e-9))

@@ -113,6 +113,55 @@ class FaultReport(NamedTuple):
     items_retired: int = 0  # items staged out across the run
 
 
+class TrafficStream:
+    """THE seeded keyed-traffic generator — the single source of the
+    per-round key schedule consumed by clean controls, faulted runs, and
+    every experiment arm (``serve.experiments``).  All consumers fold
+    the same ``(key, round)`` lattice, so two runs constructed with the
+    same ``key`` provably see byte-identical users, contexts, reward
+    keys, and feedback keys; any metric gap is attributable to the
+    policies/faults alone.
+
+    Key layout (frozen — regression-tested byte-for-byte against the
+    original inline schedule): round ``i`` owns the fold_in indices
+    ``4*i .. 4*i+3`` as (users, contexts, rewards, feedback); catalog
+    traffic draws no context key and uses ``4*i .. 4*i+2`` as (users,
+    rewards, feedback) with the SAME stride; the post-run drain key is
+    ``fold_in(base, 4*rounds)``.
+    """
+
+    def __init__(self, key, batch: int, n_users: int, *, K: int = None,
+                 d: int = None):
+        self.base = (jax.random.PRNGKey(key) if np.ndim(key) == 0
+                     else key)
+        self.batch = int(batch)
+        self.n_users = int(n_users)
+        self.K = K
+        self.d = d
+
+    def round_keys(self, i: int, n: int = 4) -> tuple:
+        return tuple(jax.random.fold_in(self.base, 4 * i + j)
+                     for j in range(n))
+
+    def slate_batch(self, i: int):
+        """(users [B], contexts [B,K,d], reward_key, feedback_key)."""
+        ku, kc, kr, kf = self.round_keys(i, 4)
+        users = jax.random.randint(ku, (self.batch,), 0, self.n_users)
+        ctx = (jax.random.normal(kc, (self.batch, self.K, self.d),
+                                 jnp.float32) / np.sqrt(self.d))
+        return users, ctx, kr, kf
+
+    def catalog_batch(self, i: int):
+        """(users [B], reward_key, feedback_key) — contexts come from
+        the served catalog shortlist, not the stream."""
+        ku, kr, kf = self.round_keys(i, 3)
+        users = jax.random.randint(ku, (self.batch,), 0, self.n_users)
+        return users, kr, kf
+
+    def drain_key(self, rounds: int):
+        return jax.random.fold_in(self.base, 4 * rounds)
+
+
 def run_faulted(session, theta, rounds: int, spec: FaultSpec, *,
                 batch: int = 32, key: int = 0, drain: bool = True):
     """Run ``rounds`` of issue -> fault-mangled delivery -> delayed fold.
@@ -128,11 +177,11 @@ def run_faulted(session, theta, rounds: int, spec: FaultSpec, *,
         raise ValueError("run_faulted needs a buffer-enabled session "
                          "(create with pending_capacity > 0)")
     cfg = inner.policy.cfg
-    K, d = cfg.n_candidates, cfg.d
     theta = jnp.asarray(theta)
+    stream = TrafficStream(key, batch, cfg.n_users, K=cfg.n_candidates,
+                           d=cfg.d)
 
     rng = np.random.default_rng(spec.seed)
-    base = jax.random.PRNGKey(key)
     queue: list[list] = []          # [due_round, decision_id, reward]
     stalled_until = -1
     tot = dict(interactions=0, reward=0.0, expected=0.0, best=0.0,
@@ -161,11 +210,7 @@ def run_faulted(session, theta, rounds: int, spec: FaultSpec, *,
 
     t0 = time.perf_counter()
     for i in range(rounds):
-        ku, kc, kr, kf = (jax.random.fold_in(base, 4 * i + j)
-                          for j in range(4))
-        users = jax.random.randint(ku, (batch,), 0, cfg.n_users)
-        ctx = (jax.random.normal(kc, (batch, K, d), jnp.float32)
-               / np.sqrt(d))
+        users, ctx, kr, kf = stream.slate_batch(i)
         if guarded:
             session, choices, ids = session.recommend(users, ctx)
         else:
@@ -205,8 +250,7 @@ def run_faulted(session, theta, rounds: int, spec: FaultSpec, *,
             deliver(i, kf)
 
     if drain and queue:             # flush the tail after traffic stops
-        deliver(max(e[0] for e in queue),
-                jax.random.fold_in(base, 4 * rounds))
+        deliver(max(e[0] for e in queue), stream.drain_key(rounds))
     dt = time.perf_counter() - t0
 
     inner = session.session if guarded else session
@@ -263,7 +307,7 @@ def run_faulted_catalog(session, env, rounds: int, spec: FaultSpec, *,
     hot = int(region_count.argmax())
 
     rng = np.random.default_rng(spec.seed)
-    base = jax.random.PRNGKey(key)
+    stream = TrafficStream(key, batch, cfg.n_users)
     churn_base = jax.random.PRNGKey(spec.seed + 0x5EED)
     queue: list[list] = []          # [due_round, decision_id, reward]
     publish_due: list[int] = []     # rounds at which a publish lands
@@ -339,9 +383,7 @@ def run_faulted_catalog(session, env, rounds: int, spec: FaultSpec, *,
 
     t0 = time.perf_counter()
     for i in range(rounds):
-        ku, kr, kf = (jax.random.fold_in(base, 4 * i + j)
-                      for j in range(3))
-        users = jax.random.randint(ku, (batch,), 0, cfg.n_users)
+        users, kr, kf = stream.catalog_batch(i)
         if guarded:
             session, items, ids, slots, ctx = session.recommend_catalog(
                 users, k_short=k_short)
@@ -419,8 +461,7 @@ def run_faulted_catalog(session, env, rounds: int, spec: FaultSpec, *,
         publish_due.pop(0)
         do_publish()
     if drain and queue:
-        deliver(max(e[0] for e in queue),
-                jax.random.fold_in(base, 4 * rounds))
+        deliver(max(e[0] for e in queue), stream.drain_key(rounds))
     dt = time.perf_counter() - t0
 
     inner = session.session if guarded else session

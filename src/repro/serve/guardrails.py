@@ -148,6 +148,18 @@ def update(cfg: GuardrailConfig, gs: GuardrailState, *,
         cooldown_left=cooldown_left, breaches=tuple(breaches))
 
 
+def post_rollback_state(cfg: GuardrailConfig,
+                        gs: GuardrailState) -> GuardrailState:
+    """The monitor state after a breach-triggered rollback: EMAs reset
+    (the rolled-back session's telemetry is void), lifetime interaction
+    and rollback counters carried forward, cooldown armed so the fresh
+    EMAs can re-warm before they can trip again.  Shared by the
+    ``Guarded`` wrapper and per-arm disabling in ``serve.experiments``."""
+    return dataclasses.replace(
+        GuardrailState(), interactions=gs.interactions,
+        cooldown_left=cfg.cooldown, rollbacks=gs.rollbacks + 1)
+
+
 def shortlist_recall(session, catalog, user_ids, served_items, *,
                      k_short: int = 64) -> float:
     """Fraction of valid users whose SERVED item sits in a freshly
@@ -254,10 +266,7 @@ class Guarded:
         if gs.breaches:
             restored, cat, step = self._rollback(session, self.catalog)
             restored = session_mod.reset_pending(restored)
-            fresh = dataclasses.replace(
-                GuardrailState(), interactions=gs.interactions,
-                cooldown_left=self.cfg.cooldown,
-                rollbacks=gs.rollbacks + 1)
+            fresh = post_rollback_state(self.cfg, gs)
             return dataclasses.replace(
                 self, session=restored, catalog=cat, gs=fresh, tx=tx,
                 events=self.events

@@ -68,6 +68,13 @@ replica resumes with bit-identical subsequent choices
 Caching note: compiled transactions are memoized per (policy, reward_fn,
 mesh) — pass a *stable* `reward_fn` (a module-level function or one
 closure built once), not a fresh lambda per call, or every call retraces.
+
+Padding contract (load-bearing for `serve.experiments`): rows with
+``uid < 0`` or ``uid >= n_users`` flow through every transaction as
+no-ops — choice 0 / item -1, no state change, decision id -1.  The
+experiment router exploits this to partition one batch across N arm
+sessions by masking non-assigned rows to uid -1, which keeps a
+single-arm experiment bit-identical to a plain session.
 """
 from __future__ import annotations
 

