@@ -115,7 +115,7 @@ def _packed_hop(gb, adj, labels):
 
 def bench_packed(n, d, repeats):
     v, occ, labels = _inputs(n, d)
-    gb = backend_mod.get_graph_backend(n, block_i=BLOCK_I)
+    gb = backend_mod.BackendConfig.create().graph(n, block_i=BLOCK_I)
     adj = gb.init_adj()
     f_prune = jax.jit(lambda a, v, o: gb.prune(a, v, o, GAMMA))
     f_hop = jax.jit(lambda a, l: _packed_hop(gb, a, l))
@@ -173,9 +173,9 @@ def _interpret_parity(n=150, d=8):
     import numpy as np
 
     v, occ, labels = _inputs(n, d)
-    ref = backend_mod.get_graph_backend(n, kind="reference")
-    pal = backend_mod.get_graph_backend(n, kind="pallas", interpret=True,
-                                        block_i=64, block_j=64)
+    ref = backend_mod.BackendConfig.create("reference").graph(n)
+    pal = backend_mod.BackendConfig.create("pallas").graph(
+        n, interpret=True, block_i=64, block_j=64)
     adj0 = ref.init_adj()
     a_ref = ref.prune(adj0, v, occ, GAMMA)
     a_pal = pal.prune(adj0, v, occ, GAMMA)

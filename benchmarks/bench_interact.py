@@ -109,10 +109,11 @@ def bench_shape(n, d, K, repeats=3):
     # reference-vs-reference and reported fused_us ~ reference_us) — build
     # the interpret-mode kernel backend explicitly and flag it.
     if on_tpu:
-        be = backend_mod.get_backend(n, d, K, kind="pallas")
+        be = backend_mod.BackendConfig.create("pallas").interact(n, d, K)
         fused_backend = "pallas"
     else:
-        be = backend_mod.get_backend(n, d, K, kind="pallas", interpret=True)
+        be = backend_mod.BackendConfig.create("pallas").interact(
+            n, d, K, interpret=True)
         fused_backend = "pallas_interpret"
 
     f_ref = jax.jit(_reference_step)
@@ -155,7 +156,8 @@ def _interpret_parity(n=128, d=16, K=20):
     import numpy as np
 
     lin, w, ctx, r, mask = _make_inputs(n, d, K)
-    be = backend_mod.get_backend(n, d, K, kind="pallas", interpret=True)
+    be = backend_mod.BackendConfig.create("pallas").interact(
+        n, d, K, interpret=True)
     (lin_r, c_r) = _reference_step(lin, w, ctx, r, mask)
     (lin_p, c_p) = _fused_step(be, lin, w, ctx, r, mask)
     lin_p = be.unpad_lin(lin_p)

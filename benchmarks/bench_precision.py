@@ -1,0 +1,283 @@
+"""Reduced-precision parity + HBM bench for the `Precision` backend API.
+
+Two halves, both gated by check_regression:
+
+  modeled   bytes moved for the banks the ``Precision`` policy actually
+            shrinks — the per-user ``Minv`` d^2 state blocks the
+            interaction engine streams every round, and the catalog
+            embedding bank the top-K engine streams per user block.
+            bf16 halves both (``*_hbm_cut_ratio`` = 2.0); int8 catalog
+            tiles cut ``4d / (d + 4)`` (~3.6x at d=32 — the +4 is the
+            per-slot f32 scale read).  Pure functions of shapes, so the
+            gate catches any contract change, not runner noise.
+
+  measured  per-decision choice parity vs the f32 oracle under seeded
+            traffic.  The oracle session drives the ONE trajectory (all
+            state updates are the oracle's own — exact-state metrics
+            like occ stay exact, so flips come only from the score
+            contraction, exactly the PR acceptance framing): each
+            measured round, the oracle's full retrieval+choose decision
+            (``recommend_catalog``, f32 state + f32 catalog) is compared
+            against the counterfactual decision from the SAME state cast
+            to the reduced dtypes against the quantized catalog.
+            Compounding a live reduced-precision trajectory instead
+            would measure butterfly divergence (one flipped near-tie
+            reroutes every later reward draw), not quantization quality.
+
+            The first ``WARMUP`` rounds are excluded: a cold LinUCB-form
+            user scores every unit-norm item identically (w = 0, flat
+            UCB width — any argmax is an equally good exploration pick),
+            so ties sit at 1 ulp and ANY rounding flips them.  Flip rate
+            only means something once margins are real; by round ~32
+            every user has occupancy >= a handful and the measured rate
+            settles near zero.  ``choice_flip_rate`` is gated <= 0.01
+            (the acceptance ceiling; the run raises above it) and is
+            deterministic given the seeds, so the checked-in baseline is
+            exact — ANY drift means the quantization contract changed.
+
+The ``pruned`` rows assert the cluster-pruned retrieval invariant
+survives quantized tile summaries: per reduced precision, a short live
+loop on a region-structured catalog, then the pruned
+``recommend_catalog`` must serve the BIT-IDENTICAL items as the
+unpruned run of the same state (conservative dequantized bounds — see
+``core.itemclub``), so ``pruned_recall_ratio`` is exactly 1.0 or the
+bench raises.
+
+Wall-clock is deliberately not recorded: off-TPU the reduced banks
+upcast in registers either way, so there is nothing honest to time —
+the memory story is the modeled half, the accuracy story the measured
+half.  Every row is mode-invariant (quick == full), so the quick-mode
+baseline gates local full runs too.
+
+Writes BENCH_precision.json at the repo root (tracked from this PR on).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+
+from repro import serve
+from repro.core import env
+from repro.core.backend import resolve_precision
+from repro.core.types import BanditHyper
+
+from .common import emit
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+D, KSHORT = 32, 64
+N_USERS, N_ITEMS, BATCH = 256, 4096, 64
+TILE_ITEMS = 256
+PARITY_PRECS = ("bf16", "int8")
+FLIP_CEILING = 0.01
+# identical in quick and full mode: every parity field is gated, and
+# quick (the baseline / CI mode) must agree with a local full run
+WARMUP, MEASURE = 32, 40
+PRUNED_ROUNDS = 8
+
+
+# ---- modeled HBM bytes for the precision-reduced banks ---------------------
+
+_BYTES = {"f32": 4, "bf16": 2, "int8": 1}
+
+
+def minv_bytes_per_user(d: int, state_dtype: str) -> int:
+    """The per-user ``Minv`` d^2 block the interaction engine reads and
+    scatters back every round (the dominant HBM-resident state; b/occ
+    stay f32 and are O(d))."""
+    return _BYTES[state_dtype] * d * d
+
+
+def catalog_bytes_per_item(d: int, catalog_dtype: str) -> int:
+    """Embedding-bank bytes the top-K stream moves per catalog slot;
+    int8 adds the per-slot f32 scale read."""
+    return _BYTES[catalog_dtype] * d + (4 if catalog_dtype == "int8" else 0)
+
+
+def modeled_row(name: str) -> dict:
+    prec = resolve_precision(name)
+    mb, cb = (minv_bytes_per_user(D, prec.state_dtype),
+              catalog_bytes_per_item(D, prec.catalog_dtype))
+    rec = {
+        "scenario": name, "d": D,
+        "state_dtype": prec.state_dtype,
+        "catalog_dtype": prec.catalog_dtype,
+        "minv_bytes_per_user": mb,
+        "catalog_bytes_per_item": cb,
+        "interact_minv_hbm_cut_ratio": minv_bytes_per_user(D, "f32") / mb,
+        "topk_catalog_hbm_cut_ratio": catalog_bytes_per_item(D, "f32") / cb,
+    }
+    emit(f"precision_model_{name}", 0.0,
+         f"minv_cut={rec['interact_minv_hbm_cut_ratio']:.2f}x,"
+         f"catalog_cut={rec['topk_catalog_hbm_cut_ratio']:.2f}x")
+    return rec
+
+
+# ---- measured per-decision parity vs the f32 oracle ------------------------
+
+def _hyper():
+    return BanditHyper(alpha=0.05, gamma=1.5, n_candidates=KSHORT)
+
+
+def _session(precision):
+    return serve.OnlineBandit.create(N_USERS, D, _hyper(),
+                                     policy="distclub", refresh_every=0,
+                                     backend="reference",
+                                     precision=precision)
+
+
+def _uids(t):
+    return jax.random.permutation(jax.random.PRNGKey(100 + t),
+                                  N_USERS)[:BATCH].astype(jnp.int32)
+
+
+def parity_rows() -> list[dict]:
+    # structureless random catalog: items are DISTINCT, so post-warmup
+    # top-1 margins are real and a flip is a genuine ranking change (a
+    # region-structured catalog is near-clones — flipping between two
+    # copies of the same item tells nothing about quantization)
+    k = jax.random.normal(jax.random.PRNGKey(7), (N_ITEMS, D))
+    emb = k / jnp.linalg.norm(k, axis=-1, keepdims=True)
+    theta = jax.random.normal(jax.random.PRNGKey(8), (N_USERS, D))
+    theta = theta / jnp.linalg.norm(theta, axis=-1, keepdims=True)
+
+    def reward_fn(key, u, ctx, choice):
+        return env.step_rewards(key, theta[u], ctx, choice)
+
+    oracle = _session(None)
+    cat = serve.make_catalog(emb)
+    probes = {p: (_session(p), serve.make_catalog(emb, precision=p))
+              for p in PARITY_PRECS}
+    flips = {p: 0 for p in PARITY_PRECS}
+    total = 0
+    for t in range(WARMUP + MEASURE):
+        u = _uids(t)
+        if t >= WARMUP:
+            idf, _, _ = serve.recommend_catalog(oracle, u, cat,
+                                                k_short=KSHORT)
+            total += BATCH
+            for p, (rs, catp) in probes.items():
+                sdt = rs.policy.cfg.engine.precision.jnp_state
+                st = oracle.state._replace(
+                    Minv=oracle.state.Minv.astype(sdt),
+                    uMcinv=oracle.state.uMcinv.astype(sdt))
+                idr, _, _ = serve.recommend_catalog(
+                    dataclasses.replace(rs, state=st), u, catp,
+                    k_short=KSHORT)
+                flips[p] += int(jnp.sum(idf != idr))
+        oracle, _, _ = serve.step_catalog(oracle,
+                                          jax.random.PRNGKey(1000 + t), u,
+                                          cat, reward_fn, k_short=KSHORT)
+    rows = []
+    for p in PARITY_PRECS:
+        rate = flips[p] / total
+        if rate > FLIP_CEILING:
+            raise RuntimeError(
+                f"{p} choice_flip_rate {rate:.4f} > {FLIP_CEILING} "
+                "acceptance ceiling vs the f32 oracle")
+        rec = {
+            "scenario": p, "n_users": N_USERS, "N_items": N_ITEMS,
+            "batch": BATCH, "d": D, "K_short": KSHORT,
+            "policy": "distclub",
+            "warmup_rounds": WARMUP, "measured_rounds": MEASURE,
+            "choices_compared": total, "choice_flips": flips[p],
+            "choice_flip_rate": rate,
+        }
+        emit(f"precision_parity_{p}_N{N_ITEMS}_B{BATCH}", 0.0,
+             f"flip_rate={rate:.4f} over {total} decisions")
+        rows.append(rec)
+    return rows
+
+
+# ---- pruned retrieval exactness under quantized tile summaries -------------
+
+def pruned_rows() -> list[dict]:
+    e, _ = env.make_catalog_env(jax.random.PRNGKey(0), N_USERS, D, 8,
+                                N_ITEMS, item_noise_scale=0.05)
+    emb = env.catalog_embeddings(e)
+    theta = e.theta
+
+    def reward_fn(key, u, ctx, choice):
+        return env.step_rewards(key, theta[u], ctx, choice)
+
+    rows = []
+    for p in PARITY_PRECS:
+        sess = _session(p)
+        cat = serve.make_catalog(emb, precision=p)
+        for t in range(PRUNED_ROUNDS):
+            sess, _, _ = serve.step_catalog(sess,
+                                            jax.random.PRNGKey(2000 + t),
+                                            _uids(t), cat, reward_fn,
+                                            k_short=KSHORT)
+        cl = serve.build_clusters(cat, tile_items=TILE_ITEMS,
+                                  n_anchors=256)
+        u = jnp.arange(BATCH, dtype=jnp.int32)
+        ids_plain, _, _ = serve.recommend_catalog(sess, u, cat,
+                                                  k_short=KSHORT)
+        ids_pruned, _, _, rmet = serve.recommend_catalog(
+            sess, u, cat, k_short=KSHORT, clusters=cl)
+        recall = float(jnp.mean((ids_plain == ids_pruned)
+                                .astype(jnp.float32)))
+        skipped = float(rmet.skip_ratio())
+        if recall != 1.0:
+            raise RuntimeError(
+                f"{p} pruned retrieval served different items than "
+                f"unpruned (recall {recall:.4f}) — the conservative-"
+                "bound invariant is broken for quantized summaries")
+        rec = {
+            "scenario": p, "N_items": N_ITEMS, "d": D,
+            "K_short": KSHORT, "batch": BATCH,
+            "tile_items": TILE_ITEMS,
+            "pruned_recall_ratio": recall,
+            "tiles_skipped_frac": skipped,
+        }
+        emit(f"precision_pruned_{p}_N{N_ITEMS}", 0.0,
+             f"recall={recall:.2f},skipped={skipped:.2f}")
+        rows.append(rec)
+    return rows
+
+
+def main(quick: bool = False):
+    del quick                   # every row is mode-invariant (see WARMUP)
+    modeled = [modeled_row(p) for p in ("bf16", "int8")]
+    bf16 = next(r for r in modeled if r["scenario"] == "bf16")
+    if (bf16["interact_minv_hbm_cut_ratio"] < 2.0
+            or bf16["topk_catalog_hbm_cut_ratio"] < 2.0):
+        raise RuntimeError("bf16 modeled HBM cut fell below the 2x "
+                           "acceptance floor")
+    parity = parity_rows()
+    pruned = pruned_rows()
+    payload = {
+        "mode": "mode-invariant",
+        "jax_backend": jax.default_backend(),
+        "hbm_model_note": (
+            "bytes per bank the Precision policy reduces: per-user Minv "
+            "d^2 state blocks (interact) and catalog embedding slots "
+            "(top-K stream, + per-slot f32 scale for int8); pure shape "
+            "functions — see module docstring"),
+        "parity_note": (
+            "per-decision flips vs the f32 oracle's trajectory (state "
+            "cast down, quantized catalog, same retrieval+choose), "
+            "measured after the cold-start warmup; deterministic given "
+            "the seeds, baseline is exact"),
+        "modeled": modeled,
+        "parity": parity,
+        "pruned": pruned,
+        # headline pinned scalars (like bench_retrieval's: the
+        # acceptance-criteria numbers, addressable at a fixed path)
+        "bf16_interact_hbm_cut_ratio": bf16["interact_minv_hbm_cut_ratio"],
+        "bf16_topk_hbm_cut_ratio": bf16["topk_catalog_hbm_cut_ratio"],
+        "max_choice_flip_rate": max(r["choice_flip_rate"] for r in parity),
+        "min_pruned_recall_ratio": min(r["pruned_recall_ratio"]
+                                       for r in pruned),
+    }
+    (ROOT / "BENCH_precision.json").write_text(json.dumps(payload, indent=1))
+    return payload
+
+
+if __name__ == "__main__":
+    main()

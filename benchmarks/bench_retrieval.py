@@ -52,7 +52,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import catalog as catalog_mod
-from repro.core.backend import get_retrieval_backend
+from repro.core.backend import BackendConfig
 
 from .common import emit, timed
 
@@ -131,7 +131,7 @@ def _dense_topk(w, Minv, occ, items, alpha, k):
 
 def bench_shape(N, dense_ok, repeats=2):
     w, Minv, occ, cat = _inputs(BATCH, D, N)
-    rb = get_retrieval_backend(D, KSHORT, "reference")
+    rb = BackendConfig.create("reference").retrieval(D, KSHORT)
     f_stream = jax.jit(lambda w, M, o, e, lv: rb.shortlist(
         w, M, o, e, lv, 0.3))
     ids = f_stream(w, Minv, occ, cat.serving.emb, cat.serving.live)[1]
@@ -174,7 +174,7 @@ def _reference_1m_row(repeats=1):
     small request batch — the catalog-scale acceptance row."""
     n = 8
     w, Minv, occ, cat = _inputs(n, D, REFERENCE_1M)
-    rb = get_retrieval_backend(D, KSHORT, "reference")
+    rb = BackendConfig.create("reference").retrieval(D, KSHORT)
     f = jax.jit(lambda w, M, o, e, lv: rb.shortlist(w, M, o, e, lv, 0.3))
     out = f(w, Minv, occ, cat.serving.emb, cat.serving.live)
     jax.block_until_ready(out)
@@ -272,9 +272,9 @@ def _interpret_parity(n=16, d=16, N=512, k=8):
 
     w, Minv, occ, cat = _inputs(n, d, N, seed=3)
     live = cat.serving.live.at[jnp.arange(0, N, 7)].set(0.0)
-    r_ref = get_retrieval_backend(d, k, "reference")
-    r_pal = get_retrieval_backend(d, k, "pallas", block_users=8,
-                                  block_items=128, interpret=True)
+    r_ref = BackendConfig.create("reference").retrieval(d, k)
+    r_pal = BackendConfig.create("pallas").retrieval(
+        d, k, block_users=8, block_items=128, interpret=True)
     s1, i1 = r_ref.shortlist(w, Minv, occ, cat.serving.emb, live, 0.3)
     s2, i2 = r_pal.shortlist(w, Minv, occ, cat.serving.emb, live, 0.3)
     return {

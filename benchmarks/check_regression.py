@@ -10,12 +10,15 @@ What is gated — and what deliberately is not:
   * gated: analytic HBM-traffic / comm-volume metrics, the numbers the
     engine PRs' acceptance criteria are written against.  By key name:
     higher-is-better ``*ratio*`` / ``*reduction*`` / ``*cut*`` fields,
-    lower-is-better ``*bytes*`` / ``*words*`` fields.  These are pure
-    functions of shapes and the traffic model, so ANY drift is a real
-    change: either a regression in the engine's memory/comm contract or
-    an intentional model change — in which case refresh the baselines in
-    the same PR (re-run ``--quick`` and copy the JSONs) so the diff
-    reviews the new numbers.
+    lower-is-better ``*bytes*`` / ``*words*`` / ``*flip_rate*`` /
+    ``*error*`` fields.  Most are pure functions of shapes and the
+    traffic model; the flip-rate/error family is the seeded
+    reduced-precision parity measurement (``bench_precision``) — drift
+    there means the quantization contract changed.  Either way ANY
+    drift is a real change: a regression in the engine's
+    memory/comm/accuracy contract or an intentional model change — in
+    which case refresh the baselines in the same PR (re-run ``--quick``
+    and copy the JSONs) so the diff reviews the new numbers.
   * not gated: every wall-clock field (``*_us``, ``*_s``, ``req_per_s``)
     — CI runners are far too noisy — plus shapes, flags and notes.
 
@@ -43,7 +46,7 @@ ROOT = pathlib.Path(__file__).resolve().parents[1]
 BASELINES = pathlib.Path(__file__).resolve().parent / "baselines"
 
 HIGHER_BETTER = ("ratio", "reduction", "cut")
-LOWER_BETTER = ("bytes", "words")
+LOWER_BETTER = ("bytes", "words", "flip_rate", "error")
 
 
 def _direction(key: str) -> str | None:

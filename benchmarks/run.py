@@ -3,8 +3,9 @@
 Prints ``name,us_per_call,derived`` CSV; writes results/*.json consumed by
 EXPERIMENTS.md plus BENCH_interact.json / BENCH_graph.json /
 BENCH_drift.json / BENCH_serve.json / BENCH_retrieval.json /
-BENCH_faults.json / BENCH_churn.json / BENCH_experiment.json at the
-repo root (the engine perf trajectories, tracked per PR).
+BENCH_faults.json / BENCH_churn.json / BENCH_experiment.json /
+BENCH_precision.json at the repo root (the engine perf trajectories,
+tracked per PR).
 
 ``--quick`` runs the fused-interaction microbenchmark at reduced
 shapes/repeats, the stage-2 graph bench (full n sweep — its acceptance
@@ -17,7 +18,8 @@ bench (delayed/lossy feedback vs its clean control), the catalog
 churn bench (double-buffered swaps under live traffic vs the churn-free
 control), and the online-experimentation bench (Thompson-sampling
 meta-selector vs the best fixed arm + routing overhead vs a bare
-session); a few minutes on one CPU core, and
+session), and the reduced-precision parity bench (modeled HBM cuts +
+choice-flip rate vs the f32 oracle); a few minutes on one CPU core, and
 still emits every BENCH_*.json, so CI can track the hot-path trends
 cheaply and gate the modeled metrics (``benchmarks.check_regression``).
 
@@ -49,7 +51,7 @@ def _bench_list(quick: bool):
 
     names = ["bench_interact", "bench_graph", "bench_drift", "bench_serve",
              "bench_retrieval", "bench_faults", "bench_churn",
-             "bench_experiment"]
+             "bench_experiment", "bench_precision"]
     benches = [(n, runner(n, quick=quick)) for n in names]
     if not quick:
         benches += [(n, runner(n)) for n in
@@ -79,8 +81,9 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="engine benches only (interact/graph/drift/serve/"
-                         "retrieval/faults/churn), reduced shapes/repeats, "
-                         "a few minutes on one CPU core")
+                         "retrieval/faults/churn/experiment/precision), "
+                         "reduced shapes/repeats, a few minutes on one "
+                         "CPU core")
     ap.add_argument("--bench-timeout", type=int, default=1800,
                     help="per-sub-benchmark wall-clock limit in seconds "
                          "(0 disables); a timeout is reported like any "

@@ -18,6 +18,25 @@ selects between:
 Selection: explicit ``kind=`` argument > ``REPRO_BACKEND`` env var
 ("reference" | "pallas" | "auto") > "auto" (pallas iff running on TPU).
 
+Precision: the engines additionally carry a :class:`Precision` policy —
+which dtype the HBM-traffic-dominant state is STORED in (per-user ``Minv``
+d^2 blocks, catalog embedding tiles), independent of the f32 the MXU/VPU
+compute in.  Kernels upcast inside VMEM (``x.astype(f32)`` on a loaded
+block; int8 catalog tiles additionally multiply a per-slot scale), so the
+HBM stream shrinks 2x (bf16) / ~4x (int8) while every contraction still
+accumulates in f32.  ``Precision.f32`` — the default — stores everything
+in f32; every ``astype(float32)`` on an f32 array is a trace-time no-op,
+so the f32 program is BIT-IDENTICAL to the pre-precision code.  Selection
+mirrors the kind flag: explicit ``precision=`` argument > the
+``REPRO_PRECISION`` env var ("f32" | "bf16" | "int8") > f32, resolved in
+exactly one place (:func:`resolve_precision`).
+
+Construction: one unified surface — ``BackendConfig(kind, precision)``
+(build via :meth:`BackendConfig.create`, which resolves both flags) with
+``.interact`` / ``.graph`` / ``.retrieval`` methods replacing the three
+historical factories.  ``get_backend`` / ``get_graph_backend`` /
+``get_retrieval_backend`` remain as thin deprecated wrappers for one PR.
+
 Padding happens once per run, not once per call: the backend precomputes
 the padded dims (users to the block multiple, d/K to sublane/lane
 multiples) at construction, the drivers pad the scan-carried state a single
@@ -34,6 +53,7 @@ thread it through ``jax.jit`` as a static argument.
 from __future__ import annotations
 
 import os
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -50,6 +70,91 @@ from . import clustering, linucb
 from .types import LinUCBState
 
 _ENV_FLAG = "REPRO_BACKEND"
+_PRECISION_ENV_FLAG = "REPRO_PRECISION"
+
+_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
+_STATE_DTYPES = ("f32", "bf16")             # Minv blocks (SPD: never int8)
+_CATALOG_DTYPES = ("f32", "bf16", "int8")   # embedding tiles
+
+
+class Precision(NamedTuple):
+    """Storage-precision policy for the HBM-dominant state.
+
+    A NamedTuple of Python scalars — hashable, so it rides inside the
+    engine NamedTuples through ``jax.jit`` static arguments and the
+    serving layer's lru-cached transactions compile once per policy.
+
+    ``state_dtype``    per-user ``Minv`` d^2 blocks ("f32" | "bf16");
+                       ``b``/``occ`` stay f32/i32 — they are O(d) per
+                       user and exactness there keeps occ-style metrics
+                       exact.
+    ``catalog_dtype``  catalog embedding banks ("f32" | "bf16" | "int8";
+                       int8 adds a per-slot f32 scale — see
+                       ``core.catalog``).
+    ``accum_dtype``    in-VMEM accumulation for the MXU contractions;
+                       always "f32" today (kept explicit so the policy
+                       records the numeric contract, not just storage).
+    ``scale_block``    int8 scale granularity at initial quantization:
+                       slots are grouped in blocks of this size sharing
+                       one scale (churn-added rows get row-granular
+                       scales; the stored array is per-slot either way).
+    """
+
+    state_dtype: str = "f32"
+    catalog_dtype: str = "f32"
+    accum_dtype: str = "f32"
+    scale_block: int = 512
+
+    @property
+    def jnp_state(self):
+        return _DTYPES[self.state_dtype]
+
+    @property
+    def jnp_catalog(self):
+        return _DTYPES[self.catalog_dtype]
+
+    @property
+    def jnp_accum(self):
+        return _DTYPES[self.accum_dtype]
+
+
+# presets — the names the REPRO_PRECISION env flag accepts
+Precision.f32 = Precision()
+Precision.bf16 = Precision(state_dtype="bf16", catalog_dtype="bf16")
+Precision.int8 = Precision(state_dtype="bf16", catalog_dtype="int8")
+_PRECISION_PRESETS = {"f32": Precision.f32, "bf16": Precision.bf16,
+                      "int8": Precision.int8}
+
+
+def resolve_precision(precision=None) -> Precision:
+    """THE one resolution point for the precision policy: explicit
+    argument (a :class:`Precision` or a preset name) > ``REPRO_PRECISION``
+    env var > f32.  Mirrors :func:`resolve_kind`."""
+    if precision is None:
+        precision = os.environ.get(_PRECISION_ENV_FLAG) or "f32"
+    if isinstance(precision, str):
+        if precision not in _PRECISION_PRESETS:
+            raise ValueError(
+                f"unknown precision {precision!r}; want "
+                f"{'|'.join(_PRECISION_PRESETS)} or a Precision instance"
+            )
+        precision = _PRECISION_PRESETS[precision]
+    if not isinstance(precision, Precision):
+        raise TypeError(f"precision must be a Precision or preset name, "
+                        f"got {type(precision).__name__}")
+    if precision.state_dtype not in _STATE_DTYPES:
+        raise ValueError(f"state_dtype {precision.state_dtype!r}; "
+                         f"want {'|'.join(_STATE_DTYPES)}")
+    if precision.catalog_dtype not in _CATALOG_DTYPES:
+        raise ValueError(f"catalog_dtype {precision.catalog_dtype!r}; "
+                         f"want {'|'.join(_CATALOG_DTYPES)}")
+    if precision.accum_dtype != "f32":
+        raise ValueError("accum_dtype must be 'f32' (MXU contractions "
+                         "accumulate in f32)")
+    if precision.scale_block < 1:
+        raise ValueError(f"scale_block must be >= 1, "
+                         f"got {precision.scale_block}")
+    return precision
 
 
 class InteractBackend(NamedTuple):
@@ -64,6 +169,7 @@ class InteractBackend(NamedTuple):
     K_pad: int         # K rounded to the lane multiple
     block_users: int
     interpret: bool    # run Pallas in interpret mode (CPU fallback)
+    precision: Precision = Precision()   # storage policy for Minv state
 
     # ---- pad-once helpers (all trace-time no-ops when already padded, and
     # ---- identities for the reference backend) ------------------------------
@@ -178,7 +284,10 @@ class InteractBackend(NamedTuple):
         reaches HBM.  Reference kind: the seed linucb math.
         """
         if self.kind == "reference":
-            choice = linucb.choose_batch(w, Minv, contexts, occ, alpha)
+            # astype on an f32 array is a trace-time no-op — bf16 state
+            # upcasts here so reference and pallas score the same f32 math
+            choice = linucb.choose_batch(w, Minv.astype(jnp.float32),
+                                         contexts, occ, alpha)
             x = jnp.take_along_axis(
                 contexts, choice[:, None, None], axis=1
             )[:, 0]
@@ -313,31 +422,35 @@ class RetrievalBackend(NamedTuple):
     row_block: int     # reference user-row blocking (lax.map tile)
     item_block: int    # reference item tile (lax.scan step)
     interpret: bool
+    precision: Precision = Precision()   # storage policy (Minv + catalog)
 
-    def shortlist(self, w, Minv, occ, items, live, alpha, row0_items=0):
+    def shortlist(self, w, Minv, occ, items, live, alpha, row0_items=0,
+                  scales=None):
         """(scores [n, K_short], ids [n, K_short] i32 GLOBAL item ids).
 
         ``row0_items`` is the global id of the catalog slice's first row
         (``axis_index * n_local`` on an item-sharded mesh).  Entries that
         hold no live item (underfull catalog / all-retired tile) keep
-        score -inf and id -1.
+        score -inf and id -1.  ``items`` may be stored f32/bf16/int8 —
+        int8 needs the per-slot ``scales [N]`` f32 array; the kernels
+        dequantize tile-by-tile inside VMEM.
         """
         if self.kind == "reference":
             s, i = topk_ref(w, Minv, occ, items, live, alpha, self.K_short,
                             row_block=self.row_block,
-                            item_block=self.item_block)
+                            item_block=self.item_block, scales=scales)
         else:
             s, i = topk_ops.topk(w, Minv, occ, items, live, alpha,
                                  self.K_short, use_pallas=True,
                                  block_users=self.block_users,
                                  block_items=self.block_items,
-                                 interpret=self.interpret)
+                                 interpret=self.interpret, scales=scales)
         i = jnp.where(jnp.isfinite(s), i + row0_items, -1)
         return s, i
 
     def shortlist_pruned(self, w, Minv, occ, items_sorted, live_sorted,
                          ids_sorted, tile_mu, tile_r, tile_xn, tile_n,
-                         alpha):
+                         alpha, scales_sorted=None):
         """Cluster-pruned shortlist over a SORTED catalog slice
         (``core.itemclub`` builds the layout): computes the per-(user,
         tile) UCB upper bounds and streams only the tiles that can still
@@ -358,59 +471,16 @@ class RetrievalBackend(NamedTuple):
         if self.kind == "reference":
             s, i, skipped, total = topk_ref_pruned(
                 w, Minv, occ, items_sorted, live_sorted, ids_sorted,
-                alpha, self.K_short, tb, row_block=self.row_block)
+                alpha, self.K_short, tb, row_block=self.row_block,
+                scales=scales_sorted)
         else:
             s, i, skipped, total = topk_ops.topk_pruned(
                 w, Minv, occ, items_sorted, live_sorted, ids_sorted,
                 alpha, self.K_short, tb, use_pallas=True,
                 block_users=self.block_users, row_block=self.row_block,
-                interpret=self.interpret)
+                interpret=self.interpret, scales=scales_sorted)
         i = jnp.where(jnp.isfinite(s), i, -1)
         return s, i, skipped, total
-
-
-def get_retrieval_backend(
-    d: int,
-    K_short: int,
-    kind: str | None = None,
-    *,
-    block_users: int = 128,
-    block_items: int = 512,
-    row_block: int = 8,
-    item_block: int = 4096,
-    interpret: bool | None = None,
-) -> RetrievalBackend:
-    """Build the retrieval engine (selection mirrors ``get_backend``)."""
-    kind = resolve_kind(kind)
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    return RetrievalBackend(
-        kind=kind, d=d, K_short=K_short,
-        block_users=block_users, block_items=block_items,
-        row_block=row_block, item_block=item_block, interpret=interpret,
-    )
-
-
-def get_graph_backend(
-    n_rows: int,
-    n_cols: int | None = None,
-    kind: str | None = None,
-    *,
-    block_i: int = 256,
-    block_j: int = 4096,
-    row_block: int = 256,
-    interpret: bool | None = None,
-) -> GraphBackend:
-    """Build the graph engine for a run's row/column extents."""
-    kind = resolve_kind(kind)
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    return GraphBackend(
-        kind=kind, n_rows=n_rows,
-        n_cols=n_rows if n_cols is None else n_cols,
-        block_i=block_i, block_j=block_j, row_block=row_block,
-        interpret=interpret,
-    )
 
 
 def resolve_kind(kind: str | None = None) -> str:
@@ -424,6 +494,101 @@ def resolve_kind(kind: str | None = None) -> str:
     return kind
 
 
+class BackendConfig(NamedTuple):
+    """THE backend-construction surface: one resolved (kind, precision)
+    pair building every engine.  Replaces the three historical factories
+    (``get_backend`` / ``get_graph_backend`` / ``get_retrieval_backend``),
+    whose keyword surfaces had drifted apart; those names remain as thin
+    deprecated wrappers for one PR.
+
+        cfg = BackendConfig.create()              # env flags / auto
+        be  = cfg.interact(n, d, K)
+        gb  = cfg.graph(n_local, n_users)
+        rb  = cfg.retrieval(d, K_short)
+
+    Hashable (a NamedTuple of a str and a Precision), so it can ride
+    through jit-static arguments like the engines themselves.
+    """
+
+    kind: str
+    precision: Precision
+
+    @classmethod
+    def create(cls, kind: str | None = None,
+               precision=None) -> "BackendConfig":
+        """Resolve both selection flags — ``kind`` via
+        :func:`resolve_kind` (``REPRO_BACKEND``), ``precision`` via
+        :func:`resolve_precision` (``REPRO_PRECISION``)."""
+        return cls(kind=resolve_kind(kind),
+                   precision=resolve_precision(precision))
+
+    def _interpret(self, interpret: bool | None) -> bool:
+        if interpret is None:
+            return jax.default_backend() != "tpu"
+        return interpret
+
+    def interact(self, n: int, d: int, K: int, *, block_users: int = 256,
+                 interpret: bool | None = None) -> InteractBackend:
+        """Fused-interaction engine for a run's (n, d, K); padded dims
+        fixed here once."""
+        if self.kind == "reference":
+            n_pad, d_pad, K_pad, bu = n, d, K, block_users
+        else:
+            n_pad, d_pad, K_pad, bu = pad.padded_dims(n, d, K, block_users)
+        return InteractBackend(
+            kind=self.kind, n=n, d=d, K=K,
+            n_pad=n_pad, d_pad=d_pad, K_pad=K_pad,
+            block_users=bu, interpret=self._interpret(interpret),
+            precision=self.precision,
+        )
+
+    def graph(self, n_rows: int, n_cols: int | None = None, *,
+              block_i: int = 256, block_j: int = 4096,
+              row_block: int = 256,
+              interpret: bool | None = None) -> GraphBackend:
+        """Stage-2 graph engine for a run's row/column extents.  The
+        adjacency is bit-packed — there is nothing to store in reduced
+        precision, so the graph engine ignores ``precision``."""
+        return GraphBackend(
+            kind=self.kind, n_rows=n_rows,
+            n_cols=n_rows if n_cols is None else n_cols,
+            block_i=block_i, block_j=block_j, row_block=row_block,
+            interpret=self._interpret(interpret),
+        )
+
+    def retrieval(self, d: int, K_short: int, *, block_users: int = 128,
+                  block_items: int = 512, row_block: int = 8,
+                  item_block: int = 4096,
+                  interpret: bool | None = None) -> RetrievalBackend:
+        """Catalog-scale retrieval engine (streaming UCB top-K)."""
+        return RetrievalBackend(
+            kind=self.kind, d=d, K_short=K_short,
+            block_users=block_users, block_items=block_items,
+            row_block=row_block, item_block=item_block,
+            interpret=self._interpret(interpret),
+            precision=self.precision,
+        )
+
+
+# ---------------------------------------------------------------------------
+# deprecated factory names — thin wrappers for one PR (the bandit_service
+# playbook: keep the old names importable with a pointer, remove next PR)
+# ---------------------------------------------------------------------------
+
+_warned: set[str] = set()
+
+
+def _deprecated(old: str, new: str) -> None:
+    if old in _warned:      # once per process — tests stay quiet
+        return
+    _warned.add(old)
+    warnings.warn(
+        f"repro.core.backend.{old} is deprecated; build engines via "
+        f"BackendConfig.create(kind, precision).{new} instead",
+        DeprecationWarning, stacklevel=3,
+    )
+
+
 def get_backend(
     n: int,
     d: int,
@@ -432,17 +597,45 @@ def get_backend(
     *,
     block_users: int = 256,
     interpret: bool | None = None,
+    precision=None,
 ) -> InteractBackend:
-    """Build the engine for a run's (n, d, K); padded dims fixed here once."""
-    kind = resolve_kind(kind)
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    if kind == "reference":
-        n_pad, d_pad, K_pad, bu = n, d, K, block_users
-    else:
-        n_pad, d_pad, K_pad, bu = pad.padded_dims(n, d, K, block_users)
-    return InteractBackend(
-        kind=kind, n=n, d=d, K=K,
-        n_pad=n_pad, d_pad=d_pad, K_pad=K_pad,
-        block_users=bu, interpret=interpret,
-    )
+    """Deprecated — use ``BackendConfig.create(kind, precision).interact``."""
+    _deprecated("get_backend", "interact(n, d, K)")
+    return BackendConfig.create(kind, precision).interact(
+        n, d, K, block_users=block_users, interpret=interpret)
+
+
+def get_graph_backend(
+    n_rows: int,
+    n_cols: int | None = None,
+    kind: str | None = None,
+    *,
+    block_i: int = 256,
+    block_j: int = 4096,
+    row_block: int = 256,
+    interpret: bool | None = None,
+) -> GraphBackend:
+    """Deprecated — use ``BackendConfig.create(kind).graph``."""
+    _deprecated("get_graph_backend", "graph(n_rows, n_cols)")
+    return BackendConfig.create(kind).graph(
+        n_rows, n_cols, block_i=block_i, block_j=block_j,
+        row_block=row_block, interpret=interpret)
+
+
+def get_retrieval_backend(
+    d: int,
+    K_short: int,
+    kind: str | None = None,
+    *,
+    block_users: int = 128,
+    block_items: int = 512,
+    row_block: int = 8,
+    item_block: int = 4096,
+    interpret: bool | None = None,
+    precision=None,
+) -> RetrievalBackend:
+    """Deprecated — use ``BackendConfig.create(kind, precision).retrieval``."""
+    _deprecated("get_retrieval_backend", "retrieval(d, K_short)")
+    return BackendConfig.create(kind, precision).retrieval(
+        d, K_short, block_users=block_users, block_items=block_items,
+        row_block=row_block, item_block=item_block, interpret=interpret)

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from . import clustering, linucb
-from .backend import GraphBackend, get_graph_backend
+from .backend import BackendConfig, GraphBackend
 from .env_ops import EnvOps
 from .types import BanditHyper, ClusterStats, GraphState, LinUCBState, Metrics
 
@@ -56,7 +56,7 @@ def run(
     graph: GraphBackend | None = None,
 ) -> tuple[CLUBState, Metrics]:
     """Sequential run over T interactions (scan of length T)."""
-    gb = graph or get_graph_backend(ops.n_users)
+    gb = graph or BackendConfig.create().graph(ops.n_users)
     return _run(ops, key, hyper, T, d, gb)
 
 

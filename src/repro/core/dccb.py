@@ -34,7 +34,7 @@ import jax.numpy as jnp
 
 from . import clustering, linucb
 from ..runtime import stages
-from .backend import InteractBackend, get_backend
+from .backend import BackendConfig, InteractBackend
 from .env_ops import EnvOps
 from .types import BanditHyper
 
@@ -120,7 +120,8 @@ def interaction_phase(state: DCCBState, ops: EnvOps, key: jax.Array,
     semantics).  No budget: every user is live every step.
     """
     n, d = state.bw.shape
-    be = backend or get_backend(n, d, hyper.n_candidates)
+    be = backend or BackendConfig.create().interact(n, d,
+                                                     hyper.n_candidates)
 
     def score_lagged(carry):
         # Minv/w are derived fresh each step (Mw moves by buffer pops, not
@@ -207,7 +208,8 @@ def run(ops: EnvOps, key: jax.Array, hyper: BanditHyper, n_epochs: int,
     """n_epochs x (L interaction steps + gossip).  Returns (state, metrics,
     cluster-count after each gossip round)."""
     if backend is None:
-        backend = get_backend(ops.n_users, d, hyper.n_candidates)
+        backend = BackendConfig.create().interact(ops.n_users, d,
+                                                  hyper.n_candidates)
     return _run(ops, key, hyper, n_epochs, d, L, backend)
 
 

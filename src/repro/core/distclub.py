@@ -51,8 +51,7 @@ import jax.numpy as jnp
 from . import clustering, linucb
 from ..runtime import stages
 from ..runtime.collectives import NullCollectives
-from .backend import (GraphBackend, InteractBackend, get_backend,
-                      get_graph_backend)
+from .backend import BackendConfig, GraphBackend, InteractBackend
 from .env_ops import EnvOps
 from .types import (BanditHyper, ClusterStats, DistCLUBState, GraphState,
                     Metrics)
@@ -84,7 +83,7 @@ def stage2_comm_bytes(n: int, d: int) -> int:
 
 def _default_backend(state: DistCLUBState, hyper: BanditHyper):
     n, d = state.lin.b.shape
-    return get_backend(n, d, hyper.n_candidates)
+    return BackendConfig.create().interact(n, d, hyper.n_candidates)
 
 
 def _with_lin(state: DistCLUBState, Minv, b, occ) -> DistCLUBState:
@@ -132,7 +131,7 @@ def stage1(state: DistCLUBState, ops: EnvOps, key: jax.Array,
 def stage2(state: DistCLUBState, hyper: BanditHyper, d: int,
            graph: GraphBackend | None = None) -> DistCLUBState:
     """Network update, clustering, cluster statistics (the comm stage)."""
-    gb = graph or get_graph_backend(state.graph.labels.shape[0])
+    gb = graph or BackendConfig.create().graph(state.graph.labels.shape[0])
     res = stages.stage2_refresh(
         _NULL, gb, hyper, d,
         state.lin.Minv, state.lin.b, state.lin.occ, state.graph.adj,
@@ -193,10 +192,12 @@ def run(
     after each stage-2).
     """
     if backend is None:
-        backend = get_backend(ops.n_users, d, hyper.n_candidates)
+        backend = BackendConfig.create().interact(ops.n_users, d,
+                                                  hyper.n_candidates)
     if graph is None:
-        graph = get_graph_backend(ops.n_users, kind=backend.kind,
-                                  interpret=backend.interpret)
+        graph = BackendConfig(
+            kind=backend.kind, precision=backend.precision,
+        ).graph(ops.n_users, interpret=backend.interpret)
     return _run(ops, key, hyper, n_epochs, d, backend, graph)
 
 

@@ -60,7 +60,8 @@ try:  # PartitionSpec only needed for the sharded binding
 except ImportError:  # pragma: no cover
     P = None
 
-from .backend import get_graph_backend
+from .backend import BackendConfig
+from .catalog import dequantize
 
 
 class ItemStats(NamedTuple):
@@ -80,7 +81,9 @@ class ItemClusters(NamedTuple):
     labels: jnp.ndarray       # [capacity] i32 cluster label per slot
     perm: jnp.ndarray         # [capacity] i32 position -> slot id
     emb_sorted: jnp.ndarray   # [capacity, d] serving bank emb[perm]
+    #                             (bank dtype: f32/bf16/int8 codes)
     live_sorted: jnp.ndarray  # [capacity] f32 serving bank live[perm]
+    scale_sorted: jnp.ndarray  # [capacity] f32 serving bank scale[perm]
     tile_mu: jnp.ndarray      # [T, d] live-item centroid per tile
     tile_r: jnp.ndarray       # [T] max live |x - mu| per tile
     tile_xn: jnp.ndarray      # [T] max live |x| per tile
@@ -213,14 +216,18 @@ def build_clusters(catalog, stats: ItemStats | None = None, *,
     if stats is None:
         stats = init_stats(cap)
 
-    z = _item_features(bank.emb, stats, beta)
+    # features, tile summaries and bounds all run on the DEQUANTIZED
+    # stream — the exact f32 values the pruned kernels score — so the
+    # bounds dominate what is actually scored (f32 banks: identity)
+    emb_f = dequantize(bank)
+    z = _item_features(emb_f, stats, beta)
     # live slots first (stable -> ascending id), like add_items' slot scan
     by_live = jnp.argsort(-bank.live, stable=True).astype(jnp.int32)
     A = min(n_anchors, cap)
     anchor_ids = by_live[:A]
     z_a = z[anchor_ids]
 
-    gb = get_graph_backend(A, A, kind=kind, interpret=interpret)
+    gb = BackendConfig.create(kind).graph(A, A, interpret=interpret)
     adj = gb.init_adj()
     adj = gb.prune(adj, z_a, stats.occ[anchor_ids], gamma)
     anchor_labels = gb.cc(adj)                 # [A] i32 in [0, A)
@@ -233,11 +240,13 @@ def build_clusters(catalog, stats: ItemStats | None = None, *,
     # pushes them into the trailing tiles
     sort_key = jnp.where(bank.live > 0, labels, A)
     perm = jnp.argsort(sort_key, stable=True).astype(jnp.int32)
-    emb_sorted = bank.emb[perm]
+    emb_sorted = bank.emb[perm]          # stored dtype — kernels dequant
     live_sorted = bank.live[perm]
+    scale_sorted = bank.scale[perm]
 
     T = cap // tile_items
-    et = emb_sorted.reshape(T, tile_items, -1)
+    d = bank.emb.shape[1]
+    et = emb_f[perm].reshape(T, tile_items, -1)
     lt = live_sorted.reshape(T, tile_items)
     cnt = jnp.sum(lt, axis=1)
     mu = (jnp.sum(et * lt[..., None], axis=1)
@@ -246,11 +255,25 @@ def build_clusters(catalog, stats: ItemStats | None = None, *,
     tile_r = jnp.max(jnp.where(lt > 0, dist, 0.0), axis=1)
     tile_xn = jnp.max(
         jnp.where(lt > 0, jnp.linalg.norm(et, axis=-1), 0.0), axis=1)
+    # quantized banks: widen radius/max-norm by the per-tile quantization
+    # error bound so the bounds stay conservative even against re-rounded
+    # dequant chains (f32: widening is exactly zero — bit-identical)
+    if bank.emb.dtype == jnp.int8:
+        st = scale_sorted.reshape(T, tile_items)
+        qeps = jnp.sqrt(float(d)) * 0.5 * jnp.max(
+            jnp.where(lt > 0, st, 0.0), axis=1)
+    elif bank.emb.dtype == jnp.bfloat16:
+        qeps = tile_xn * 2.0 ** -8        # bf16 has 8 mantissa bits
+    else:
+        qeps = jnp.zeros_like(tile_xn)
+    tile_r = tile_r + qeps
+    tile_xn = tile_xn + qeps
 
     return ItemClusters(
         epoch=jnp.asarray(catalog.epoch, jnp.int32),
         labels=labels.astype(jnp.int32), perm=perm,
         emb_sorted=emb_sorted, live_sorted=live_sorted,
+        scale_sorted=scale_sorted.astype(jnp.float32),
         tile_mu=mu.astype(jnp.float32), tile_r=tile_r.astype(jnp.float32),
         tile_xn=tile_xn.astype(jnp.float32), tile_n=cnt.astype(jnp.int32),
         n_clusters=n_clusters,
@@ -284,16 +307,17 @@ def specs() -> ItemClusters:
     """PartitionSpecs: the cluster tables REPLICATE (each item shard
     slices its own position range via :func:`shard_slice`)."""
     return ItemClusters(epoch=P(), labels=P(), perm=P(), emb_sorted=P(),
-                        live_sorted=P(), tile_mu=P(), tile_r=P(),
-                        tile_xn=P(), tile_n=P(), n_clusters=P())
+                        live_sorted=P(), scale_sorted=P(), tile_mu=P(),
+                        tile_r=P(), tile_xn=P(), tile_n=P(),
+                        n_clusters=P())
 
 
 def shard_slice(clusters: ItemClusters, shard, n_local: int):
     """This shard's piece of the sorted stream: positions
     ``[shard * n_local, ...)`` and their whole tiles.  Returns
-    ``(emb, live, ids, tile_mu, tile_r, tile_xn, tile_n)`` — ``ids``
-    are the GLOBAL slot ids, so per-shard shortlists merge bit-equal to
-    the single-host stream (selection is by value)."""
+    ``(emb, live, ids, scale, tile_mu, tile_r, tile_xn, tile_n)`` —
+    ``ids`` are the GLOBAL slot ids, so per-shard shortlists merge
+    bit-equal to the single-host stream (selection is by value)."""
     tile = clusters.tile_items
     if n_local % tile:
         raise ValueError(
@@ -306,6 +330,7 @@ def shard_slice(clusters: ItemClusters, shard, n_local: int):
     return (sl(clusters.emb_sorted, row0, n_local),
             sl(clusters.live_sorted, row0, n_local),
             sl(clusters.perm, row0, n_local),
+            sl(clusters.scale_sorted, row0, n_local),
             sl(clusters.tile_mu, t0, T_local),
             sl(clusters.tile_r, t0, T_local),
             sl(clusters.tile_xn, t0, T_local),

@@ -32,7 +32,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core import clustering, linucb
-from ..core.backend import InteractBackend, get_backend
+from ..core.backend import BackendConfig, InteractBackend
 from ..core.env_ops import EnvOps, default_synthetic_ops
 from ..core.types import BanditHyper, Metrics
 from ..runtime import stages
@@ -72,7 +72,8 @@ def build_epoch_fn(mesh: Mesh, axes, n: int, d: int, L: int,
     n_shards = col.n_shards
     assert n % n_shards == 0
     n_local = n // n_shards
-    be = backend or get_backend(n_local, d, hyper.n_candidates)
+    be = backend or BackendConfig.create().interact(n_local, d,
+                                                    hyper.n_candidates)
     env = ops or default_synthetic_ops(n, d, hyper.n_candidates)
 
     def epoch(state: ShardedDCCB, key: jax.Array):

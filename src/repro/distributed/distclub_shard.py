@@ -40,8 +40,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..core.backend import (GraphBackend, InteractBackend, get_backend,
-                            get_graph_backend)
+from ..core.backend import BackendConfig, GraphBackend, InteractBackend
 from ..core.env_ops import EnvOps, default_synthetic_ops
 from ..core.types import BanditHyper, Metrics
 from ..kernels.graph import ops as graph_ops
@@ -123,9 +122,11 @@ def build_epoch_fn(mesh: Mesh, axes: tuple[str, ...], n: int, d: int,
     n_local = n // col.n_shards
     # the engines operate on the LOCAL shard inside shard_map (the graph
     # engine on [n_local, n] packed rows)
-    be = backend or get_backend(n_local, d, hyper.n_candidates)
-    gb = graph or get_graph_backend(n_local, n, kind=be.kind,
-                                    interpret=be.interpret)
+    be = backend or BackendConfig.create().interact(n_local, d,
+                                                    hyper.n_candidates)
+    gb = graph or BackendConfig(
+        kind=be.kind, precision=be.precision,
+    ).graph(n_local, n, interpret=be.interpret)
     env = ops or default_synthetic_ops(n, d, hyper.n_candidates)
 
     def epoch(state: ShardedDistCLUB, key: jax.Array):

@@ -36,7 +36,9 @@ from jax.experimental import pallas as pl
 def _choose_kernel(w_ref, minv_ref, ctx_ref, occ_ref, scal_ref,
                    choice_ref, x_ref):
     ctx = ctx_ref[...]          # [Bu, K, d]
-    minv = minv_ref[...]        # [Bu, d, d]
+    # Minv may be stored bf16 (Precision state_dtype); upcast in VMEM so
+    # the MXU contraction runs f32 (no-op for f32 inputs).
+    minv = minv_ref[...].astype(jnp.float32)   # [Bu, d, d]
     w = w_ref[...]              # [Bu, d]
     occ = occ_ref[...]          # [Bu]
     alpha = scal_ref[0]

@@ -50,7 +50,7 @@ def choose(
         wp, Mp, cp, op = w, Minv, contexts, occ     # already aligned
     else:
         wp = jnp.zeros((np_, dp), jnp.float32).at[:n, :d].set(w)
-        Mp = jnp.zeros((np_, dp, dp), jnp.float32).at[:n, :d, :d].set(Minv)
+        Mp = jnp.zeros((np_, dp, dp), Minv.dtype).at[:n, :d, :d].set(Minv)
         cp = jnp.zeros((np_, Kp, dp), jnp.float32).at[:n, :K, :d].set(contexts)
         op = jnp.zeros((np_,), occ.dtype).at[:n].set(occ)
 

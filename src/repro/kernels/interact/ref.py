@@ -19,7 +19,9 @@ def choose_ref(
     alpha: float,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (choice [n] i32, x [n, d])."""
-    scores = ucb_scores_ref(w, Minv, contexts, occ, alpha)
+    # Minv may be stored bf16 (Precision); score in f32 like the kernel.
+    scores = ucb_scores_ref(w, Minv.astype(jnp.float32), contexts, occ,
+                            alpha)
     choice = jnp.argmax(scores, axis=-1).astype(jnp.int32)
     x = jnp.take_along_axis(contexts, choice[:, None, None], axis=1)[:, 0]
     return choice, x

@@ -45,10 +45,10 @@ def rank1_update(
         return Mo, Minvo, bo
 
     def pad2(a):
-        out = jnp.zeros((np_, dp, dp), jnp.float32).at[:n, :d, :d].set(a)
+        out = jnp.zeros((np_, dp, dp), a.dtype).at[:n, :d, :d].set(a)
         # keep padded diagonal at 1 so Minv stays well-conditioned
         i = jnp.arange(d, dp)
-        return out.at[:, i, i].set(1.0)
+        return out.at[:, i, i].set(jnp.ones((), a.dtype))
 
     Mp, Minvp = pad2(M), pad2(Minv)
     bp = jnp.zeros((np_, dp), jnp.float32).at[:n, :d].set(b)
@@ -86,9 +86,9 @@ def rank1_update_inv(
             block_users=bu, interpret=interpret,
         )
 
-    Minvp = jnp.zeros((np_, dp, dp), jnp.float32).at[:n, :d, :d].set(Minv)
+    Minvp = jnp.zeros((np_, dp, dp), Minv.dtype).at[:n, :d, :d].set(Minv)
     i = jnp.arange(d, dp)
-    Minvp = Minvp.at[:, i, i].set(1.0)
+    Minvp = Minvp.at[:, i, i].set(jnp.ones((), Minv.dtype))
     bp = jnp.zeros((np_, dp), jnp.float32).at[:n, :d].set(b)
     xp = jnp.zeros((np_, dp), jnp.float32).at[:n, :d].set(x)
     rp = jnp.zeros((np_,), jnp.float32).at[:n].set(r)

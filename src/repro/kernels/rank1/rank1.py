@@ -21,8 +21,10 @@ from jax.experimental import pallas as pl
 
 def _rank1_kernel(m_ref, minv_ref, b_ref, x_ref, r_ref, mask_ref,
                   m_out, minv_out, b_out):
-    M = m_ref[...]             # [Bu, d, d]
-    Minv = minv_ref[...]       # [Bu, d, d]
+    M = m_ref[...]             # [Bu, d, d] (always f32)
+    # Minv may arrive bf16 (Precision state_dtype): upcast once in VMEM so
+    # the S-M math runs f32; for f32 inputs the astype is a no-op.
+    Minv = minv_ref[...].astype(jnp.float32)   # [Bu, d, d]
     b = b_ref[...]             # [Bu, d]
     x = x_ref[...]             # [Bu, d]
     r = r_ref[...]             # [Bu]
@@ -36,7 +38,8 @@ def _rank1_kernel(m_ref, minv_ref, b_ref, x_ref, r_ref, mask_ref,
     )                                                  # [Bu, d]
     denom = 1.0 + jnp.sum(xm * Mx, axis=-1)            # [Bu]
     outer_inv = Mx[:, :, None] * Mx[:, None, :]        # [Bu, d, d]
-    minv_out[...] = Minv - outer_inv / denom[:, None, None]
+    minv_out[...] = (Minv - outer_inv / denom[:, None, None]).astype(
+        minv_out.dtype)
     m_out[...] = M + xm[:, :, None] * xm[:, None, :]
     b_out[...] = b + (r * msk)[:, None] * x
 
@@ -46,7 +49,7 @@ def _rank1_inv_kernel(minv_ref, b_ref, x_ref, r_ref, mask_ref,
     """M-free variant: the sharded runtime drops the Gram matrix entirely
     (stage-2 recovers it by inversion), so its hot loop only touches Minv
     and b — 2 state passes instead of 4."""
-    Minv = minv_ref[...]       # [Bu, d, d]
+    Minv = minv_ref[...].astype(jnp.float32)   # [Bu, d, d] (may be bf16)
     b = b_ref[...]             # [Bu, d]
     x = x_ref[...]             # [Bu, d]
     r = r_ref[...]             # [Bu]
@@ -60,7 +63,8 @@ def _rank1_inv_kernel(minv_ref, b_ref, x_ref, r_ref, mask_ref,
     )                                                  # [Bu, d]
     denom = 1.0 + jnp.sum(xm * Mx, axis=-1)            # [Bu]
     outer_inv = Mx[:, :, None] * Mx[:, None, :]        # [Bu, d, d]
-    minv_out[...] = Minv - outer_inv / denom[:, None, None]
+    minv_out[...] = (Minv - outer_inv / denom[:, None, None]).astype(
+        minv_out.dtype)
     b_out[...] = b + (r * msk)[:, None] * x
 
 
@@ -87,7 +91,7 @@ def rank1_update_inv_pallas(
         in_specs=[bs2, bs1, bs1, bs0, bs0],
         out_specs=[bs2, bs1],
         out_shape=[
-            jax.ShapeDtypeStruct((n, d, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, d, d), Minv.dtype),
             jax.ShapeDtypeStruct((n, d), jnp.float32),
         ],
         interpret=interpret,
@@ -119,7 +123,7 @@ def rank1_update_pallas(
         out_specs=[bs2, bs2, bs1],
         out_shape=[
             jax.ShapeDtypeStruct((n, d, d), jnp.float32),
-            jax.ShapeDtypeStruct((n, d, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, d, d), Minv.dtype),
             jax.ShapeDtypeStruct((n, d), jnp.float32),
         ],
         interpret=interpret,

@@ -16,15 +16,19 @@ def rank1_update_ref(
 
     Minv' is the exact Sherman-Morrison inverse of M' = M + mask x x^T.
     A masked-out user is an identity update (x -> 0 path is exact).
+    M stays f32 always; Minv may be stored bf16 (see rank1_update_inv_ref).
     """
+    dt = Minv.dtype
+    Minv32 = Minv.astype(jnp.float32)
     m = mask.astype(x.dtype)
     xm = x * m[:, None]
-    Mx = jnp.einsum("nij,nj->ni", Minv, xm)
+    Mx = jnp.einsum("nij,nj->ni", Minv32, xm)
     denom = 1.0 + jnp.einsum("ni,ni->n", xm, Mx)
-    Minv_new = Minv - jnp.einsum("ni,nj->nij", Mx, Mx) / denom[:, None, None]
+    Minv_new = Minv32 - jnp.einsum("ni,nj->nij", Mx, Mx) / denom[:, None,
+                                                                 None]
     M_new = M + jnp.einsum("ni,nj->nij", xm, xm)
     b_new = b + (r * m)[:, None] * x
-    return M_new, Minv_new, b_new
+    return M_new, Minv_new.astype(dt), b_new
 
 
 def rank1_update_inv_ref(
@@ -34,11 +38,19 @@ def rank1_update_inv_ref(
     r: jnp.ndarray,       # [n]
     mask: jnp.ndarray,    # [n] bool
 ):
-    """M-free oracle: (Minv', b') only (the sharded runtime's state)."""
+    """M-free oracle: (Minv', b') only (the sharded runtime's state).
+
+    ``Minv`` may be stored bf16 (``Precision``): the S-M math runs in f32
+    and the result is written back in the storage dtype.  For f32 both
+    astypes are trace-time no-ops — bit-identical to the historical path.
+    """
+    dt = Minv.dtype
+    Minv32 = Minv.astype(jnp.float32)
     m = mask.astype(x.dtype)
     xm = x * m[:, None]
-    Mx = jnp.einsum("nij,nj->ni", Minv, xm)
+    Mx = jnp.einsum("nij,nj->ni", Minv32, xm)
     denom = 1.0 + jnp.einsum("ni,ni->n", xm, Mx)
-    Minv_new = Minv - jnp.einsum("ni,nj->nij", Mx, Mx) / denom[:, None, None]
+    Minv_new = Minv32 - jnp.einsum("ni,nj->nij", Mx, Mx) / denom[:, None,
+                                                                 None]
     b_new = b + (r * m)[:, None] * x
-    return Minv_new, b_new
+    return Minv_new.astype(dt), b_new

@@ -32,15 +32,23 @@ def topk(
     block_users: int = 128,
     block_items: int = 512,
     interpret: bool | None = None,
+    scales: jnp.ndarray | None = None,   # [N] f32 per-slot dequant scales
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """(scores [n, k_short], ids [n, k_short]).  Pallas on TPU, jnp
     oracle elsewhere; ids of dead/underfull entries are whatever the
     selection produced — callers wanting a sentinel mask on
-    ``isfinite(scores)`` (``core.backend.RetrievalBackend`` does)."""
+    ``isfinite(scores)`` (``core.backend.RetrievalBackend`` does).
+
+    ``items``/``Minv`` may be reduced-precision (``Precision``): padding
+    preserves the storage dtype and the kernels dequantize in VMEM —
+    ``scales`` carries the int8 catalog's per-slot scales (None for
+    f32/bf16).  Padded slots keep ``live = 0``, so their scale is
+    irrelevant (zero-padded here)."""
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     if not use_pallas:
-        return topk_ref(w, Minv, occ, items, live, alpha, k_short)
+        return topk_ref(w, Minv, occ, items, live, alpha, k_short,
+                        scales=scales)
 
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -53,19 +61,21 @@ def topk(
 
     if (n, d, N) == (n_pad, d_pad, N_pad):
         wp, Mp, op = w, Minv, occ
-        ip, lp = items, live.astype(jnp.float32)
+        ip, lp, sp = items, live.astype(jnp.float32), scales
     else:
         wp = jnp.zeros((n_pad, d_pad), jnp.float32).at[:n, :d].set(w)
-        Mp = jnp.zeros((n_pad, d_pad, d_pad), jnp.float32
+        Mp = jnp.zeros((n_pad, d_pad, d_pad), Minv.dtype
                        ).at[:n, :d, :d].set(Minv)
         op = jnp.zeros((n_pad,), occ.dtype).at[:n].set(occ)
-        ip = jnp.zeros((N_pad, d_pad), jnp.float32).at[:N, :d].set(items)
+        ip = jnp.zeros((N_pad, d_pad), items.dtype).at[:N, :d].set(items)
         lp = jnp.zeros((N_pad,), jnp.float32
                        ).at[:N].set(live.astype(jnp.float32))
+        sp = (None if scales is None
+              else jnp.zeros((N_pad,), jnp.float32).at[:N].set(scales))
 
     scores, ids = topk_pallas(
         wp, Mp, op, ip, lp, alpha, k_short,
-        block_users=bu, block_items=bt, interpret=interpret,
+        block_users=bu, block_items=bt, interpret=interpret, scales=sp,
     )
     return scores[:n], ids[:n]
 
@@ -85,6 +95,7 @@ def topk_pruned(
     block_users: int = 128,
     row_block: int = 8,
     interpret: bool | None = None,
+    scales: jnp.ndarray | None = None,   # [N] f32, sorted order
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Cluster-pruned top-K: (scores [n, k_short], ids [n, k_short],
     tiles_skipped [], tile_visits_total []) — shortlist bit-equal to
@@ -103,7 +114,8 @@ def topk_pruned(
     assert N % T == 0, (N, T)
     if not use_pallas:
         return topk_ref_pruned(w, Minv, occ, items, live, ids, alpha,
-                               k_short, tb, row_block=row_block)
+                               k_short, tb, row_block=row_block,
+                               scales=scales)
 
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -113,18 +125,18 @@ def topk_pruned(
 
     if (n, d) == (n_pad, d_pad):
         wp, Mp, op, tbp = w, Minv, occ, tb
-        ip = items.astype(jnp.float32)
+        ip = items
     else:
         wp = jnp.zeros((n_pad, d_pad), jnp.float32).at[:n, :d].set(w)
-        Mp = jnp.zeros((n_pad, d_pad, d_pad), jnp.float32
+        Mp = jnp.zeros((n_pad, d_pad, d_pad), Minv.dtype
                        ).at[:n, :d, :d].set(Minv)
         op = jnp.zeros((n_pad,), occ.dtype).at[:n].set(occ)
         tbp = jnp.full((n_pad, T), -jnp.inf, jnp.float32).at[:n].set(tb)
-        ip = jnp.zeros((N, d_pad), jnp.float32).at[:, :d].set(items)
+        ip = jnp.zeros((N, d_pad), items.dtype).at[:, :d].set(items)
     scores, out_ids, sk = topk_pruned_pallas(
         wp, Mp, op, ip, live.astype(jnp.float32), ids.astype(jnp.int32),
         tbp, alpha, k_short,
-        block_users=bu, block_items=bt, interpret=interpret,
+        block_users=bu, block_items=bt, interpret=interpret, scales=scales,
     )
     total = jnp.asarray(T * (n_pad // bu), jnp.int32)
     return scores[:n], out_ids[:n], jnp.sum(sk).astype(jnp.int32), total

@@ -98,9 +98,17 @@ def topk_ref(
     *,
     row_block: int = 8,
     item_block: int = 4096,
+    scales: jnp.ndarray | None = None,   # [N] f32 per-slot dequant scales
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """(scores [n, k_short], ids [n, k_short] i32; dead/pad entries keep
-    score -inf — the caller maps them to id -1)."""
+    score -inf — the caller maps them to id -1).
+
+    ``items`` may be stored bf16 or int8 (``Precision``): scoring always
+    runs on the f32 dequantized stream ``items.astype(f32) * scales`` —
+    for int8 the caller passes the catalog's per-slot scales; bf16/f32
+    pass ``scales=None`` and the astype upcast is the whole dequant (a
+    no-op for f32, keeping the default policy bit-identical).  ``Minv``
+    may be bf16 and is upcast the same way."""
     n, d = w.shape
     N = items.shape[0]
     ib = min(item_block, _round_up(N, 8))
@@ -108,9 +116,13 @@ def topk_ref(
     rb = min(row_block, n)
     npad = _round_up(n, rb)
 
-    items_p = jnp.pad(items.astype(jnp.float32), ((0, Np - N), (0, 0)))
+    items_f = items.astype(jnp.float32)
+    if scales is not None:
+        items_f = items_f * scales.astype(jnp.float32)[:, None]
+    items_p = jnp.pad(items_f, ((0, Np - N), (0, 0)))
     live_p = jnp.pad(live.astype(jnp.float32), (0, Np - N))
-    mf = jnp.pad(Minv.reshape(n, d * d), ((0, npad - n), (0, 0)))
+    mf = jnp.pad(Minv.astype(jnp.float32).reshape(n, d * d),
+                 ((0, npad - n), (0, 0)))
     w_p = jnp.pad(w, ((0, npad - n), (0, 0)))
     widen = jnp.pad(jnp.sqrt(jnp.log1p(occ.astype(jnp.float32))),
                     (0, npad - n))
@@ -186,6 +198,7 @@ def tile_bounds(
     compact (centroid term) and when Minv is diffuse (max-norm term)."""
     n, d = w.shape
     T = tile_mu.shape[0]
+    Minv = Minv.astype(jnp.float32)     # bf16 state: eigvalsh wants f32
     lmax = jnp.linalg.eigvalsh(Minv)[:, -1]            # [n] largest eig
     sl = jnp.sqrt(jnp.maximum(lmax, 0.0))
     est = w @ tile_mu.T + jnp.linalg.norm(w, axis=1)[:, None] * tile_r[None]
@@ -211,6 +224,7 @@ def topk_ref_pruned(
     tb: jnp.ndarray,       # [n, T] tile upper bounds (tile = N // T)
     *,
     row_block: int = 8,
+    scales: jnp.ndarray | None = None,   # [N] f32 per-slot dequant scales
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """(scores [n, k_short], ids [n, k_short] — BIT-EQUAL to the
     unpruned shortlist over the unsorted catalog — plus
@@ -240,7 +254,8 @@ def topk_ref_pruned(
     inv = jnp.argsort(order).astype(jnp.int32)
     pad_u = npad - n
     w_p = jnp.pad(w[order], ((0, pad_u), (0, 0)))
-    mf = jnp.pad(Minv.reshape(n, d * d)[order], ((0, pad_u), (0, 0)))
+    mf = jnp.pad(Minv.astype(jnp.float32).reshape(n, d * d)[order],
+                 ((0, pad_u), (0, 0)))
     widen = jnp.pad(jnp.sqrt(jnp.log1p(occ.astype(jnp.float32)))[order],
                     (0, pad_u))
     # padded users bound every tile at -inf: they vote "skip" as soon as
@@ -249,6 +264,8 @@ def topk_ref_pruned(
     tb_p = jnp.pad(tb[order], ((0, pad_u), (0, 0)),
                    constant_values=NEG_INF)
     items_f = items.astype(jnp.float32)
+    if scales is not None:
+        items_f = items_f * scales.astype(jnp.float32)[:, None]
     live_f = live.astype(jnp.float32)
     ids_i = ids.astype(jnp.int32)
 

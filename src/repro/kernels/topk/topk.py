@@ -57,13 +57,24 @@ from .ref import NEG_INF, select_topk
 # as in the unpruned stream.
 
 
-def _topk_kernel(w_ref, minv_ref, occ_ref, items_ref, live_ref, scal_ref,
-                 sc_ref, id_ref, *, k_short: int):
+def _topk_kernel(*refs, k_short: int, has_scales: bool):
+    # With has_scales (int8 catalog) a per-slot scale block rides along
+    # after `live`; f32/bf16 programs are EXACTLY the historical ones —
+    # no extra input, and the astype upcasts are trace-time no-ops at f32.
+    if has_scales:
+        (w_ref, minv_ref, occ_ref, items_ref, live_ref, scale_ref,
+         scal_ref, sc_ref, id_ref) = refs
+    else:
+        (w_ref, minv_ref, occ_ref, items_ref, live_ref,
+         scal_ref, sc_ref, id_ref) = refs
+        scale_ref = None
     t = pl.program_id(1)
     w = w_ref[...]                     # [Bu, d]
-    minv = minv_ref[...]               # [Bu, d, d]
+    minv = minv_ref[...].astype(jnp.float32)   # [Bu, d, d] (may be bf16)
     occ = occ_ref[...]                 # [Bu]
-    x = items_ref[...]                 # [Bt, d]
+    x = items_ref[...].astype(jnp.float32)     # [Bt, d] (bf16/int8 ok)
+    if scale_ref is not None:
+        x = x * scale_ref[...][:, None]        # int8 dequant in VMEM
     live = live_ref[...]               # [Bt]
     alpha = scal_ref[0]
     bu, d = w.shape
@@ -112,6 +123,7 @@ def topk_pallas(
     block_users: int = 128,
     block_items: int = 512,
     interpret: bool = False,
+    scales: jnp.ndarray | None = None,   # [N] f32 int8 dequant scales
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """(scores [n, k_short], ids [n, k_short] i32) — the [n, N] score
     matrix never exists; the running shortlist lives in revisited output
@@ -123,17 +135,25 @@ def topk_pallas(
     grid = (n // block_users, N // block_items)
     scal = jnp.array([alpha], jnp.float32)
 
+    in_specs = [
+        pl.BlockSpec((block_users, d), lambda i, t: (i, 0)),
+        pl.BlockSpec((block_users, d, d), lambda i, t: (i, 0, 0)),
+        pl.BlockSpec((block_users,), lambda i, t: (i,)),
+        pl.BlockSpec((block_items, d), lambda i, t: (t, 0)),
+        pl.BlockSpec((block_items,), lambda i, t: (t,)),
+    ]
+    operands = [w, Minv, occ, items, live]
+    if scales is not None:
+        in_specs.append(pl.BlockSpec((block_items,), lambda i, t: (t,)))
+        operands.append(scales)
+    in_specs.append(pl.BlockSpec((1,), lambda i, t: (0,)))
+    operands.append(scal)
+
     return pl.pallas_call(
-        functools.partial(_topk_kernel, k_short=k_short),
+        functools.partial(_topk_kernel, k_short=k_short,
+                          has_scales=scales is not None),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_users, d), lambda i, t: (i, 0)),
-            pl.BlockSpec((block_users, d, d), lambda i, t: (i, 0, 0)),
-            pl.BlockSpec((block_users,), lambda i, t: (i,)),
-            pl.BlockSpec((block_items, d), lambda i, t: (t, 0)),
-            pl.BlockSpec((block_items,), lambda i, t: (t,)),
-            pl.BlockSpec((1,), lambda i, t: (0,)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_users, k_short), lambda i, t: (i, 0)),
             pl.BlockSpec((block_users, k_short), lambda i, t: (i, 0)),
@@ -143,12 +163,17 @@ def topk_pallas(
             jax.ShapeDtypeStruct((n, k_short), jnp.int32),
         ],
         interpret=interpret,
-    )(w, Minv, occ, items, live, scal)
+    )(*operands)
 
 
-def _topk_pruned_kernel(w_ref, minv_ref, occ_ref, items_ref, live_ref,
-                        ids_ref, tb_ref, scal_ref, sc_ref, id_ref, sk_ref,
-                        *, k_short: int):
+def _topk_pruned_kernel(*refs, k_short: int, has_scales: bool):
+    if has_scales:
+        (w_ref, minv_ref, occ_ref, items_ref, live_ref, ids_ref, tb_ref,
+         scale_ref, scal_ref, sc_ref, id_ref, sk_ref) = refs
+    else:
+        (w_ref, minv_ref, occ_ref, items_ref, live_ref, ids_ref, tb_ref,
+         scal_ref, sc_ref, id_ref, sk_ref) = refs
+        scale_ref = None
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -167,9 +192,11 @@ def _topk_pruned_kernel(w_ref, minv_ref, occ_ref, items_ref, live_ref,
     @pl.when(~skip)
     def _():
         w = w_ref[...]                     # [Bu, d]
-        minv = minv_ref[...]               # [Bu, d, d]
+        minv = minv_ref[...].astype(jnp.float32)   # [Bu, d, d] (bf16 ok)
         occ = occ_ref[...]                 # [Bu]
-        x = items_ref[...]                 # [Bt, d]
+        x = items_ref[...].astype(jnp.float32)     # [Bt, d] (bf16/int8 ok)
+        if scale_ref is not None:
+            x = x * scale_ref[...][:, None]        # int8 dequant in VMEM
         live = live_ref[...]               # [Bt]
         alpha = scal_ref[0]
         bu, d = w.shape
@@ -213,6 +240,7 @@ def topk_pruned_pallas(
     block_users: int = 128,
     block_items: int = 512,
     interpret: bool = False,
+    scales: jnp.ndarray | None = None,   # [N] f32, sorted order
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """(scores [n, k_short], ids [n, k_short] i32,
     skipped [n // block_users, 1] i32 — tiles skipped per user block)."""
@@ -225,19 +253,27 @@ def topk_pruned_pallas(
     grid = (n // block_users, T)
     scal = jnp.array([alpha], jnp.float32)
 
+    in_specs = [
+        pl.BlockSpec((block_users, d), lambda i, t: (i, 0)),
+        pl.BlockSpec((block_users, d, d), lambda i, t: (i, 0, 0)),
+        pl.BlockSpec((block_users,), lambda i, t: (i,)),
+        pl.BlockSpec((block_items, d), lambda i, t: (t, 0)),
+        pl.BlockSpec((block_items,), lambda i, t: (t,)),
+        pl.BlockSpec((block_items,), lambda i, t: (t,)),
+        pl.BlockSpec((block_users, T), lambda i, t: (i, 0)),
+    ]
+    operands = [w, Minv, occ, items, live, ids, tb]
+    if scales is not None:
+        in_specs.append(pl.BlockSpec((block_items,), lambda i, t: (t,)))
+        operands.append(scales)
+    in_specs.append(pl.BlockSpec((1,), lambda i, t: (0,)))
+    operands.append(scal)
+
     return pl.pallas_call(
-        functools.partial(_topk_pruned_kernel, k_short=k_short),
+        functools.partial(_topk_pruned_kernel, k_short=k_short,
+                          has_scales=scales is not None),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_users, d), lambda i, t: (i, 0)),
-            pl.BlockSpec((block_users, d, d), lambda i, t: (i, 0, 0)),
-            pl.BlockSpec((block_users,), lambda i, t: (i,)),
-            pl.BlockSpec((block_items, d), lambda i, t: (t, 0)),
-            pl.BlockSpec((block_items,), lambda i, t: (t,)),
-            pl.BlockSpec((block_items,), lambda i, t: (t,)),
-            pl.BlockSpec((block_users, T), lambda i, t: (i, 0)),
-            pl.BlockSpec((1,), lambda i, t: (0,)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_users, k_short), lambda i, t: (i, 0)),
             pl.BlockSpec((block_users, k_short), lambda i, t: (i, 0)),
@@ -249,4 +285,4 @@ def topk_pruned_pallas(
             jax.ShapeDtypeStruct((n // block_users, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(w, Minv, occ, items, live, ids, tb, scal)
+    )(*operands)

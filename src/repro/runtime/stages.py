@@ -285,6 +285,9 @@ def stage2_refresh(col, gb, hyper, d, Minv, b, occ, adj) -> Stage2Refresh:
     n_local = Minv.shape[0]
     row0 = col.axis_index() * n_local
 
+    # serving sessions may carry Minv in a reduced Precision state dtype;
+    # the solves/inversions here run in f32 (no-op upcast for f32 state)
+    Minv = Minv.astype(jnp.float32)
     v_local = linucb.user_vector(Minv, b)                     # [n_local, d]
     v_all = col.all_gather(v_local)                           # [n, d]
     occ_all = col.all_gather(occ)                             # [n]

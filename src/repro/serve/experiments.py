@@ -102,34 +102,56 @@ def _hash01(user_ids: jnp.ndarray, salt) -> jnp.ndarray:
 
 
 @jax.jit
-def _assign(user_ids, fractions, enabled, salt):
+def _assign(user_ids, fractions, enabled, salt, scale):
     """arm[B] i32 (-1 = padding).  Primary assignment cuts the unit
     interval at the cumulative fractions; requests landing on a disabled
     arm fall through to the ENABLED-renormalized cut with the same hash
-    point, so survivors keep every user they already had."""
+    point, so survivors keep every user they already had.
+
+    ``scale[a] < 1`` is the PROBATION throttle: the arm accepts only the
+    leading ``scale`` sub-interval of its own primary interval (measured
+    by the same hash point — the accepted set is a stable prefix, and it
+    grows back to the full interval when the arm is restored).  Rejected
+    positions fall through to the secondary cut exactly like a disabled
+    arm's users, and the secondary cut spans only FULL-scale enabled
+    arms — so an arm entering or leaving probation never moves a single
+    user owned by a healthy survivor."""
     h = _hash01(user_ids, salt)
     f = fractions.astype(jnp.float32)
-    cum = jnp.cumsum(f).at[-1].set(jnp.inf)      # last arm absorbs rounding
+    cumf = jnp.cumsum(f)
+    cum = cumf.at[-1].set(jnp.inf)               # last arm absorbs rounding
     primary = jnp.searchsorted(cum, h, side="right").astype(jnp.int32)
-    f2 = jnp.where(enabled, f, 0.0)
+    lo = cumf - f
+    pos = (h - lo[primary]) / jnp.maximum(f[primary], 1e-9)
+    take = enabled[primary] & ((scale[primary] >= 1.0)
+                               | (pos < scale[primary]))
+    full = enabled & (scale >= 1.0)
+    # all enabled arms throttled (pathological): fall back to enabled set
+    full = jnp.where(jnp.any(full), full, enabled)
+    f2 = jnp.where(full, f, 0.0)
     f2 = f2 / jnp.maximum(jnp.sum(f2), 1e-9)
     cum2 = jnp.cumsum(f2).at[-1].set(jnp.inf)
     secondary = jnp.searchsorted(cum2, h, side="right").astype(jnp.int32)
-    arm = jnp.where(enabled[primary], primary, secondary)
+    arm = jnp.where(take, primary, secondary)
     return jnp.where(user_ids >= 0, arm, -1)
 
 
-def assign_arms(exp_or_uids, fractions=None, enabled=None, salt=0):
+def assign_arms(exp_or_uids, fractions=None, enabled=None, salt=0,
+                scale=None):
     """Sticky arm per request: ``assign_arms(exp, user_ids)`` or the raw
-    form ``assign_arms(user_ids, fractions, enabled, salt)``."""
+    form ``assign_arms(user_ids, fractions, enabled, salt[, scale])``."""
     if isinstance(exp_or_uids, Experiment):
         exp, uids = exp_or_uids, fractions
         return _assign(jnp.asarray(uids),
                        jnp.asarray(exp.fractions, jnp.float32),
-                       jnp.asarray(exp.enabled), jnp.uint32(exp.salt))
+                       jnp.asarray(exp.enabled), jnp.uint32(exp.salt),
+                       jnp.asarray(_arm_scales(exp), jnp.float32))
+    n = len(fractions)
+    sc = jnp.ones((n,), jnp.float32) if scale is None \
+        else jnp.asarray(scale, jnp.float32)
     return _assign(jnp.asarray(exp_or_uids),
                    jnp.asarray(fractions, jnp.float32),
-                   jnp.asarray(enabled), jnp.uint32(salt))
+                   jnp.asarray(enabled), jnp.uint32(salt), sc)
 
 
 # ---------------------------------------------------------------------------
@@ -241,18 +263,49 @@ class Experiment:
     counts: Any = None          # np [n_users] lifetime interaction counts
     totals: Any = None          # per-arm accounting (np [n_arms] each)
     events: tuple = ()          # ("disable", step, name, breaches) etc.
+    probation_tx: int = 0       # txs a breached arm sits out; 0 = forever
+    probation_fraction: float = 0.25   # throttled share while on probation
+    stages: tuple = ()          # per-arm: HEALTHY/BENCHED/PROBATION/PERMANENT
+    stage_since: tuple = ()     # step the arm entered its current stage
 
     @property
     def n_arms(self) -> int:
         return len(self.arms)
 
 
+# probation life-cycle stages (per arm)
+HEALTHY = 0      # serving its full interval
+BENCHED = 1      # breached; sitting out the probation window
+PROBATION = 2    # re-enabled at probation_fraction of its own interval
+PERMANENT = 3    # breached ON probation — never re-enabled
+
+
+def _arm_scales(exp: "Experiment") -> np.ndarray:
+    """Per-arm accepted share of its OWN primary interval (the probation
+    throttle; 1.0 = full interval).  Disabled arms keep scale 0 so the
+    raw-form assignment stays well-defined either way."""
+    st = exp.stages or (HEALTHY,) * exp.n_arms
+    return np.array(
+        [0.0 if not en
+         else (exp.probation_fraction if s == PROBATION else 1.0)
+         for en, s in zip(exp.enabled, st)], np.float32)
+
+
 def create(sessions, *, names=None, fractions=None, salt: int = 0,
            selector: TSSelector | None = None, guard_cfg=None,
-           snapshot_every: int = 16) -> Experiment:
+           snapshot_every: int = 16, probation_tx: int = 0,
+           probation_fraction: float = 0.25) -> Experiment:
     """Wrap ``sessions`` (each its own ``OnlineBandit``) as experiment
     arms.  All arms must serve the same user/context universe
-    (equal ``n_users`` and ``d``).  ``fractions`` defaults to uniform."""
+    (equal ``n_users`` and ``d``).  ``fractions`` defaults to uniform.
+
+    ``probation_tx > 0`` enables the probation window: a guardrail-
+    disabled arm sits out ``probation_tx`` routing transactions, then
+    re-enables THROTTLED to ``probation_fraction`` of its own sticky
+    interval (survivors' users never move); a clean probation window of
+    the same length restores it to full traffic, a second breach while
+    on probation disables it permanently.  ``probation_tx = 0`` keeps
+    the historical behavior — every disable is permanent."""
     arms = tuple(sessions)
     if not arms:
         raise ValueError("an experiment needs at least one arm")
@@ -282,6 +335,8 @@ def create(sessions, *, names=None, fractions=None, salt: int = 0,
     if selector is not None and selector.alpha.shape[1] != A:
         raise ValueError(f"selector is over {selector.alpha.shape[1]} "
                          f"arms, experiment has {A}")
+    if not 0.0 < float(probation_fraction) <= 1.0:
+        raise ValueError("probation_fraction must be in (0, 1]")
     return Experiment(
         arms=arms, names=names, fractions=fractions, enabled=(True,) * A,
         salt=int(salt), selector=selector, guard_cfg=guard_cfg,
@@ -289,7 +344,10 @@ def create(sessions, *, names=None, fractions=None, salt: int = 0,
         snapshots=tuple(s.state for s in arms),
         snapshot_every=int(snapshot_every),
         counts=np.zeros(cfg0.n_users, np.int64),
-        totals=_zero_totals(A), shares=((0, fractions),))
+        totals=_zero_totals(A), shares=((0, fractions),),
+        probation_tx=int(probation_tx),
+        probation_fraction=float(probation_fraction),
+        stages=(HEALTHY,) * A, stage_since=(0,) * A)
 
 
 # ---------------------------------------------------------------------------
@@ -301,7 +359,11 @@ def _disable_arm(exp: Experiment, a: int, breaches) -> Experiment:
     """Breached arm: roll its state back to its snapshot, clear its
     pending ring, and re-route its traffic (the assignment's
     enabled-fraction fallback).  The LAST enabled arm is never disabled
-    — the breach is recorded and its monitors reset instead."""
+    — the breach is recorded and its monitors reset instead.
+
+    With ``probation_tx > 0`` a first breach BENCHES the arm (eligible
+    for a throttled comeback, see :func:`_advance`); a breach while ON
+    probation disables it permanently."""
     guards = list(exp.guards)
     if sum(exp.enabled) <= 1:
         guards[a] = guardrails_mod.post_rollback_state(exp.guard_cfg,
@@ -317,10 +379,17 @@ def _disable_arm(exp: Experiment, a: int, breaches) -> Experiment:
     enabled[a] = False
     guards[a] = guardrails_mod.post_rollback_state(exp.guard_cfg,
                                                    guards[a])
+    stages = list(exp.stages or (HEALTHY,) * exp.n_arms)
+    since = list(exp.stage_since or (0,) * exp.n_arms)
+    on_probation = stages[a] == PROBATION
+    stages[a] = (PERMANENT if on_probation or exp.probation_tx <= 0
+                 else BENCHED)
+    since[a] = exp.steps
+    tag = "disable-permanent" if on_probation else "disable"
     return dataclasses.replace(
         exp, arms=tuple(arms), enabled=tuple(enabled), guards=tuple(guards),
-        events=exp.events + (("disable", exp.steps, exp.names[a],
-                              breaches),))
+        stages=tuple(stages), stage_since=tuple(since),
+        events=exp.events + ((tag, exp.steps, exp.names[a], breaches),))
 
 
 def _admit_arm(exp: Experiment, a: int, **sample) -> Experiment:
@@ -335,11 +404,41 @@ def _admit_arm(exp: Experiment, a: int, **sample) -> Experiment:
     return exp
 
 
+def _probation_tick(exp: Experiment, steps: int) -> Experiment:
+    """Probation life-cycle transitions (no-op when ``probation_tx`` is
+    0): a BENCHED arm that has sat out the window re-enables THROTTLED
+    (``probation_fraction`` of its own sticky interval — the assignment's
+    scale cut, so healthy survivors keep every user they own); an arm
+    that stayed clean through a full probation window is restored."""
+    if exp.probation_tx <= 0 or not exp.stages:
+        return exp
+    stages = list(exp.stages)
+    since = list(exp.stage_since)
+    enabled = list(exp.enabled)
+    events = exp.events
+    for a in range(exp.n_arms):
+        waited = steps - since[a]
+        if stages[a] == BENCHED and waited >= exp.probation_tx:
+            enabled[a] = True
+            stages[a] = PROBATION
+            since[a] = steps
+            events = events + (("probation", steps, exp.names[a]),)
+        elif stages[a] == PROBATION and waited >= exp.probation_tx:
+            stages[a] = HEALTHY
+            since[a] = steps
+            events = events + (("restore", steps, exp.names[a]),)
+    return dataclasses.replace(
+        exp, enabled=tuple(enabled), stages=tuple(stages),
+        stage_since=tuple(since), events=events)
+
+
 def _advance(exp: Experiment) -> Experiment:
-    """Post-routing bookkeeping: refresh healthy rollback anchors and,
-    at selector epoch boundaries, re-weight the traffic fractions."""
+    """Post-routing bookkeeping: refresh healthy rollback anchors, run
+    the probation life-cycle, and at selector epoch boundaries re-weight
+    the traffic fractions."""
     steps = exp.steps + 1
     exp = dataclasses.replace(exp, steps=steps)
+    exp = _probation_tick(exp, steps)
     if (exp.guard_cfg is not None and exp.snapshot_every > 0
             and steps % exp.snapshot_every == 0):
         snaps = tuple(
@@ -653,6 +752,10 @@ def _ckpt_payload(exp: Experiment) -> dict:
             "steps": np.asarray(exp.steps, np.int64),
             "epoch": np.asarray(exp.epoch, np.int64),
             "counts": exp.counts,
+            "stages": np.asarray(exp.stages or (HEALTHY,) * exp.n_arms,
+                                 np.int32),
+            "stage_since": np.asarray(exp.stage_since or (0,) * exp.n_arms,
+                                      np.int64),
             "totals": dict(exp.totals)}
     return {"arms": arms, "selector": sel, "meta": meta}
 
@@ -727,6 +830,8 @@ def restore(exp: Experiment, ckpt, step: int | None = None):
         enabled=tuple(bool(e) for e in np.asarray(meta["enabled"])),
         salt=int(meta["salt"]), steps=int(meta["steps"]),
         epoch=int(meta["epoch"]), counts=np.asarray(meta["counts"]),
+        stages=tuple(int(s) for s in np.asarray(meta["stages"])),
+        stage_since=tuple(int(s) for s in np.asarray(meta["stage_since"])),
         totals={k: np.asarray(v) for k, v in meta["totals"].items()},
         guards=(guardrails_mod.GuardrailState(),) * exp.n_arms,
         shares=((int(meta["steps"]), fractions),))

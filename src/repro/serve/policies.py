@@ -53,8 +53,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import dccb, distclub, linucb
-from ..core.backend import (InteractBackend, get_backend,
-                            get_graph_backend, resolve_kind)
+from ..core.backend import BackendConfig, InteractBackend
 from ..core.types import BanditHyper, ClusterStats, DistCLUBState, GraphState
 from ..kernels.graph import ops as graph_ops
 from ..runtime import stages
@@ -140,7 +139,11 @@ class ClusteredPolicy(NamedTuple):
 
     def init(self) -> ClusteredState:
         n, d = self.cfg.n_users, self.cfg.d
-        eye = jnp.broadcast_to(jnp.eye(d, dtype=jnp.float32), (n, d, d))
+        # HBM-dominant [n, d, d] state lives in the session's Precision
+        # state dtype (f32 default -> these astype calls are no-ops)
+        sdt = self.cfg.engine.precision.jnp_state
+        eye = jnp.broadcast_to(jnp.eye(d, dtype=jnp.float32),
+                               (n, d, d)).astype(sdt)
         return ClusteredState(
             Minv=eye,
             b=jnp.zeros((n, d), jnp.float32),
@@ -158,8 +161,12 @@ class ClusteredPolicy(NamedTuple):
         return state.occ
 
     def gather_score(self, state: ClusteredState, idx):
-        Minv, b, occ = state.Minv[idx], state.b[idx], state.occ[idx]
-        uMcinv, ubc = state.uMcinv[idx], state.ubc[idx]
+        # gather reduced-precision rows, then upcast once for the f32
+        # user-vector solve and the fused choose (no-op under f32)
+        Minv = state.Minv[idx].astype(jnp.float32)
+        b, occ = state.b[idx], state.occ[idx]
+        uMcinv = state.uMcinv[idx].astype(jnp.float32)
+        ubc = state.ubc[idx]
         v_own = linucb.user_vector(Minv, b)
         v_clu = linucb.user_vector(uMcinv, ubc)
         if self.use_beta:
@@ -179,13 +186,16 @@ class ClusteredPolicy(NamedTuple):
         del key                                       # deterministic stage
         cfg = self.cfg
         n_local = state.occ.shape[0]
-        gb = get_graph_backend(n_local, cfg.n_users, kind=cfg.engine.kind,
-                               interpret=cfg.engine.interpret)
+        gb = BackendConfig(kind=cfg.engine.kind,
+                           precision=cfg.engine.precision
+                           ).graph(n_local, cfg.n_users,
+                                   interpret=cfg.engine.interpret)
         res = stages.stage2_refresh(col, gb, cfg.hyper, cfg.d,
                                     state.Minv, state.b, state.occ,
                                     state.adj)
         return state._replace(
-            adj=res.adj, labels=res.labels, uMcinv=res.uMcinv, ubc=res.ubc,
+            adj=res.adj, labels=res.labels,
+            uMcinv=res.uMcinv.astype(state.uMcinv.dtype), ubc=res.ubc,
             umean_occ=res.umean_occ,
             comm_bytes=state.comm_bytes + res.comm_bytes,
         )
@@ -223,7 +233,9 @@ class LinUCBPolicy(NamedTuple):
 
     def init(self) -> LinUCBServeState:
         n, d = self.cfg.n_users, self.cfg.d
-        eye = jnp.broadcast_to(jnp.eye(d, dtype=jnp.float32), (n, d, d))
+        sdt = self.cfg.engine.precision.jnp_state
+        eye = jnp.broadcast_to(jnp.eye(d, dtype=jnp.float32),
+                               (n, d, d)).astype(sdt)
         return LinUCBServeState(
             Minv=eye,
             b=jnp.zeros((n, d), jnp.float32),
@@ -235,7 +247,8 @@ class LinUCBPolicy(NamedTuple):
         return state.occ
 
     def gather_score(self, state: LinUCBServeState, idx):
-        Minv, b, occ = state.Minv[idx], state.b[idx], state.occ[idx]
+        Minv = state.Minv[idx].astype(jnp.float32)
+        b, occ = state.b[idx], state.occ[idx]
         return linucb.user_vector(Minv, b), Minv, occ
 
     def apply_pass(self, state: LinUCBServeState, idx, x, r, live, be):
@@ -328,15 +341,17 @@ class DCCBPolicy(NamedTuple):
 
 def make_cfg(n_users: int, d: int, hyper: BanditHyper, *,
              refresh_every: int = 0, backend: str | None = None,
-             interpret: bool | None = None,
-             block_users: int = 256) -> ServeCfg:
-    """Resolve the engine dispatch once per session (env flag / TPU-auto,
-    same order as ``core.backend.get_backend``)."""
-    kind = resolve_kind(backend)
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    engine = get_backend(n_users, d, hyper.n_candidates, kind,
-                         block_users=block_users, interpret=interpret)
+             interpret: bool | None = None, block_users: int = 256,
+             precision=None) -> ServeCfg:
+    """Resolve the engine dispatch once per session: ``backend`` via
+    ``REPRO_BACKEND`` / TPU-auto and ``precision`` (a ``Precision``, a
+    preset name, or None) via ``REPRO_PRECISION`` — both through
+    ``core.backend.BackendConfig.create``.  The resolved precision rides
+    in ``cfg.engine.precision`` and is the single source for the state
+    dtype, catalog kernels and checkpoint tagging."""
+    engine = BackendConfig.create(backend, precision).interact(
+        n_users, d, hyper.n_candidates, block_users=block_users,
+        interpret=interpret)
     return ServeCfg(n_users=n_users, d=d, n_candidates=hyper.n_candidates,
                     hyper=hyper, refresh_every=refresh_every, engine=engine)
 
@@ -371,8 +386,9 @@ def to_distclub_state(state: ClusteredState, hyper: BanditHyper,
     """The public offline record from a serving state (label tables are
     rebuilt from the per-user rows; M recovered from Minv)."""
     n = state.occ.shape[0]
-    M = jnp.linalg.inv(state.Minv)
-    lin = linucb.LinUCBState(M=M, Minv=state.Minv, b=state.b, occ=state.occ)
+    Minv = state.Minv.astype(jnp.float32)     # offline record is f32
+    M = jnp.linalg.inv(Minv)
+    lin = linucb.LinUCBState(M=M, Minv=Minv, b=state.b, occ=state.occ)
     eye = jnp.eye(d, dtype=jnp.float32)
     labels = state.labels
     Mc = jax.ops.segment_sum(M - eye, labels, num_segments=n) + eye

@@ -89,7 +89,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..core import catalog as catalog_mod
 from ..core import itemclub as itemclub_mod
-from ..core.backend import get_retrieval_backend
+from ..core.backend import BackendConfig
 from ..core.types import BanditHyper, Metrics
 from ..kernels.topk.ref import select_topk
 from ..runtime.collectives import NullCollectives, lax_collectives
@@ -97,6 +97,25 @@ from . import pending as pending_mod
 from . import policies as pol
 
 _NULL = NullCollectives()
+
+# the Precision policy is checkpointed as a small i32 tag (dtype codes +
+# scale block) so restore can refuse a snapshot written under another one
+_PREC_NAMES = ("f32", "bf16", "int8")
+
+
+def _precision_tag(prec):
+    return jnp.array([_PREC_NAMES.index(prec.state_dtype),
+                      _PREC_NAMES.index(prec.catalog_dtype),
+                      _PREC_NAMES.index(prec.accum_dtype),
+                      prec.scale_block], jnp.int32)
+
+
+def _decode_precision_tag(codes):
+    def name(c):
+        return _PREC_NAMES[c] if 0 <= c < len(_PREC_NAMES) else f"?{c}"
+
+    return (f"Precision(state={name(codes[0])}, catalog={name(codes[1])}, "
+            f"accum={name(codes[2])}, scale_block={codes[3]})")
 
 
 def embed_candidates(item_embed: jnp.ndarray, cand_ids: jnp.ndarray):
@@ -281,9 +300,13 @@ def _catalog_choose(policy, rb, col, state, user_ids, catalog,
     bank = catalog.serving            # the ACTIVE double-buffer bank
     n_local_items = bank.live.shape[0]
     row0_items = col.axis_index() * n_local_items
+    # int8 banks ship their per-slot dequant scales into the kernels;
+    # f32/bf16 banks upcast in VMEM without scales (trace-time branch)
+    scales = bank.scale if bank.emb.dtype == jnp.int8 else None
     if clusters is None:
         sc, ids = rb.shortlist(w, minv_eff, occ_rows, bank.emb, bank.live,
-                               cfg.hyper.alpha, row0_items=row0_items)
+                               cfg.hyper.alpha, row0_items=row0_items,
+                               scales=scales)
         rmet = None
     else:
         shard_tabs = itemclub_mod.shard_slice(clusters, col.axis_index(),
@@ -291,15 +314,18 @@ def _catalog_choose(policy, rb, col, state, user_ids, catalog,
         fresh = clusters.epoch == catalog.epoch
 
         def _pruned(_):
-            emb_s, live_s, ids_s, t_mu, t_r, t_xn, t_n = shard_tabs
+            (emb_s, live_s, ids_s, scale_s,
+             t_mu, t_r, t_xn, t_n) = shard_tabs
+            ss = scale_s if emb_s.dtype == jnp.int8 else None
             return rb.shortlist_pruned(w, minv_eff, occ_rows, emb_s,
                                        live_s, ids_s, t_mu, t_r, t_xn,
-                                       t_n, cfg.hyper.alpha)
+                                       t_n, cfg.hyper.alpha,
+                                       scales_sorted=ss)
 
         def _unpruned(_):
             s, i = rb.shortlist(w, minv_eff, occ_rows, bank.emb,
                                 bank.live, cfg.hyper.alpha,
-                                row0_items=row0_items)
+                                row0_items=row0_items, scales=scales)
             z = jnp.zeros((), jnp.int32)
             return s, i, z, z
 
@@ -323,7 +349,12 @@ def _catalog_choose(policy, rb, col, state, user_ids, catalog,
 
     loc = top_i - row0_items
     ok = (loc >= 0) & (loc < n_local_items)
-    rows = bank.emb[jnp.clip(loc, 0, n_local_items - 1)]
+    g = jnp.clip(loc, 0, n_local_items - 1)
+    # dequantize the gathered shortlist rows before the f32 psum — the
+    # slate the fused choose (and the reward_fn) sees is always f32
+    rows = bank.emb[g].astype(jnp.float32)
+    if scales is not None:
+        rows = rows * bank.scale[g][..., None]
     ctx = col.psum(jnp.where(ok[..., None], rows, 0.0))   # [B, K_short, d]
 
     be_s = be.with_candidates(rb.K_short)
@@ -637,7 +668,7 @@ class OnlineBandit:
                policy: str = "distclub", refresh_every: int = 0,
                backend: str | None = None, interpret: bool | None = None,
                block_users: int = 256, pending_capacity: int = 0,
-               pending_ttl: int = 64) -> "OnlineBandit":
+               pending_ttl: int = 64, precision=None) -> "OnlineBandit":
         """Single-host session.  `refresh_every` is the interaction budget
         between refreshes (stage-2 / gossip); <= 0 disables scheduling
         (use `serve.refresh` to fire one manually).  `pending_capacity`
@@ -645,10 +676,13 @@ class OnlineBandit:
         issues + enqueues and `observe_delayed` folds feedback by
         decision id; `pending_ttl` is how many SUBSEQUENT recommend
         transactions a decision survives before its feedback is dropped
-        as expired."""
+        as expired.  `precision` (a `core.backend.Precision`, a preset
+        name, or None = `REPRO_PRECISION` / f32) picks the reduced-
+        precision state policy; checkpoints record it and refuse to
+        restore under a different one."""
         cfg = pol.make_cfg(n_users, d, hyper, refresh_every=refresh_every,
                            backend=backend, interpret=interpret,
-                           block_users=block_users)
+                           block_users=block_users, precision=precision)
         p = pol.get_policy(policy, cfg)
         pend = (pending_mod.init(pending_capacity, d)
                 if pending_capacity > 0 else None)
@@ -661,7 +695,7 @@ class OnlineBandit:
                 policy: str = "distclub", refresh_every: int = 0,
                 backend: str | None = None, interpret: bool | None = None,
                 block_users: int = 256, pending_capacity: int = 0,
-                pending_ttl: int = 64) -> "OnlineBandit":
+                pending_ttl: int = 64, precision=None) -> "OnlineBandit":
         """Serving replica set: per-user state sharded over `mesh` (users
         on the flattened `axes`), request batches replicated, refresh on
         the mesh collectives — the identical stage-2 code path as
@@ -671,7 +705,7 @@ class OnlineBandit:
         axes = tuple(axes) if axes is not None else tuple(mesh.axis_names)
         cfg = pol.make_cfg(n_users, d, hyper, refresh_every=refresh_every,
                            backend=backend, interpret=interpret,
-                           block_users=block_users)
+                           block_users=block_users, precision=precision)
         p = pol.get_policy(policy, cfg)
         shards = 1
         for a in axes:
@@ -689,14 +723,21 @@ class OnlineBandit:
     @classmethod
     def from_offline(cls, state, hyper: BanditHyper, *,
                      refresh_every: int = 0, backend: str | None = None,
-                     interpret: bool | None = None) -> "OnlineBandit":
+                     interpret: bool | None = None,
+                     precision=None) -> "OnlineBandit":
         """Warm-start a distclub serving session from an offline
-        `distclub.run` final state."""
+        `distclub.run` final state (f32 — downcast into the session's
+        precision state dtype here, a no-op under f32)."""
         n, d = state.lin.b.shape
         cfg = pol.make_cfg(n, d, hyper, refresh_every=refresh_every,
-                           backend=backend, interpret=interpret)
+                           backend=backend, interpret=interpret,
+                           precision=precision)
         p = pol.get_policy("distclub", cfg)
-        return cls(policy=p, state=pol.from_distclub_state(state))
+        st = pol.from_distclub_state(state)
+        sdt = cfg.engine.precision.jnp_state
+        st = st._replace(Minv=st.Minv.astype(sdt),
+                         uMcinv=st.uMcinv.astype(sdt))
+        return cls(policy=p, state=st)
 
     # -- checkpointing -----------------------------------------------------
     def _shardings(self):
@@ -706,23 +747,49 @@ class OnlineBandit:
         return named_shardings(self.mesh,
                                self.policy.state_specs(self.axes))
 
+    def _precision_tag(self):
+        return _precision_tag(self.policy.cfg.engine.precision)
+
+    def _ckpt_shardings(self):
+        sh = self._shardings()
+        if sh is None:
+            return None
+        from jax.sharding import NamedSharding
+        return {"prec": NamedSharding(self.mesh, P()), "state": sh}
+
     def save(self, ckpt, step: int):
         """Snapshot the policy state (atomic, keep-K — see
-        `train.checkpoint`)."""
-        return ckpt.save(self.state, step)
+        `train.checkpoint`).  The session's `Precision` policy is
+        recorded alongside the state: a reduced-precision snapshot is not
+        silently reinterpretable, so `restore` refuses a mismatch."""
+        payload = {"prec": self._precision_tag(), "state": self.state}
+        return ckpt.save(payload, step)
 
     def restore(self, ckpt, step: int | None = None):
         """(session, step) restored from `ckpt` (latest when `step` is
         None; (self, None) when the directory is empty).  Re-shards onto
         this session's mesh — a replica restarted on a different mesh
-        resumes from the same bytes."""
+        resumes from the same bytes.  Raises ``ValueError`` when the
+        checkpoint was written under a different `Precision` policy —
+        bytes saved as bf16/int8 state must not be silently upcast into
+        an f32 session (or vice versa)."""
+        like = {"prec": self._precision_tag(), "state": self.state}
+        shardings = self._ckpt_shardings()
         if step is None:
-            state, step = ckpt.restore_latest(self.state, self._shardings())
-            if state is None:
+            payload, step = ckpt.restore_latest(like, shardings)
+            if payload is None:
                 return self, None
         else:
-            state = ckpt.restore(step, self.state, self._shardings())
-        return dataclasses.replace(self, state=state), step
+            payload = ckpt.restore(step, like, shardings)
+        got = [int(v) for v in jax.device_get(payload["prec"])]
+        want = [int(v) for v in jax.device_get(self._precision_tag())]
+        if got != want:
+            raise ValueError(
+                f"checkpoint precision mismatch: step {step} was saved "
+                f"under {_decode_precision_tag(got)} but this session "
+                f"runs {_decode_precision_tag(want)} — recreate the "
+                "session with the matching precision= (or re-train)")
+        return dataclasses.replace(self, state=payload["state"]), step
 
     # -- the transaction and its halves ------------------------------------
     def step(self, key, user_ids, contexts, reward_fn):
@@ -816,8 +883,8 @@ def _retrieval_engine(session: OnlineBandit, k_short: int):
     """The session's retrieval backend: dispatch (kind/interpret) follows
     the run-level interact engine, resolved once per (session, k_short)."""
     eng = session.policy.cfg.engine
-    return get_retrieval_backend(eng.d, k_short, kind=eng.kind,
-                                 interpret=eng.interpret)
+    return BackendConfig(kind=eng.kind, precision=eng.precision).retrieval(
+        eng.d, k_short, interpret=eng.interpret)
 
 
 def step_catalog(session: OnlineBandit, key, user_ids, catalog,

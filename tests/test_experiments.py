@@ -379,6 +379,98 @@ def test_last_enabled_arm_is_never_disabled(world):
 
 
 # ---------------------------------------------------------------------------
+# the probation window
+# ---------------------------------------------------------------------------
+
+
+def test_probation_survivor_intervals_untouched():
+    """The ISSUE regression test: through disable -> throttled probation
+    -> restore, a surviving arm's sticky hash interval never moves — not
+    one user a healthy arm owns is reassigned at any stage."""
+    uids = jnp.arange(4 * N)
+    f = (0.4, 0.3, 0.3)
+    full = np.asarray(experiments.assign_arms(uids, f, (True,) * 3,
+                                              salt=2))
+    dis = np.asarray(experiments.assign_arms(uids, f, (True, False, True),
+                                             salt=2))
+    prob = np.asarray(experiments.assign_arms(
+        uids, f, (True,) * 3, salt=2, scale=(1.0, 0.25, 1.0)))
+    survivors = full != 1
+    np.testing.assert_array_equal(full[survivors], dis[survivors])
+    np.testing.assert_array_equal(full[survivors], prob[survivors])
+    # the probation arm takes back a non-empty strict SUBSET of its own
+    # full interval...
+    back = prob == 1
+    assert back.any() and back.sum() < (full == 1).sum()
+    assert (full[back] == 1).all()
+    # ...and every user it does NOT take back stays exactly where the
+    # disable-time fallback sent them
+    fell = (full == 1) & ~back
+    np.testing.assert_array_equal(prob[fell], dis[fell])
+    # restore == the original full cut, bit for bit
+    rest = np.asarray(experiments.assign_arms(
+        uids, f, (True,) * 3, salt=2, scale=(1.0, 1.0, 1.0)))
+    np.testing.assert_array_equal(rest, full)
+
+
+def test_probation_lifecycle_reenable_throttled_then_restore(world):
+    """A breached arm sits out `probation_tx` transactions, comes back
+    throttled to `probation_fraction` of its own interval, and a clean
+    probation window restores it to full traffic."""
+    cfg = guardrails.GuardrailConfig(ctr_floor=0.2, warmup=2 * B, ema=0.6,
+                                     cooldown=2)
+    exp = experiments.create(
+        [_session(alpha=0.03), _session(alpha=0.03)], salt=3,
+        guard_cfg=cfg, snapshot_every=2, probation_tx=3,
+        probation_fraction=0.25)
+    rounds = 0
+    while exp.enabled == (True, True) and rounds < 20:
+        exp = _poisoned_loop(exp, world.theta, 1, flip_arm=1)
+        rounds += 1
+    assert exp.enabled == (True, False)
+    assert exp.stages[1] == experiments.BENCHED
+    uids = jnp.arange(N)
+    full = np.asarray(experiments.assign_arms(
+        uids, exp.fractions, (True, True), salt=3))
+    # three clean routing transactions serve out the bench window
+    exp = _poisoned_loop(exp, world.theta, 3, flip_arm=-1)
+    assert exp.enabled == (True, True)
+    assert exp.stages[1] == experiments.PROBATION
+    assert any(e[0] == "probation" for e in exp.events)
+    arm = np.asarray(experiments.assign_arms(exp, uids))
+    back = arm == 1
+    assert back.any() and back.sum() < (full == 1).sum()
+    assert (full[back] == 1).all()
+    np.testing.assert_array_equal(arm[full == 0], full[full == 0])
+    # a clean probation window promotes the arm back to its full interval
+    exp = _poisoned_loop(exp, world.theta, 3, flip_arm=-1)
+    assert exp.stages[1] == experiments.HEALTHY
+    assert any(e[0] == "restore" for e in exp.events)
+    np.testing.assert_array_equal(
+        np.asarray(experiments.assign_arms(exp, uids)), full)
+
+
+def test_probation_second_breach_is_permanent(world):
+    """An arm that breaches again WHILE ON probation is permanently
+    disabled — no further probation windows."""
+    cfg = guardrails.GuardrailConfig(ctr_floor=0.2, warmup=B, ema=0.6,
+                                     cooldown=1)
+    exp = experiments.create(
+        [_session(alpha=0.03), _session(alpha=0.03)], salt=3,
+        guard_cfg=cfg, snapshot_every=2, probation_tx=2,
+        probation_fraction=0.5)
+    exp = _poisoned_loop(exp, world.theta, 40, flip_arm=1)
+    assert any(e[0] == "probation" for e in exp.events)
+    assert any(e[0] == "disable-permanent" for e in exp.events)
+    assert exp.stages[1] == experiments.PERMANENT
+    assert exp.enabled == (True, False)
+    # permanently out: more clean traffic never re-enables it
+    exp = _poisoned_loop(exp, world.theta, 6, flip_arm=-1)
+    assert exp.enabled == (True, False)
+    assert exp.stages[1] == experiments.PERMANENT
+
+
+# ---------------------------------------------------------------------------
 # the meta-selector
 # ---------------------------------------------------------------------------
 

@@ -505,6 +505,52 @@ def test_check_regression_missing_baseline_clear_message(tmp_path):
     assert "Traceback" not in blob
 
 
+def test_check_regression_perturbed_baseline_fails_per_direction(tmp_path):
+    """Perturb-a-baseline self-test of the gate's direction rules: every
+    name class trips on a regression in ITS direction (including the
+    lower-better ``*flip_rate*``/``*error*`` precision metrics) and
+    stays green on same-direction improvements."""
+    import subprocess
+    import sys
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    good = {"rows": [{"name": "r", "hbm_cut_ratio": 2.0,
+                      "comm_bytes": 100.0, "choice_flip_rate": 0.004,
+                      "bound_error": 0.5}]}
+
+    def run(current_rows):
+        cur = tmp_path / "cur"
+        base = tmp_path / "base"
+        for p in (cur, base):
+            p.mkdir(exist_ok=True)
+        (base / "BENCH_thing.json").write_text(json.dumps(good))
+        (cur / "BENCH_thing.json").write_text(json.dumps(current_rows))
+        return subprocess.run(
+            [sys.executable,
+             str(repo / "benchmarks" / "check_regression.py"),
+             "--current", str(cur), "--baseline", str(base)],
+            capture_output=True, text=True)
+
+    out = run(good)
+    assert out.returncode == 0, out.stdout + out.stderr
+
+    regressions = {"hbm_cut_ratio": 1.0,       # higher-better fell
+                   "comm_bytes": 200.0,        # lower-better rose
+                   "choice_flip_rate": 0.02,   # precision parity worsened
+                   "bound_error": 1.5}
+    for key, bad_val in regressions.items():
+        rows = {"rows": [dict(good["rows"][0], **{key: bad_val})]}
+        out = run(rows)
+        blob = out.stdout + out.stderr
+        assert out.returncode == 1, (key, blob)
+        assert key in blob, (key, blob)
+
+    improvements = {"hbm_cut_ratio": 4.0, "comm_bytes": 50.0,
+                    "choice_flip_rate": 0.0, "bound_error": 0.1}
+    rows = {"rows": [dict(good["rows"][0], **improvements)]}
+    out = run(rows)
+    assert out.returncode == 0, out.stdout + out.stderr
+
+
 # ---------------------------------------------------------------------------
 # the shared traffic stream (consumed by clean runs, faulted runs, and
 # experiment arms) reproduces the original inline key schedule exactly

@@ -120,9 +120,10 @@ def test_cc_packed_matches_dense(maker, n):
              "empty": lambda: np.zeros((n, n), bool)}[maker]()
     want = clustering.connected_components(jnp.asarray(dense))
     packed = graph_ops.pack_bits(jnp.asarray(dense))
-    gb_ref = backend.get_graph_backend(n, kind="reference", row_block=16)
-    gb_pal = backend.get_graph_backend(n, kind="pallas", interpret=True,
-                                       block_i=16, block_j=64)
+    gb_ref = backend.BackendConfig.create("reference").graph(n,
+                                                             row_block=16)
+    gb_pal = backend.BackendConfig.create("pallas").graph(
+        n, interpret=True, block_i=16, block_j=64)
     np.testing.assert_array_equal(np.asarray(gb_ref.cc(packed)),
                                   np.asarray(want))
     np.testing.assert_array_equal(np.asarray(gb_pal.cc(packed)),
@@ -155,20 +156,20 @@ def test_cc_hop_bipartite_rows():
 
 def test_graph_backend_dispatch_and_env_flag(monkeypatch):
     monkeypatch.delenv("REPRO_BACKEND", raising=False)
-    gb = backend.get_graph_backend(100)        # auto on CPU -> reference
+    gb = backend.BackendConfig.create().graph(100)   # auto on CPU -> ref
     assert gb.kind == "reference" and gb.words == 4
 
     monkeypatch.setenv("REPRO_BACKEND", "pallas")
-    gb = backend.get_graph_backend(100)
+    gb = backend.BackendConfig.create().graph(100)
     assert gb.kind == "pallas" and gb.interpret
 
     monkeypatch.setenv("REPRO_BACKEND", "bogus")
     with pytest.raises(ValueError):
-        backend.get_graph_backend(100)
+        backend.BackendConfig.create().graph(100)
 
 
 def test_graph_backend_pack_roundtrip_and_init():
-    gb = backend.get_graph_backend(45, kind="reference")
+    gb = backend.BackendConfig.create("reference").graph(45)
     dense = clustering.dense_adj(45)
     np.testing.assert_array_equal(np.asarray(gb.unpack(gb.pack(dense))),
                                   np.asarray(dense))
@@ -187,11 +188,12 @@ def test_distclub_stage2_reference_vs_pallas_interpret():
     hyper = BanditHyper(sigma=4, max_rounds=8, gamma=1.5, n_candidates=K)
     e, _ = env.make_synthetic_env(jax.random.PRNGKey(0), N, D, 3, K)
     ops = env_ops.synthetic_ops(e)
-    ref_i = backend.get_backend(N, D, K, kind="reference")
-    pal_i = backend.get_backend(N, D, K, kind="pallas", interpret=True)
-    ref_g = backend.get_graph_backend(N, kind="reference")
-    pal_g = backend.get_graph_backend(N, kind="pallas", interpret=True,
-                                      block_i=8, block_j=32)
+    ref_i = backend.BackendConfig.create("reference").interact(N, D, K)
+    pal_i = backend.BackendConfig.create("pallas").interact(
+        N, D, K, interpret=True)
+    ref_g = backend.BackendConfig.create("reference").graph(N)
+    pal_g = backend.BackendConfig.create("pallas").graph(
+        N, interpret=True, block_i=8, block_j=32)
 
     s_r, m_r, c_r = distclub.run(ops, jax.random.PRNGKey(1), hyper,
                                  n_epochs=2, d=D, backend=ref_i, graph=ref_g)

@@ -100,23 +100,24 @@ def test_rank1_inv_kernel(n, d):
 
 def test_backend_dispatch_and_env_flag(monkeypatch):
     monkeypatch.delenv("REPRO_BACKEND", raising=False)
-    be = backend.get_backend(24, 5, 10)      # auto on CPU -> reference
+    be = backend.BackendConfig.create().interact(24, 5, 10)  # auto -> ref
     assert be.kind == "reference"
     assert (be.n_pad, be.d_pad, be.K_pad) == (24, 5, 10)  # no padding
 
     monkeypatch.setenv("REPRO_BACKEND", "pallas")
-    be = backend.get_backend(24, 5, 10)
+    be = backend.BackendConfig.create().interact(24, 5, 10)
     assert be.kind == "pallas" and be.interpret
     assert be.n_pad % be.block_users == 0
     assert be.d_pad % 8 == 0 and be.K_pad % 128 == 0
 
     monkeypatch.setenv("REPRO_BACKEND", "bogus")
     with pytest.raises(ValueError):
-        backend.get_backend(24, 5, 10)
+        backend.BackendConfig.create().interact(24, 5, 10)
 
 
 def test_backend_pad_helpers_are_exact():
-    be = backend.get_backend(24, 5, 10, kind="pallas", interpret=True)
+    be = backend.BackendConfig.create("pallas").interact(24, 5, 10,
+                                                         interpret=True)
     lin = linucb.init_linucb(24, 5)
     padded = be.pad_lin(lin)
     assert padded.Minv.shape == (be.n_pad, be.d_pad, be.d_pad)
@@ -137,8 +138,9 @@ def test_distclub_run_reference_vs_pallas_interpret():
     hyper = BanditHyper(sigma=4, max_rounds=8, gamma=1.5, n_candidates=K)
     e, _ = env.make_synthetic_env(jax.random.PRNGKey(0), N, D, 3, K)
     ops = env_ops.synthetic_ops(e)
-    ref = backend.get_backend(N, D, K, kind="reference")
-    pal = backend.get_backend(N, D, K, kind="pallas", interpret=True)
+    ref = backend.BackendConfig.create("reference").interact(N, D, K)
+    pal = backend.BackendConfig.create("pallas").interact(N, D, K,
+                                                          interpret=True)
 
     s_r, m_r, c_r = distclub.run(ops, jax.random.PRNGKey(1), hyper,
                                  n_epochs=2, d=D, backend=ref)

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from repro import serve
 from repro.core import catalog as catalog_mod
 from repro.core import env, itemclub
-from repro.core.backend import get_retrieval_backend
+from repro.core.backend import BackendConfig
 from repro.core.types import BanditHyper
 from repro.kernels.topk import ops as topk_ops
 from repro.kernels.topk.ref import (BOUND_SLACK, tile_bounds, topk_ref,

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro import serve
 from repro.core import catalog as catalog_mod
 from repro.core import env, env_ops
-from repro.core.backend import get_retrieval_backend
+from repro.core.backend import BackendConfig
 from repro.core.types import BanditHyper
 from repro.data import datasets
 from repro.train.checkpoint import CheckpointManager
@@ -64,10 +64,10 @@ def test_topk_pallas_matches_reference_ragged(n, d, N, Ks):
     items = items / jnp.linalg.norm(items, axis=-1, keepdims=True)
     live = (jax.random.uniform(ks[1], (N,)) > 0.25).astype(jnp.float32)
 
-    r_ref = get_retrieval_backend(d, Ks, "reference",
-                                  row_block=4, item_block=16)
-    r_pal = get_retrieval_backend(d, Ks, "pallas", block_users=8,
-                                  block_items=32, interpret=True)
+    r_ref = BackendConfig.create("reference").retrieval(
+        d, Ks, row_block=4, item_block=16)
+    r_pal = BackendConfig.create("pallas").retrieval(
+        d, Ks, block_users=8, block_items=32, interpret=True)
     s1, i1 = r_ref.shortlist(w, Minv, occ, items, live, 0.3)
     s2, i2 = r_pal.shortlist(w, Minv, occ, items, live, 0.3)
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
@@ -101,7 +101,7 @@ def test_topk_all_tied_prefers_lowest_live_ids():
     for kind, kw in [("reference", dict(row_block=4, item_block=16)),
                      ("pallas", dict(block_users=8, block_items=16,
                                      interpret=True))]:
-        rb = get_retrieval_backend(d, Ks, kind, **kw)
+        rb = BackendConfig.create(kind).retrieval(d, Ks, **kw)
         _, ids = rb.shortlist(jnp.zeros((n, d)),
                               jnp.broadcast_to(jnp.eye(d), (n, d, d)),
                               jnp.zeros((n,), jnp.int32), items, live, 0.3)
@@ -115,8 +115,8 @@ def test_topk_underfull_catalog_pads_with_minus_one():
     n, d, N, Ks = 3, 4, 5, 8
     items = jnp.eye(N, d, dtype=jnp.float32)
     live = jnp.ones((N,), jnp.float32).at[4].set(0.0)
-    rb = get_retrieval_backend(d, Ks, "reference", row_block=2,
-                               item_block=4)
+    rb = BackendConfig.create("reference").retrieval(d, Ks, row_block=2,
+                                                     item_block=4)
     w, Minv, occ = _spd_stats(jax.random.PRNGKey(2), n, d)
     s, i = rb.shortlist(w, Minv, occ, items, live, 0.3)
     assert (np.asarray(i)[:, 4:] == -1).all()
@@ -130,7 +130,7 @@ def test_shortlist_row0_offsets_ids():
     w, Minv, occ = _spd_stats(jax.random.PRNGKey(3), n, d)
     items = jax.random.normal(jax.random.PRNGKey(4), (N, d))
     live = jnp.ones((N,), jnp.float32)
-    rb = get_retrieval_backend(d, Ks, "reference")
+    rb = BackendConfig.create("reference").retrieval(d, Ks)
     _, i0 = rb.shortlist(w, Minv, occ, items, live, 0.3)
     _, i7 = rb.shortlist(w, Minv, occ, items, live, 0.3, row0_items=7 * N)
     np.testing.assert_array_equal(np.asarray(i7), np.asarray(i0) + 7 * N)

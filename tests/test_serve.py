@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro import serve
 from repro.core import distclub, env, env_ops, linucb
-from repro.core.backend import get_backend
+from repro.core.backend import BackendConfig
 from repro.core.types import BanditHyper
 from repro.runtime import stages
 from repro.train.checkpoint import CheckpointManager
@@ -136,7 +136,7 @@ def test_step_matches_stage3_round(planted):
         sess, k_rew, jnp.arange(N, dtype=jnp.int32), ctx, _reward_fn(ops))
 
     # bit-exact choices vs the stage pipeline's own fused choose
-    be = get_backend(N, D, K)
+    be = BackendConfig.create().interact(N, D, K)
     uMcinv, ubc, umean = distclub.serving_snapshot(st2)
     use_own = stages.beta_gate(HYPER, st2.lin.occ, umean)
     w, minv_eff = stages.mix_scores(
